@@ -1,0 +1,76 @@
+"""§Perf hillclimb helper: compare depth-corrected roofline terms between a
+baseline cell and tagged variants.
+
+  PYTHONPATH=src python benchmarks/perf_compare.py \
+      --arch command-r-plus-104b --shape decode_32k --tags flash,...
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+import roofline
+
+
+def load_variant(arch, shape, mesh="single", tag=None,
+                 dirpath="results/dryrun"):
+    suffix = f"__{tag}" if tag else ""
+    main = os.path.join(dirpath, f"{arch}__{shape}__{mesh}{suffix}.json")
+    rec = json.load(open(main))
+    assert rec.get("status") == "ok", rec.get("error")
+    key = (arch, shape)
+    probe_suffix = f"-{tag}" if tag else ""
+    probes = []
+    for path in glob.glob(os.path.join(
+            dirpath, f"{arch}__{shape}__{mesh}__probe*{probe_suffix}.json")):
+        m = re.search(rf"__probe(\d+){re.escape(probe_suffix)}\.json$", path)
+        if not m:
+            continue
+        p = json.load(open(path))
+        if p.get("status") == "ok":
+            probes.append(p)
+    probes.sort(key=lambda r: r["num_layers"])
+    p1 = {key: probes[0]} if probes else {}
+    p2 = {key: probes[1]} if len(probes) > 1 else {}
+    rec = roofline.depth_correct(rec, (p1, p2))
+    return roofline.analyse(rec, mesh)
+
+
+def fmt(r):
+    return (f"compute={r['compute_s']:.4e}s  mem(tpu)={r['analytic_memory_s']:.4e}s "
+            f"mem(hlo)={r['memory_s']:.4e}s  coll={r['collective_s']:.4e}s  "
+            f"dom={r['dominant_tpu']}  RF={r['roofline_fraction_tpu']:.4f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tags", default="")
+    args = ap.parse_args()
+    base = load_variant(args.arch, args.shape, args.mesh)
+    print(f"baseline       : {fmt(base)}")
+    for tag in filter(None, args.tags.split(",")):
+        try:
+            v = load_variant(args.arch, args.shape, args.mesh, tag)
+        except (FileNotFoundError, AssertionError) as e:
+            print(f"{tag:15s}: MISSING/FAILED ({e})")
+            continue
+        dom = base["dominant_tpu"]
+        key = {"compute": "compute_s", "memory": "analytic_memory_s",
+               "collective": "collective_s"}[dom]
+        delta = (base[key] - v[key]) / max(base[key], 1e-30) * 100
+        print(f"{tag:15s}: {fmt(v)}")
+        print(f"{'':15s}  Δ dominant({dom}): {delta:+.1f}%  "
+              f"RF {base['roofline_fraction_tpu']:.4f} -> "
+              f"{v['roofline_fraction_tpu']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,199 @@
+"""Generate EXPERIMENTS.md from the dry-run/bench artifacts.
+
+  PYTHONPATH=src python benchmarks/report.py > EXPERIMENTS.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+import roofline
+
+PERF_LOG = """\
+## §Perf — hillclimb log (hypothesis → change → before → after → verdict)
+
+Methodology: every iteration re-lowers the cell, re-derives the
+depth-corrected roofline terms, and compares against the previous state.
+Terms are seconds per step on the target v5e pod (256 chips).  The
+paper-faithful BASELINE rows are frozen artifacts
+(`results/dryrun/<cell>.json`); optimized variants carry tags.
+Stop rule: three consecutive <5 % changes on the dominant term.
+
+### Cell 1 — `command-r-plus-104b × decode_32k` (worst roofline fraction)
+
+| # | hypothesis | change | collective s | RF | verdict |
+|---|---|---|---|---|---|
+| 0 | baseline (FSDP+TP, seq-sharded cache) | — | 0.522 | 0.0010 | collective-dominant |
+| 1 | the seq-sharded KV cache is all-gathered per token; a shard_map LSE combine (flash-decoding) removes it | `flash_decode_attention` v1 | 3.287 | 0.0002 | **REFUTED** — my in_specs replicated the batch dim over 'data', all-gathering the cache across the wrong axis (6× worse). Lesson: shard_map in_specs must mention *every* sharded dim, not just the interesting one. |
+| 2 | same hypothesis, specs fixed | flash-decoding with batch kept on 'data' | 0.521 | 0.0010 | **REFUTED** (±0.1 %) — XLA was already computing partial attention locally + psum; the cache was never gathered. The real collective is elsewhere. |
+| 3 | 13 GB of weights are FSDP-gathered for every single decoded token (104B·2B/16 TP shards per step) — weights should be TP-resident for decode | `--no-fsdp` (TP-only weights, ZeRO-1 moments stay sharded) | **0.0020** | **0.0252** | **CONFIRMED** — collective −99.6 %, RF ×25 (honest accounting: the memory term RISES to 21.6 ms because TP-resident weights are read at 1/16 sharding instead of 1/256 — and that read is the physical decode bandwidth floor). |
+| 4 | with memory dominant at the weights-read floor, further RF needs lower-precision weights (int8 serving) — out of scope this pass | — | — | — | stop (next two candidates <5 % by napkin math; recorded for future work) |
+
+### Cell 2 — `qwen3-moe-30b-a3b × train_4k` (most collective-bound)
+
+| # | hypothesis | change | collective s | RF | verdict |
+|---|---|---|---|---|---|
+| 0 | baseline (scatter/gather MoE, XLA SPMD) | — | 26.28 | 0.0159 | 15.8 GB/layer of (E,C,D) buffer all-reduce |
+| 1 | sharding the capacity dim over 'data' turns buffer psums into all-to-all | `moe_cap` constraint | 598.2 | 0.0007 | **REFUTED 22× worse** — scatter targets are data-dependent; XLA falls back to full exchange. Lesson: SPMD cannot infer locality through a data-dependent scatter. |
+| 2 | GShard grouping (tokens grouped by data shard, group-local capacity) makes the scatter local | grouped `moe_ffn` | 16.58 | 0.0252 | **CONFIRMED** −37 % |
+| 3 | remaining 15.8 GB/layer is the expert gather/scatter crossing 'model'; an explicit shard_map MoE (expert-local dispatch + one token-sized psum) removes it | `moe_ffn_sharded` | **4.00** | **0.1046** | **CONFIRMED** −76 % more (−85 % vs baseline, RF ×6.6) |
+| 4 | grads all-reduce instead of reduce-scatter | grad sharding constraint (`zgrad`) | 4.00 | 0.1046 | refuted (<0.1 % — XLA already reduce-scatters through the donated opt update) |
+| 5 | ZeRO-1 (params TP-only, moments sharded) | `zero1` | 3.96 | 0.1055 | +0.9 % (<5 %); kept — it is what makes iteration 3 of cell 1 memory-safe |
+| 6 | the f32 loss cast promotes the whole backward to f32, doubling psum bytes | bf16-cotangent `upcast_for_loss` | 4.00 | 0.1046 | refuted on THIS host — HLO metadata shows the f32 psums are XLA:CPU's bf16-dot promotion (TPU reduces in bf16); the fix is kept (it is correct for TPU) but cannot be measured here. Recorded as a backend caveat. |
+| — | stop rule hit (3 consecutive <5 %). Remaining collectives are the attention-out + MoE-combine activation psums — inherent to TP/EP at this mesh; the overlap schedule (latency-hiding scheduler) hides them behind the expert GEMMs on real hardware. | | | | |
+
+### Cell 3 — `gemma-7b × prefill_32k` (most representative of the paper's technique)
+
+| # | hypothesis | change | compute s | collective s | RF | verdict |
+|---|---|---|---|---|---|---|
+| 0 | baseline (uncompressed, seq-parallel prefill) | — | 0.676 | 0.961 | 0.3695 | collective-dominant |
+| 1 | LayerMerge at a 55 % latency budget (DP over analytic v5e tables; merges linearized GeGLU FFNs across pruned attention blocks into rank-3072 fused layers) should cut BOTH terms ~budget-proportionally | `--budget 0.55` | 0.405 (−40 %) | 0.574 (−40 %) | **0.6186** | **CONFIRMED** — the paper's technique, applied at production scale, moves the cell from RF 0.37 to RF 0.62. DP-predicted speed-up 1.75×; observed dominant-term reduction 1.67×. |
+
+The full optimized-vs-baseline roofline across every cell is in the tables
+below (`opt` columns = flash-decoding + TP-resident decode weights +
+shard_map MoE + ZeRO-1 + bf16 cotangents).
+
+**Per-cell sharding policy finding:** TP-resident decode weights (cell 1's
+win) HURT the tiny-state `long_500k` cells — at batch 1 the FSDP gather is
+nearly free while the TP-resident weight read is 16× larger, so rf_opt for
+recurrentgemma/xlstm long_500k keeps FSDP.  The launcher therefore selects
+the decode weight layout per (model size × batch): gather-once-per-step
+(FSDP) when `batch·2·P/chips ≪ HBM_bw·step`, TP-resident otherwise.
+"""
+
+CAVEATS = """\
+## Measurement caveats (read before the tables)
+
+* **CPU host, TPU target.**  The dry-run compiles the post-SPMD per-chip
+  program with `--xla_force_host_platform_device_count=512`; cost/memory
+  analyses come from the XLA:CPU backend.
+* **Scan-body counting.**  `cost_analysis()` counts `while`-loop bodies
+  once; every scanned cell is depth-corrected by unrolled probes at pattern
+  depth p and 2p (`roofline.depth_correct`; exact for uniform stacks,
+  ≤ one-cycle error for the 1:2 hybrid and the xlstm pattern, which is
+  compiled fully unrolled).
+* **Memory term.**  XLA:CPU fuses less than XLA:TPU, so `bytes accessed`
+  over-counts HBM traffic ~5-10×.  Both views are reported: `hlo_memory_s`
+  (as specified) and `tpu_memory_s` (fusion-aware analytic model:
+  weights/pass + 8 residual-stream touches/layer + logits + decode cache).
+  `rf_tpu` (headline) uses the analytic memory term; `rf_hlo` uses the raw
+  HLO term.
+* **f32 collectives.**  XLA:CPU promotes bf16 dot partial-sums to f32
+  before the all-reduce; on TPU these reduce in bf16 → the reported
+  collective term is a ~2× upper bound for activation psums.
+* **MODEL_FLOPS** = 6·N_active·tokens (train), 2·N_active·tokens
+  (prefill), 2·N_active·batch (decode).  `useful` = MODEL_FLOPS /
+  (chips·HLO_FLOPs) — the remat/redundancy-waste detector (XLA counts
+  dot FLOPs with the mnk convention, so ~0.5 ≈ clean for fwd-only and
+  ~1.0 for train-with-remat; ≫1 or ≪0.1 flags an accounting or
+  efficiency problem).
+"""
+
+
+def fmt_row(r, o=None):
+    base = (f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['analytic_memory_s']:.3e} | {r['memory_s']:.3e} | "
+            f"{r['collective_s']:.3e} | {r['dominant_tpu']} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction_tpu']:.4f} | "
+            f"{r['roofline_fraction']:.4f} |")
+    if o is not None:
+        base += f" {o['roofline_fraction_tpu']:.4f} |"
+    else:
+        base += " — |"
+    return base
+
+
+def main():
+    rows = roofline.load()
+    opt = {(r["arch"], r["shape"]): r for r in roofline.load(tag="opt")}
+    out = []
+    out.append("# EXPERIMENTS\n")
+    out.append("Companion artifacts: `results/dryrun/*.json` (one per cell "
+               "× mesh × variant), `results/bench.csv`, `test_output.txt`, "
+               "`bench_output.txt`.\n")
+    out.append(CAVEATS)
+
+    # -- dry-run section -------------------------------------------------------
+    out.append("## §Dry-run\n")
+    single = ok_cells("single")
+    multi = ok_cells("multi")
+    out.append(f"* single-pod mesh 16×16 ('data','model'): **{single}/32 "
+               "cells compile** (every arch × applicable shape);")
+    out.append(f"* multi-pod mesh 2×16×16 ('pod','data','model'): "
+               f"**{multi}/32 cells compile** — the 'pod' axis shards "
+               "(per-device FLOPs halve, checked per cell);")
+    out.append("* `long_500k` runs for recurrentgemma-2b and xlstm-125m "
+               "(bounded state) and is **skipped for the 8 pure "
+               "full-attention archs** per the assignment (no sub-quadratic "
+               "prefill path; decode would be linear-in-cache — noted in "
+               "DESIGN §2.3);")
+    out.append("* decode cells lower `serve_step` (one token against a "
+               "seq_len KV cache/state), prefill cells lower `forward`, "
+               "train cells lower the full loss→grad→clip→AdamW step with "
+               "donated sharded state (ZeRO moments).\n")
+    out.append("Example memory analysis (granite train_4k, per chip): "
+               "arguments 97 MB (sharded params+moments), XLA-CPU temp "
+               "66 GB (un-fused upper bound; the TPU analytic activation "
+               "estimate with remat is ~2.1 GB/chip).\n")
+
+    # -- roofline --------------------------------------------------------------
+    out.append("## §Roofline — single-pod, paper-faithful BASELINE "
+               "(+ optimized RF)\n")
+    out.append("All terms are seconds/step on 256 v5e chips.  `rf_tpu` is "
+               "the headline roofline fraction (ideal compute time / "
+               "dominant term, fusion-aware memory model); `rf_opt` is the "
+               "same cell after the §Perf beyond-paper optimizations "
+               "(flash-decoding, TP-resident decode weights, shard_map MoE, "
+               "ZeRO-1, bf16 cotangents).\n")
+    out.append("| arch | shape | compute s | mem s (tpu) | mem s (hlo) | "
+               "coll s | dominant | useful | rf_tpu | rf_hlo | rf_opt |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        out.append(fmt_row(r, opt.get((r["arch"], r["shape"]))))
+    out.append("")
+    out.append("Per-cell one-liners (what would move the dominant term):\n")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        out.append(f"* **{r['arch']} × {r['shape']}** — dominant "
+                   f"{r['dominant_tpu']}: {advice(r)}")
+    out.append("")
+    out.append(PERF_LOG)
+    print("\n".join(out))
+
+
+def ok_cells(mesh):
+    n = 0
+    for p in glob.glob(f"results/dryrun/*__{mesh}.json"):
+        if json.load(open(p)).get("status") == "ok":
+            n += 1
+    return n
+
+
+def advice(r):
+    d = r["dominant_tpu"]
+    mode = r["mode"]
+    if d == "collective":
+        if "moe" in r["arch"]:
+            return ("shard_map expert-local dispatch (done in §Perf: −85 %); "
+                    "rest is the EP token combine — overlap with expert GEMMs.")
+        if mode == "decode":
+            return ("TP-resident weights for decode (done in §Perf: −99.6 %); "
+                    "then weight-quantized serving.")
+        return ("activation psums from TP — overlap via latency-hiding "
+                "scheduler; LayerMerge compression shrinks them "
+                "budget-proportionally (§Perf cell 3).")
+    if d == "memory":
+        if mode == "decode":
+            return ("weights+cache read per token is the physical floor; "
+                    "int8 weights / grouped batches raise RF.")
+        return ("remat policy tuning (fewer recomputed dots) and fused "
+                "kernels (merged_ffn keeps the rank-r intermediate in VMEM).")
+    return ("compute-bound — good; LayerMerge removes FLOPs directly "
+            "(budget-proportional, §Perf cell 3); MXU-aligned Pallas tiles "
+            "keep it there.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,303 @@
+"""One benchmark per paper table/figure (see DESIGN.md §4 for the index).
+
+Full-scale ImageNet runs are impossible offline, so each table is
+reproduced at *structure-preserving* scale: identical skip/stride/depthwise
+topology, measured wall-clock latency tables on this host, Eq. 4 importance
+with short fine-tunes on synthetic tasks.  The claims being validated are
+the paper's *relative* ones: LayerMerge dominates Depth and LayerOnly on
+the speed-accuracy Pareto front; joint beats sequential; the DP runs in
+seconds; merged-kernel growth erodes naive depth compression.
+
+Each function returns CSV-ish rows: (name, us_per_call, derived).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (AnalyticTPUOracle, ImportanceSpec, WallClockOracle,
+                        accuracy_perf, compress, merge, table_entry_count,
+                        xent_loss)
+from repro.core.importance import _adam_finetune
+from repro.models import cnn, cnn_host, zoo
+
+
+_TEACHER = {}
+
+
+def _toy(key, n, hw, classes=4, net=None):
+    """Teacher-labelled task: realizable by construction (labels come from a
+    frozen randomly-initialized copy of the same architecture)."""
+    x = jax.random.normal(key, (n, hw, hw, 3))
+    tkey = (net.L, hw, classes) if net is not None else (0, hw, classes)
+    if tkey not in _TEACHER:
+        tnet = net or zoo.tiny_resnet(num_classes=classes, in_hw=hw)
+        tp = cnn.init_params(tnet, jax.random.PRNGKey(1234))
+        _TEACHER[tkey] = (tnet, tp)
+    tnet, tp = _TEACHER[tkey]
+    logits = cnn.apply_replaced(tnet, tp, x)
+    return x, jnp.argmax(logits, axis=1)
+
+
+def _pretrain(net, params, data, steps=250):
+    apply0 = lambda p, x: cnn.apply_replaced(net, p, x)
+    spec = ImportanceSpec(loss_fn=xent_loss, perf_fn=accuracy_perf,
+                          train_batches=[data[0]], eval_batches=[data[1]],
+                          steps=steps, lr=3e-3)
+    return _adam_finetune(apply0, params, spec), apply0
+
+
+def _wallclock(fn, iters=15):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters
+
+
+def _compression_pareto(name, net, budgets, methods, ft_steps=60,
+                        importance="magnitude"):
+    """Shared harness for tables 1–4: per (method, budget): accuracy after
+    fine-tune + measured merged speed-up on this host.
+
+    Importance defaults to the magnitude proxy here to keep the harness
+    fast (~200 candidate fine-tune jits otherwise); the paper's measured
+    Eq. 4 pipeline is exercised by table45_ddpm and tests/test_compress.py.
+    Note the wall-clock `speedup` column is measured on THIS CPU host while
+    the DP optimizes the analytic v5e oracle (`dp_pred`) — big merged
+    kernels that win on the MXU can lose on CPU's conv path; compare
+    dp_pred across methods for the paper's claims."""
+    params = cnn.init_params(net, jax.random.PRNGKey(0))
+    tr = _toy(jax.random.PRNGKey(1), 256, net.in_hw, net=net)
+    ev = _toy(jax.random.PRNGKey(2), 256, net.in_hw, net=net)
+    params, apply0 = _pretrain(net, params, (tr, ev))
+    base_acc = accuracy_perf(apply0, params, [ev])
+    host = cnn_host.CNNHost(net, params, batch=32)
+    ispec = ImportanceSpec(loss_fn=xent_loss, perf_fn=accuracy_perf,
+                           train_batches=[tr], eval_batches=[ev],
+                           steps=4, lr=1e-3)
+    f0 = jax.jit(lambda x: apply0(params, x))
+    t0 = _wallclock(lambda: f0(ev[0]))
+    rows = [(f"{name},original", t0 * 1e6,
+             f"acc={base_acc:.3f};speedup=1.00")]
+    for method in methods:
+        for ratio in budgets:
+            res = compress(host, budget_ratio=ratio, P=300, method=method,
+                           importance=(ispec if importance == "measured"
+                                       else "magnitude"),
+                           base_perf=base_acc, params=params)
+            if res is None:
+                rows.append((f"{name},{method}-{int(ratio*100)}%", 0.0,
+                             "infeasible"))
+                continue
+            ra, _ = host.replaced_apply(res.plan)
+            ft = ImportanceSpec(loss_fn=xent_loss, perf_fn=accuracy_perf,
+                                train_batches=[tr], eval_batches=[ev],
+                                steps=ft_steps, lr=1e-3)
+            tuned = _adam_finetune(ra, params, ft)
+            ma, _ = host.merged_apply(res.plan, tuned)
+            acc = accuracy_perf(ma, tuned, [ev])
+            fm = jax.jit(lambda x: ma(tuned, x))
+            tm = _wallclock(lambda: fm(ev[0]))
+            rows.append((f"{name},{method}-{int(ratio*100)}%", tm * 1e6,
+                         f"acc={acc:.3f};speedup={t0/tm:.2f};"
+                         f"dp_pred={res.speedup:.2f};"
+                         f"dp_s={res.dp_seconds:.2f}"))
+    return rows
+
+
+def fig1_kernel_growth():
+    """Figure 1: merged-kernel growth erodes the latency win (conv chain),
+    and the transformer rank-growth analogue (DESIGN §2.1)."""
+    rows = []
+    key = jax.random.PRNGKey(0)
+    c, hw = 32, 24
+    x = jax.random.normal(key, (16, hw, hw, c))
+    ws = [jax.random.normal(jax.random.PRNGKey(i), (3, 3, c, c)) * 0.1
+          for i in range(5)]
+    oracle = AnalyticTPUOracle()
+    from repro.core.latency import conv2d_cost, rank_ffn_cost
+    for n in range(1, 6):
+        wm, _, _ = merge.merge_conv_chain(ws[:n], [1] * n, [False] * n)
+        k = wm.shape[0]
+
+        @jax.jit
+        def f(x, wm=wm):
+            return jax.lax.conv_general_dilated(
+                x, wm, (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        t = _wallclock(lambda: f(x))
+        tpu = oracle.segment_latency(conv2d_cost(hw, hw, c, c, k, batch=16))
+        rows.append((f"fig1,conv_merge_n{n}_k{k}", t * 1e6,
+                     f"kernel={k};tpu_model_us={tpu*1e6:.2f}"))
+    d = 512
+    for n in range(1, 6):
+        r = min(n * 128, d)
+        tpu = oracle.segment_latency(rank_ffn_cost(4096, d, r))
+        rows.append((f"fig1,rank_merge_n{n}_r{r}", tpu * 1e6,
+                     f"rank={r};eq1_analogue=true"))
+    return rows
+
+
+def table1_resnet34():
+    net = zoo.tiny_resnet(num_classes=4, in_hw=16, width=8, blocks=(2, 2))
+    return _compression_pareto("table1_resnet", net, (0.75, 0.55),
+                               ("layermerge", "layeronly", "depth"))
+
+
+def table23_mobilenetv2():
+    net = zoo.tiny_mobilenet(num_classes=4, in_hw=16, width=8)
+    return _compression_pareto("table23_mbv2", net, (0.75, 0.55),
+                               ("layermerge", "layeronly", "depth"))
+
+
+def table45_ddpm():
+    """DDPM path: denoising objective on the skip-concat UNet (FID is not
+    computable offline; eval = denoising MSE, lower is better)."""
+    net = zoo.tiny_unet(in_hw=16, base=8)
+    params = cnn.init_params(net, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(3)
+
+    def diffusion_batch(key, n=64):
+        k1, k2, k3 = jax.random.split(key, 3)
+        img = jax.random.normal(k1, (n, 16, 16, 3))
+        t = jax.random.uniform(k2, (n, 1, 1, 1))
+        noise = jax.random.normal(k3, (n, 16, 16, 3))
+        noisy = jnp.sqrt(1 - t) * img + jnp.sqrt(t) * noise
+        inp = jnp.concatenate([noisy, jnp.broadcast_to(t, (n, 16, 16, 1))],
+                              axis=-1)
+        return inp, noise
+
+    tr = diffusion_batch(jax.random.PRNGKey(1))
+    ev = diffusion_batch(jax.random.PRNGKey(2))
+
+    def loss_fn(apply_fn, p, batch):
+        inp, noise = batch
+        return jnp.mean((apply_fn(p, inp) - noise) ** 2)
+    from repro.core import neg_loss_perf
+    perf = neg_loss_perf(loss_fn)
+    apply0 = lambda p, x: cnn.apply_replaced(net, p, x)
+    spec = ImportanceSpec(loss_fn=loss_fn, perf_fn=perf, train_batches=[tr],
+                          eval_batches=[ev], steps=100, lr=2e-3,
+                          normalize_by_base=True)
+    params = _adam_finetune(apply0, params, spec)
+    base = perf(apply0, params, [ev])
+    host = cnn_host.CNNHost(net, params, batch=16)
+    ispec = dataclasses.replace(spec, steps=4)
+    f0 = jax.jit(lambda x: apply0(params, x))
+    t0 = _wallclock(lambda: f0(ev[0]))
+    rows = [("table45_ddpm,original", t0 * 1e6, f"eval_mse={-base:.4f}")]
+    for method in ("layermerge", "layeronly", "depth"):
+        for ratio in (0.85, 0.7):
+            res = compress(host, budget_ratio=ratio, P=300, method=method,
+                           latency_oracle=WallClockOracle(warmup=1, iters=4),
+                           importance=ispec, base_perf=base, params=params)
+            if res is None:
+                rows.append((f"table45_ddpm,{method}-{int(ratio*100)}%",
+                             0.0, "infeasible"))
+                continue
+            ra, _ = host.replaced_apply(res.plan)
+            tuned = _adam_finetune(ra, params,
+                                   dataclasses.replace(spec, steps=60))
+            ma, _ = host.merged_apply(res.plan, tuned)
+            mse = -perf(ma, tuned, [ev])
+            fm = jax.jit(lambda x: ma(tuned, x))
+            tm = _wallclock(lambda: fm(ev[0]))
+            rows.append((f"table45_ddpm,{method}-{int(ratio*100)}%",
+                         tm * 1e6,
+                         f"eval_mse={mse:.4f};speedup={t0/tm:.2f}"))
+    return rows
+
+
+def table6_ablation():
+    """Joint (LayerMerge) vs sequential (Depth → LayerOnly) at matched
+    latency — the paper's key ablation."""
+    net = zoo.tiny_mobilenet(num_classes=4, in_hw=16, width=8)
+    params = cnn.init_params(net, jax.random.PRNGKey(0))
+    tr = _toy(jax.random.PRNGKey(1), 256, 16)
+    ev = _toy(jax.random.PRNGKey(2), 256, 16)
+    params, apply0 = _pretrain(net, params, (tr, ev))
+    base = accuracy_perf(apply0, params, [ev])
+    host = cnn_host.CNNHost(net, params, batch=32)
+    ispec = ImportanceSpec(loss_fn=xent_loss, perf_fn=accuracy_perf,
+                           train_batches=[tr], eval_batches=[ev], steps=4,
+                           lr=1e-3)
+    oracle = AnalyticTPUOracle()
+    rows = []
+
+    def finetune_acc(plan, base_params, steps=80):
+        ra, _ = host.replaced_apply(plan)
+        ft = ImportanceSpec(loss_fn=xent_loss, perf_fn=accuracy_perf,
+                            train_batches=[tr], eval_batches=[ev],
+                            steps=steps, lr=1e-3)
+        tuned = _adam_finetune(ra, base_params, ft)
+        return accuracy_perf(ra, tuned, [ev]), tuned
+
+    # joint
+    joint = compress(host, budget_ratio=0.55, P=300, method="layermerge",
+                     latency_oracle=oracle, importance=ispec,
+                     base_perf=base, params=params)
+    acc_joint, _ = finetune_acc(joint.plan, params)
+    rows.append(("table6,layermerge-55%", 0.0,
+                 f"acc={acc_joint:.3f};speedup={joint.speedup:.2f}"))
+    # sequential: depth at 75%, then layeronly to reach ~55% overall
+    seq1 = compress(host, budget_ratio=0.75, P=300, method="depth",
+                    latency_oracle=oracle, importance=ispec,
+                    base_perf=base, params=params)
+    acc1, tuned1 = finetune_acc(seq1.plan, params, steps=40)
+    host2 = cnn_host.CNNHost(net, tuned1, batch=32)
+    seq2 = compress(host2, budget_ratio=0.55 / 0.75, P=300,
+                    method="layeronly", latency_oracle=oracle,
+                    importance=ispec, base_perf=acc1, params=tuned1)
+    if seq2 is not None:
+        # compose: prune the layers LayerOnly dropped on top of seq1's plan
+        from repro.core.plan import CompressionPlan, Segment
+        kept2 = set(seq2.plan.C)
+        segs = []
+        for s in seq1.plan.segments:
+            kept = tuple(l for l in s.kept if l in kept2)
+            k = 1 + sum(net.spec(l).k - 1 for l in kept
+                        if net.spec(l).kind == "conv")
+            segs.append(Segment(i=s.i, j=s.j, k=k, kept=kept,
+                                original=s.original and kept == s.kept))
+        combo = CompressionPlan(num_layers=net.L, segments=tuple(segs),
+                                method="depth->layeronly")
+        acc2, _ = finetune_acc(combo, tuned1, steps=40)
+        lat = sum(oracle.segment_latency(host.segment_cost(s))
+                  for s in combo.segments)
+        orig = sum(oracle.segment_latency(host.segment_cost(s))
+                   for s in seq1.plan.segments) / (seq1.speedup /
+                                                   seq1.speedup)
+        from repro.core.compress import original_latency
+        t_orig = original_latency(host, oracle)
+        rows.append(("table6,depth75->layeronly", 0.0,
+                     f"acc={acc2:.3f};speedup={t_orig/lat:.2f}"))
+    return rows
+
+
+def table78_cost():
+    """Lookup-table construction cost + entry counts at FULL paper scale
+    (analytic oracle: the measurement protocol without a 2080Ti)."""
+    rows = []
+    for name, net in (("resnet34", zoo.resnet34()),
+                      ("mobilenetv2", zoo.mobilenetv2()),
+                      ("ddpm_unet", zoo.ddpm_unet())):
+        params = None
+        host = cnn_host.CNNHost(net, {"layers": [{} for _ in net.specs],
+                                      "skips": [], "head": {}}, batch=128)
+        t0 = time.perf_counter()
+        enum = host.enumerator("layermerge")
+        n_lm = table_entry_count(enum)
+        t_enum = time.perf_counter() - t0
+        n_depth = table_entry_count(host.enumerator("depth"))
+        rows.append((f"table78,{name}", t_enum * 1e6,
+                     f"L={net.L};layermerge_entries={n_lm};"
+                     f"depth_entries={n_depth};layeronly_entries={net.L}"))
+    return rows
+
+
+ALL = [fig1_kernel_growth, table1_resnet34, table23_mobilenetv2,
+       table45_ddpm, table6_ablation, table78_cost]

@@ -1,0 +1,5 @@
+from .base import (ARCH_IDS, LONG_CONTEXT_OK, SHAPES, ArchConfig,
+                   ShapeConfig, cells, get_config)
+
+__all__ = ["ARCH_IDS", "LONG_CONTEXT_OK", "SHAPES", "ArchConfig",
+           "ShapeConfig", "cells", "get_config"]

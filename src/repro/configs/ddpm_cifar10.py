@@ -1,0 +1,4 @@
+"""The paper's own DDPM CIFAR-10 UNet (Ho et al. 2020) — CNN path."""
+from repro.models import zoo
+
+CONFIG = zoo.ddpm_unet()

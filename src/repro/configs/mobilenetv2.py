@@ -1,0 +1,5 @@
+"""The paper's own MobileNetV2-1.0 (Sandler et al. 2018) — CNN path."""
+from repro.models import zoo
+
+CONFIG = zoo.mobilenetv2(width_mult=1.0)
+CONFIG_14 = zoo.mobilenetv2(width_mult=1.4)

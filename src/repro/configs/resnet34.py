@@ -1,0 +1,4 @@
+"""The paper's own ResNet-34 (He et al. 2016) — CNN path."""
+from repro.models import zoo
+
+CONFIG = zoo.resnet34()

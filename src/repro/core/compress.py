@@ -1,0 +1,130 @@
+"""Algorithm 2 — the full LayerMerge procedure, plus the two baselines.
+
+``compress(host, ...)`` runs: build tables → DP (Algorithm 1) → replace →
+(optionally fine-tune) → merge.  ``method``:
+
+* ``'layermerge'`` — the paper's joint optimization (activations + layers);
+* ``'depth'``      — Kim et al. 2023 baseline: activations only (C = [L]);
+* ``'layeronly'``  — whole-layer knapsack (Problem 8), no merging.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+from .dp import DPResult, solve_dp, solve_knapsack
+from .importance import ImportanceSpec, measure_importance
+from .latency import AnalyticTPUOracle, LatencyOracle, WallClockOracle
+from .plan import CompressionPlan, Segment
+from .tables import Tables, build_tables, one_segment_plan
+
+
+@dataclasses.dataclass
+class CompressResult:
+    plan: CompressionPlan
+    tables: Tables | None
+    original_latency: float
+    compressed_latency: float
+    dp_seconds: float
+
+    @property
+    def speedup(self) -> float:
+        return self.original_latency / max(self.compressed_latency, 1e-12)
+
+
+def original_latency(host, latency_oracle=None, params=None) -> float:
+    """Σ per-layer latency of the untouched network (the paper's T_orig)."""
+    oracle = latency_oracle or AnalyticTPUOracle()
+    total = 0.0
+    for l in range(1, len(host.descs()) + 1):
+        seg = Segment(i=l - 1, j=l, k=host.original_k(l), kept=(l,),
+                      original=True)
+        if isinstance(oracle, WallClockOracle):
+            total += oracle.time_callable(host.segment_callable(seg, params))
+        else:
+            total += oracle.segment_latency(host.segment_cost(seg))
+    return total
+
+
+def compress(
+    host,
+    *,
+    budget_ratio: float,
+    P: int = 200,
+    method: str = "layermerge",
+    latency_oracle: LatencyOracle | None = None,
+    importance: ImportanceSpec | str = "magnitude",
+    base_perf: float | None = None,
+    params=None,
+) -> CompressResult | None:
+    """Run LayerMerge (or a baseline) at ``T0 = budget_ratio · T_orig``."""
+    oracle = latency_oracle or AnalyticTPUOracle()
+    t_orig = original_latency(host, oracle, params)
+    T0 = budget_ratio * t_orig
+    L = len(host.descs())
+
+    if method == "layeronly":
+        return _layer_only(host, T0, P, oracle, importance, base_perf, params,
+                           t_orig)
+
+    tables = build_tables(host, method=method, latency_oracle=oracle,
+                          importance=importance, base_perf=base_perf,
+                          params=params)
+    t0 = time.perf_counter()
+    res = solve_dp(L, tables.fn(), T0, P, method=method,
+                   original_k=host.original_k)
+    dp_s = time.perf_counter() - t0
+    if res is None:
+        return None
+    return CompressResult(plan=res.plan, tables=tables,
+                          original_latency=t_orig,
+                          compressed_latency=res.latency,
+                          dp_seconds=dp_s)
+
+
+def _layer_only(host, T0, P, oracle, importance, base_perf, params, t_orig):
+    """Problem 8: latency-aware layer pruning (knapsack)."""
+    descs = host.descs()
+    L = len(descs)
+    imp: dict[int, float] = {}
+    lat: dict[int, float] = {}
+    forced = tuple(d.index for d in descs if not d.prunable)
+    for l in range(1, L + 1):
+        seg = Segment(i=l - 1, j=l, k=host.original_k(l), kept=(l,),
+                      original=True)
+        if isinstance(oracle, WallClockOracle):
+            lat[l] = oracle.time_callable(host.segment_callable(seg, params))
+        else:
+            lat[l] = oracle.segment_latency(host.segment_cost(seg))
+        # I[l] — importance of KEEPING l: exp(perf drop when l is removed).
+        if not descs[l - 1].prunable:
+            imp[l] = 1.0
+        elif isinstance(importance, ImportanceSpec):
+            probe = Segment(i=l - 1, j=l, k=host.pruned_k(l), kept=())
+            apply_fn, p = host.replaced_apply(
+                one_segment_plan(host, probe), params)
+            removed = measure_importance(apply_fn, p, importance,
+                                         base_perf or 0.0)
+            imp[l] = 1.0 / max(removed, 1e-12)
+        else:
+            import math
+            total = sum(d.value for d in descs) or 1.0
+            imp[l] = math.exp(descs[l - 1].value / total)
+    t0 = time.perf_counter()
+    sol = solve_knapsack(L, imp, lat, T0, P, forced=forced)
+    dp_s = time.perf_counter() - t0
+    if sol is None:
+        return None
+    C, obj, true_lat = sol
+    kept = set(C)
+    segs = tuple(
+        Segment(i=l - 1, j=l,
+                k=host.original_k(l) if l in kept else host.pruned_k(l),
+                kept=(l,) if l in kept else (),
+                original=l in kept)
+        for l in range(1, L + 1))
+    plan = CompressionPlan(num_layers=L, segments=segs, objective=obj,
+                           latency=true_lat, budget=T0, method="layeronly")
+    return CompressResult(plan=plan, tables=None, original_latency=t_orig,
+                          compressed_latency=true_lat, dp_seconds=dp_s)

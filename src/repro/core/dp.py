@@ -1,0 +1,195 @@
+"""Algorithm 1 — the exact DP for the surrogate problem (Problem 5).
+
+Also provides:
+
+* :func:`solve_knapsack` — the paper's *LayerOnly* baseline (Problem 8), a
+  0-1 knapsack over whole layers solved exactly on the same latency grid;
+* :func:`brute_force` — an exponential reference solver used by the property
+  tests to certify Theorem 3.1 (DP == optimum) on small instances.
+
+Latency discretization follows the paper: every table latency is floored to
+the grid ``{T0/P, 2·T0/P, …, T0}`` (integer units of ``T0/P``).  With integer
+unit latencies the DP is exact; with real latencies it is exact for the
+floored instance, as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Mapping
+
+import numpy as np
+
+from .plan import CompressionPlan, Segment
+
+NEG = -math.inf
+
+# TableFn: (i, j) -> {k: (importance I[i,j,k], latency T[i,j,k], kept ids)}
+TableFn = Callable[[int, int], Mapping[int, tuple[float, float, tuple[int, ...]]]]
+
+
+@dataclasses.dataclass
+class DPResult:
+    plan: CompressionPlan
+    objective: float
+    latency: float          # true (undiscretized) latency sum
+    table_M: np.ndarray     # the DP value table, for inspection/tests
+
+
+def _discretize(t: float, unit: float) -> int:
+    """Floor a latency to grid units (paper §3.3 / Appendix C)."""
+    return int(math.floor(t / unit + 1e-9))
+
+
+def solve_dp(
+    L: int,
+    table: TableFn,
+    T0: float,
+    P: int,
+    *,
+    method: str = "layermerge",
+    original_k: Callable[[int], int] | None = None,
+) -> DPResult | None:
+    """Exact DP of Algorithm 1.
+
+    ``table(i, j)`` returns the merged-segment options for span ``(i, j]``
+    (empty if the span is not mergeable).  Returns ``None`` when no feasible
+    plan exists within ``T0`` (budget too tight even for the cheapest plan).
+    """
+    if T0 <= 0 or P <= 0:
+        raise ValueError("T0 and P must be positive")
+    unit = T0 / P
+
+    # M[l, t]: best Σ I over the first l layers with budget index t (0..P).
+    M = np.full((L + 1, P + 1), NEG, dtype=np.float64)
+    M[0, :] = 0.0
+    # Backpointers: for (l, t) store (l*, k*) and bookkeeping for reconstruction.
+    back: dict[tuple[int, int], tuple[int, int, int, float, tuple[int, ...]]] = {}
+    # cache span options so reconstruction does not recompute tables
+    span_opts: dict[tuple[int, int], Mapping[int, tuple[float, float, tuple[int, ...]]]] = {}
+
+    for j in range(1, L + 1):
+        for i in range(j - 1, -1, -1):
+            opts = table(i, j)
+            if opts:
+                span_opts[(i, j)] = opts
+
+    for l in range(1, L + 1):
+        for lp in range(l):
+            opts = span_opts.get((lp, l))
+            if not opts:
+                continue
+            for k, (imp, lat, kept) in opts.items():
+                td = _discretize(lat, unit)
+                if td > P:
+                    continue
+                lo = max(td, 0)
+                for t in range(lo, P + 1):
+                    prev = M[lp, t - td]
+                    if prev == NEG:
+                        continue
+                    cand = prev + imp
+                    if cand > M[l, t]:
+                        M[l, t] = cand
+                        back[(l, t)] = (lp, k, td, lat, kept)
+
+    if M[L, P] == NEG:
+        return None
+
+    # -- reconstruct A*, C*, k* ----------------------------------------------
+    segs: list[Segment] = []
+    l, t = L, P
+    true_lat = 0.0
+    while l > 0:
+        lp, k, td, lat, kept = back[(l, t)]
+        orig = (original_k is not None and l - lp == 1
+                and k == original_k(l) and set(kept) == {l})
+        segs.append(Segment(i=lp, j=l, k=k, kept=kept, original=orig))
+        true_lat += lat
+        l, t = lp, t - td
+    segs.reverse()
+    plan = CompressionPlan(num_layers=L, segments=tuple(segs),
+                           objective=float(M[L, P]), latency=true_lat,
+                           budget=T0, method=method)
+    return DPResult(plan=plan, objective=float(M[L, P]), latency=true_lat,
+                    table_M=M)
+
+
+def solve_knapsack(
+    L: int,
+    importance: Mapping[int, float],
+    latency: Mapping[int, float],
+    T0: float,
+    P: int,
+    *,
+    forced: tuple[int, ...] = (),
+) -> tuple[tuple[int, ...], float, float] | None:
+    """*LayerOnly* baseline (Problem 8): exact 0-1 knapsack on the grid.
+
+    Returns ``(C*, objective, true_latency)`` — the kept layer set — or
+    ``None`` if even the forced set exceeds the budget.
+    """
+    unit = T0 / P
+    forced_set = set(forced)
+    M = np.full(P + 1, NEG)
+    M[0:] = 0.0
+    keep: dict[tuple[int, int], bool] = {}
+    # classic knapsack, layer by layer
+    for l in range(1, L + 1):
+        imp, lat = importance[l], latency[l]
+        td = _discretize(lat, unit)
+        Mn = np.full(P + 1, NEG)
+        for t in range(P + 1):
+            skip = M[t] if l not in forced_set else NEG
+            take = M[t - td] + imp if t - td >= 0 and M[t - td] != NEG else NEG
+            if take >= skip:
+                Mn[t], keep[(l, t)] = take, True
+            else:
+                Mn[t], keep[(l, t)] = skip, False
+        M = Mn
+    if M[P] == NEG:
+        return None
+    C: list[int] = []
+    t = P
+    true_lat = 0.0
+    for l in range(L, 0, -1):
+        if keep[(l, t)]:
+            C.append(l)
+            true_lat += latency[l]
+            t -= _discretize(latency[l], unit)
+    C.reverse()
+    return tuple(C), float(M[P]), true_lat
+
+
+def brute_force(
+    L: int,
+    table: TableFn,
+    T0: float,
+    P: int,
+) -> tuple[float, list[Segment]] | None:
+    """Exponential reference solver for Theorem 3.1 property tests.
+
+    Enumerates every segmentation of ``(0, L]`` and every ``k`` per segment,
+    using the same floored-latency feasibility test as :func:`solve_dp`.
+    """
+    unit = T0 / P
+    best: list[tuple[float, list[Segment]]] = [(NEG, [])]
+
+    def rec(pos: int, used: int, imp: float, segs: list[Segment]):
+        if pos == L:
+            if imp > best[0][0]:
+                best[0] = (imp, list(segs))
+            return
+        for j in range(pos + 1, L + 1):
+            opts = table(pos, j)
+            for k, (i_val, lat, kept) in opts.items():
+                td = _discretize(lat, unit)
+                if used + td <= P:
+                    segs.append(Segment(i=pos, j=j, k=k, kept=kept))
+                    rec(j, used + td, imp + i_val, segs)
+                    segs.pop()
+
+    rec(0, 0, 0.0, [])
+    if best[0][0] == NEG:
+        return None
+    return best[0]

@@ -1,0 +1,126 @@
+"""Latency oracles used to populate the ``T[i,j,k]`` lookup table.
+
+The paper *measures* every table entry on the deployment device (RTX2080Ti).
+Our deployment target is a TPU v5e pod while the build/test host is CPU-only,
+so the oracle is pluggable:
+
+* :class:`AnalyticTPUOracle` — a v5e roofline model.  Latency of one fused
+  layer is ``overhead + max(flops/peak, hbm_bytes/bw) + ici_bytes/link_bw``.
+  This reproduces the paper's qualitative phenomenon exactly: merged layers
+  with grown kernel/rank cost more compute, while removing layers removes
+  the per-layer overhead + memory pass.
+* :class:`WallClockOracle` — times a jitted callable on the present host
+  (the paper's measured pipeline, exercised end-to-end in tests/benchmarks
+  on tiny networks: 300 warm-up + 200 timed calls in the paper; we scale the
+  counts down for CI but keep the protocol shape).
+
+Hardware constants (assignment): 197 TFLOP/s bf16/chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+PEAK_FLOPS_BF16 = 197e12       # per v5e chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link
+
+
+@dataclasses.dataclass(frozen=True)
+class CostBreakdown:
+    """Static cost of one (possibly merged) layer, per chip."""
+
+    flops: float
+    hbm_bytes: float
+    ici_bytes: float = 0.0
+
+    def __add__(self, other: "CostBreakdown") -> "CostBreakdown":
+        return CostBreakdown(self.flops + other.flops,
+                             self.hbm_bytes + other.hbm_bytes,
+                             self.ici_bytes + other.ici_bytes)
+
+
+ZERO_COST = CostBreakdown(0.0, 0.0, 0.0)
+
+
+class LatencyOracle:
+    def segment_latency(self, cost: CostBreakdown) -> float:  # pragma: no cover
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class AnalyticTPUOracle(LatencyOracle):
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+    op_overhead: float = 1.0e-6   # fixed per-fused-layer dispatch cost
+
+    def segment_latency(self, cost: CostBreakdown) -> float:
+        compute = cost.flops / self.peak_flops
+        memory = cost.hbm_bytes / self.hbm_bw
+        network = cost.ici_bytes / self.ici_bw
+        return self.op_overhead + max(compute, memory) + network
+
+    def terms(self, cost: CostBreakdown) -> dict[str, float]:
+        return {
+            "compute_s": cost.flops / self.peak_flops,
+            "memory_s": cost.hbm_bytes / self.hbm_bw,
+            "collective_s": cost.ici_bytes / self.ici_bw,
+        }
+
+
+@dataclasses.dataclass
+class WallClockOracle(LatencyOracle):
+    """Times real jitted segment callables (paper Appendix C protocol)."""
+
+    warmup: int = 5
+    iters: int = 20
+
+    def time_callable(self, fn: Callable[[], jax.Array]) -> float:
+        for _ in range(self.warmup):
+            jax.block_until_ready(fn())
+        t0 = time.perf_counter()
+        for _ in range(self.iters):
+            jax.block_until_ready(fn())
+        return (time.perf_counter() - t0) / self.iters
+
+    def segment_latency(self, cost: CostBreakdown) -> float:
+        raise TypeError(
+            "WallClockOracle times callables; use time_callable via the host")
+
+
+# ---------------------------------------------------------------------------
+# Cost helpers shared by the hosts
+# ---------------------------------------------------------------------------
+
+def conv2d_cost(h: int, w: int, cin: int, cout: int, k: int, stride: int = 1,
+                depthwise: bool = False, dtype_bytes: int = 2,
+                batch: int = 1) -> CostBreakdown:
+    ho, wo = -(-h // stride), -(-w // stride)
+    if depthwise:
+        flops = 2.0 * batch * ho * wo * cin * k * k
+        wbytes = cin * k * k * dtype_bytes
+    else:
+        flops = 2.0 * batch * ho * wo * cin * cout * k * k
+        wbytes = cin * cout * k * k * dtype_bytes
+    abytes = batch * (h * w * cin + ho * wo * cout) * dtype_bytes
+    return CostBreakdown(flops, wbytes + abytes)
+
+
+def matmul_cost(m: int, kdim: int, n: int, dtype_bytes: int = 2) -> CostBreakdown:
+    flops = 2.0 * m * kdim * n
+    bytes_ = (m * kdim + kdim * n + m * n) * dtype_bytes
+    return CostBreakdown(flops, bytes_)
+
+
+def rank_ffn_cost(tokens: int, d: int, rank: int,
+                  dtype_bytes: int = 2) -> CostBreakdown:
+    """Merged rank-``r`` residual layer: ``x + (x·U)·V`` (two thin GEMMs)."""
+    r = min(rank, d)
+    return (matmul_cost(tokens, d, r, dtype_bytes)
+            + matmul_cost(tokens, r, d, dtype_bytes))

@@ -1,0 +1,172 @@
+"""Segment enumeration — ``K_ij`` and the Eq. 3 kept-set selection.
+
+The paper's key structural insight is that the latency of a merged segment
+depends on the kept-layer subset ``C ∩ (i, j]`` *only through the merged
+size* ``k = 1 + Σ_{l∈C∩(i,j]} (Ker(θ_l) − 1)`` (kernel size for convs; the
+``+1``-free rank sum for transformer blocks).  So for each segment ``(i, j]``
+we enumerate the achievable sizes ``K_ij`` and, for every ``k ∈ K_ij``,
+select *one* representative kept subset ``Ĉ_ijk`` — the one of maximal total
+parameter ℓ1-norm (Eq. 3), which is the standard magnitude criterion of the
+channel/layer-pruning literature.
+
+The selection is an exact small DP over (layer, partial size): weights are
+the per-layer growths (``Ker−1`` / rank), values are the ℓ1 norms, layers in
+the irreducible set ``R`` are *forced*.  Complexity ``O(n · K₀)`` per
+segment, matching the paper's ``O(L² K₀)`` table bound overall.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+from .plan import LayerDesc
+
+
+def subset_selection(
+    items: Sequence[tuple[int, int, float]],
+    forced: Sequence[int] = (),
+    cap: int | None = None,
+) -> dict[int, tuple[float, tuple[int, ...]]]:
+    """Exact max-value subset per achievable weight sum.
+
+    Args:
+      items: ``(id, weight, value)`` triples; weights are non-negative ints.
+      forced: ids that must be included (the paper's ``R ∩ (i, j]``).
+      cap: if given, weight sums are clamped to ``cap`` (the transformer rank
+        saturates at ``d_model``); the max-value subset is kept per clamped
+        key.
+
+    Returns:
+      ``{weight_sum: (total_value, kept_ids)}`` — for every achievable
+      (clamped) weight sum, the maximum total value and one argmax subset.
+    """
+    forced_set = set(forced)
+    # state: weight -> (value, kept-ids tuple)
+    states: dict[int, tuple[float, tuple[int, ...]]] = {0: (0.0, ())}
+    for ident, w, v in items:
+        if ident in forced_set:
+            states = {
+                wt + w: (val + v, kept + (ident,))
+                for wt, (val, kept) in states.items()
+            }
+        else:
+            nxt = dict(states)
+            for wt, (val, kept) in states.items():
+                cand = (val + v, kept + (ident,))
+                key = wt + w
+                if key not in nxt or cand[0] > nxt[key][0]:
+                    nxt[key] = cand
+            states = nxt
+    if cap is not None:
+        clamped: dict[int, tuple[float, tuple[int, ...]]] = {}
+        for wt, (val, kept) in states.items():
+            key = min(wt, cap)
+            if key not in clamped or val > clamped[key][0]:
+                clamped[key] = (val, kept)
+        states = clamped
+    return {w: (v, tuple(sorted(ids))) for w, (v, ids) in states.items()}
+
+
+class SegmentEnumerator:
+    """Computes ``K_ij`` and ``Ĉ_ijk`` for a chain of :class:`LayerDesc`.
+
+    Two conventions, selected by ``offset``:
+
+    * CNN (``offset=1``): merged size ``k = 1 + Σ (Ker−1)`` over kept convs —
+      the interior of ``(i, j]`` is *all* of ``i+1..j`` and the boundary
+      activation ``σ_j`` is kept (Eq. 1 of the paper).
+    * Transformer (``offset=0``): merged size = Σ rank over kept linearized
+      blocks, clamped at ``cap=d_model``.
+
+    ``barriers`` lets a host forbid segment spans (skip-concat boundaries,
+    strided-conv restriction, attention kept-blocks, …) via a predicate.
+    """
+
+    def __init__(
+        self,
+        descs: Sequence[LayerDesc],
+        *,
+        offset: int = 1,
+        cap: int | None = None,
+        allowed_span=None,        # (i, j) -> bool
+        depth_mode: bool = False,  # Depth baseline (Kim et al. 2023): C = [L]
+        max_span: int | None = None,
+    ):
+        self.descs = list(descs)
+        self.L = len(self.descs)
+        self.offset = offset
+        self.cap = cap
+        self.allowed_span = allowed_span or (lambda i, j: True)
+        self.depth_mode = depth_mode
+        self.max_span = max_span
+
+    def options(self, i: int, j: int) -> dict[int, tuple[float, tuple[int, ...]]]:
+        """All ``k → (ℓ1 value, Ĉ_ijk)`` choices for segment ``(i, j]``.
+
+        Returns an empty dict when the span is not mergeable (a
+        non-linearizable, non-prunable layer sits strictly inside, or the
+        host's span predicate rejects it).
+        """
+        if not (0 <= i < j <= self.L):
+            raise ValueError(f"bad segment ({i}, {j}]")
+        if self.max_span is not None and (j - i) > self.max_span:
+            return {}
+        if not self.allowed_span(i, j):
+            return {}
+        layers = self.descs[i:j]            # descs are 0-indexed; layer l = descs[l-1]
+        interior = layers[:-1] if self.offset == 0 else layers
+        boundary = layers[-1] if self.offset == 0 else None
+
+        # Singleton fallback (CNN convention): a barrier unit (pool /
+        # upsample / attention) can only be kept exactly as-is.
+        if self.offset == 1 and j - i == 1 and not layers[0].linearizable:
+            d = layers[0]
+            return {d.growth + self.offset: (d.value, (d.index,))}
+
+        items: list[tuple[int, int, float]] = []
+        forced: list[int] = []
+        for d in interior:
+            if d.linearizable:
+                items.append((d.index, d.growth, d.value))
+                if not d.prunable:
+                    forced.append(d.index)
+            else:
+                # Non-linearizable layer strictly inside a merged segment: it
+                # must be pruned; if it cannot be pruned the span is invalid.
+                if not d.prunable:
+                    return {}
+        if self.depth_mode:
+            # Depth baseline: every layer is kept — exactly one k per span.
+            forced = [d.index for d in interior if d.linearizable]
+            if any(not d.linearizable for d in interior):
+                return {}
+
+        sel = subset_selection(items, forced=forced, cap=self.cap)
+        out: dict[int, tuple[float, tuple[int, ...]]] = {}
+        for w, (val, kept) in sel.items():
+            k = w + self.offset
+            kept_ids = kept
+            if boundary is not None:
+                # Transformer convention: the boundary block j is kept as-is.
+                kept_ids = tuple(sorted(kept + (boundary.index,)))
+                val = val + boundary.value
+            out[k] = (val, kept_ids)
+        if self.depth_mode and len(out) > 1:   # defensive: must be single-k
+            k = max(out)
+            out = {k: out[k]}
+        return out
+
+    def singleton_original_k(self, j: int) -> int:
+        """The ``k`` coordinate of keeping layer ``j`` exactly as-is."""
+        return self.descs[j - 1].growth + self.offset
+
+    def all_spans(self):
+        for i in range(self.L):
+            for j in range(i + 1, self.L + 1):
+                opts = self.options(i, j)
+                if opts:
+                    yield i, j, opts
+
+
+def table_entry_count(enum: SegmentEnumerator) -> int:
+    """Number of (i, j, k) lookup-table entries (paper Table 7/8 metric)."""
+    return sum(len(opts) for _, _, opts in enum.all_spans())

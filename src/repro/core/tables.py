@@ -1,0 +1,121 @@
+"""Lookup-table construction — ``T[i,j,k]`` and ``I[i,j,k]`` (paper §3.2).
+
+The tables are built against a *host* — an adapter exposing the network to
+the generic machinery.  Hosts implement:
+
+* ``descs()``              → list[LayerDesc]
+* ``enumerator(method)``   → SegmentEnumerator (span rules baked in)
+* ``segment_cost(seg)``    → CostBreakdown (analytic latency oracle input)
+* ``segment_callable(seg, params)`` → zero-arg jitted fn (wall-clock oracle)
+* ``replaced_apply(plan)`` → (apply_fn, params) of the pruned-unmerged net
+* ``original_k(l)``        → k-coordinate of the untouched layer l
+
+Construction cost is ``O(L² K₀)`` entries (paper's bound); each importance
+entry is independent — embarrassingly parallel in the paper; here they run
+sequentially but against tiny fine-tune workloads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Mapping
+
+from .dp import TableFn
+from .importance import ImportanceSpec, measure_importance, magnitude_importance
+from .latency import AnalyticTPUOracle, LatencyOracle, WallClockOracle
+from .plan import CompressionPlan, Segment, identity_plan
+
+
+@dataclasses.dataclass
+class Tables:
+    """Materialized (i, j) → {k: (I, T, kept)} with build metadata."""
+
+    entries: dict[tuple[int, int], dict[int, tuple[float, float, tuple[int, ...]]]]
+    build_seconds_latency: float = 0.0
+    build_seconds_importance: float = 0.0
+
+    @property
+    def num_entries(self) -> int:
+        return sum(len(v) for v in self.entries.values())
+
+    def fn(self) -> TableFn:
+        return lambda i, j: self.entries.get((i, j), {})
+
+
+def build_tables(
+    host,
+    *,
+    method: str = "layermerge",
+    latency_oracle: LatencyOracle | None = None,
+    importance: ImportanceSpec | str = "magnitude",
+    base_perf: float | None = None,
+    params=None,
+    progress: Callable[[str], None] | None = None,
+) -> Tables:
+    """Construct both lookup tables for ``host`` (Algorithm 2, lines 1-8)."""
+    oracle = latency_oracle or AnalyticTPUOracle()
+    enum = host.enumerator(method)
+    entries: dict = {}
+
+    # ---- latency table ------------------------------------------------------
+    t0 = time.perf_counter()
+    lat: dict[tuple[int, int, int], float] = {}
+    spans = list(enum.all_spans())
+    for i, j, opts in spans:
+        for k, (val, kept) in opts.items():
+            seg = Segment(i=i, j=j, k=k, kept=kept)
+            if isinstance(oracle, WallClockOracle):
+                fn = host.segment_callable(seg, params)
+                lat[(i, j, k)] = oracle.time_callable(fn)
+            else:
+                lat[(i, j, k)] = oracle.segment_latency(host.segment_cost(seg))
+    t_lat = time.perf_counter() - t0
+
+    # ---- importance table ----------------------------------------------------
+    t0 = time.perf_counter()
+    total_value = sum(d.value for d in enum.descs)
+    for i, j, opts in spans:
+        row = {}
+        for k, (val, kept) in opts.items():
+            seg = Segment(i=i, j=j, k=k, kept=kept,
+                          original=(j - i == 1 and k == host.original_k(j)
+                                    and set(kept) == set(seg_layers(i, j))))
+            if seg.original:
+                imp = 1.0                      # exp(0): untouched layer
+            elif importance == "magnitude":
+                imp = magnitude_importance(val, max(total_value, 1e-9),
+                                           len(seg.pruned))
+            else:
+                apply_fn, p = host.replaced_apply(
+                    one_segment_plan(host, seg), params)
+                imp = measure_importance(apply_fn, p, importance,
+                                         base_perf or 0.0)
+            row[k] = (imp, lat[(i, j, k)], kept)
+        if row:
+            entries[(i, j)] = row
+        if progress:
+            progress(f"table span ({i},{j}]: {len(row)} entries")
+    t_imp = time.perf_counter() - t0
+
+    return Tables(entries=entries, build_seconds_latency=t_lat,
+                  build_seconds_importance=t_imp)
+
+
+def seg_layers(i: int, j: int) -> tuple[int, ...]:
+    return tuple(range(i + 1, j + 1))
+
+
+def one_segment_plan(host, seg: Segment) -> CompressionPlan:
+    """Ã_ij / C̃_ijk of Eq. 4: everything original except segment (i, j]."""
+    descs = host.descs()
+    L = len(descs)
+    segs = []
+    for l in range(1, seg.i + 1):
+        segs.append(Segment(i=l - 1, j=l, k=host.original_k(l), kept=(l,),
+                            original=True))
+    segs.append(seg)
+    for l in range(seg.j + 1, L + 1):
+        segs.append(Segment(i=l - 1, j=l, k=host.original_k(l), kept=(l,),
+                            original=True))
+    return CompressionPlan(num_layers=L, segments=tuple(segs),
+                           method="probe")

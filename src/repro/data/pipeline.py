@@ -1,0 +1,101 @@
+"""Deterministic synthetic data pipeline — sharded, prefetched, resumable.
+
+No datasets ship in this container, so the pipeline synthesizes token
+streams with learnable structure (an order-2 Markov language over the
+vocab): losses drop meaningfully during the example training runs, which is
+what the end-to-end driver needs to demonstrate.
+
+Design points that matter at scale and are exercised in tests:
+* **Determinism / resumability** — batch ``i`` is a pure function of
+  (seed, i): restarting from a checkpoint at step ``s`` replays the exact
+  stream by construction, with no iterator state to save.
+* **Sharded global batches** — ``GlobalBatcher`` materializes each batch as
+  a jax.Array sharded over the mesh's data axes
+  (``jax.make_array_from_callback``: every host builds only its shard).
+* **Prefetch** — a depth-``k`` background thread keeps the accelerator fed.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator
+
+import jax
+import numpy as np
+
+
+class MarkovLM:
+    """Order-2 synthetic language with a low-entropy transition table."""
+
+    def __init__(self, vocab_size: int, seed: int = 0, branching: int = 4):
+        self.vocab = vocab_size
+        rng = np.random.default_rng(seed)
+        self.table = rng.integers(0, vocab_size,
+                                  size=(vocab_size, branching)).astype(np.int32)
+
+    def sample(self, rng: np.random.Generator, batch: int, seq: int):
+        toks = np.empty((batch, seq + 1), np.int32)
+        toks[:, 0] = rng.integers(0, self.vocab, size=batch)
+        branch = rng.integers(0, self.table.shape[1], size=(batch, seq))
+        for t in range(seq):
+            toks[:, t + 1] = self.table[toks[:, t], branch[:, t]]
+        return toks
+
+
+class SyntheticTokens:
+    """batch(i) → {'tokens','targets','positions'} — pure in (seed, i)."""
+
+    def __init__(self, vocab_size: int, batch: int, seq: int, seed: int = 0):
+        self.lm = MarkovLM(vocab_size, seed)
+        self.batch, self.seq, self.seed = batch, seq, seed
+
+    def batch_at(self, index: int) -> dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed, index))
+        toks = self.lm.sample(rng, self.batch, self.seq)
+        return {"tokens": toks[:, :-1], "targets": toks[:, 1:],
+                "positions": np.broadcast_to(np.arange(self.seq, dtype=np.int32),
+                                             (self.batch, self.seq)).copy()}
+
+
+class GlobalBatcher:
+    """Materializes host batches as mesh-sharded global jax.Arrays."""
+
+    def __init__(self, source, mesh=None, batch_axes=("data",)):
+        self.source = source
+        self.mesh = mesh
+        self.batch_axes = batch_axes
+
+    def __call__(self, index: int):
+        host = self.source.batch_at(index)
+        if self.mesh is None:
+            return {k: jax.numpy.asarray(v) for k, v in host.items()}
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        axes = tuple(a for a in self.batch_axes if a in self.mesh.shape)
+        out = {}
+        for k, v in host.items():
+            sharding = NamedSharding(self.mesh, P(axes))
+            out[k] = jax.make_array_from_callback(
+                v.shape, sharding, lambda idx, v=v: v[idx])
+        return out
+
+
+def prefetch(batch_fn, start: int, depth: int = 2) -> Iterator:
+    """Depth-k background prefetch of batch_fn(start), batch_fn(start+1)…"""
+    q: queue.Queue = queue.Queue(maxsize=depth)
+    stop = threading.Event()
+
+    def producer():
+        i = start
+        while not stop.is_set():
+            try:
+                q.put((i, batch_fn(i)), timeout=0.5)
+                i += 1
+            except queue.Full:
+                continue
+    th = threading.Thread(target=producer, daemon=True)
+    th.start()
+    try:
+        while True:
+            yield q.get()
+    finally:
+        stop.set()

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: causal flash attention (forward).
+
+Online-softmax tiling: grid (batch·heads, q-tiles, kv-tiles), kv innermost;
+running max / normalizer / output accumulator live in VMEM scratch and
+persist across the kv sweep.  Causal skipping: kv tiles strictly above the
+diagonal are skipped (``pl.when``), the diagonal tile is masked.
+
+Used for serve/prefill; training uses ``jax.custom_vjp`` with this forward
+and the jnp reference backward (ops.py) — recompute-style, matching the
+remat policy of the training stack.
+
+VMEM per step (bq=bk=512, d=128, fp32 acc): q 512×128·2, k/v 512×128·2 ×2,
+acc 512×128·4, m/l 512·4 ×2 → < 1 MiB.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq: int, bk: int, scale: float, causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = (not causal) or (ki * bk <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _():
+        q = q_ref[...].astype(jnp.float32)
+        k = k_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+            p, v_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _():
+        o_ref[...] = (acc_ref[...]
+                      / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                      ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 512,
+                    bk: int = 512, interpret: bool = False):
+    """q, k, v: (BH, S, D) → (BH, S, D).  S must tile by bq/bk."""
+    bh, s, d = q.shape
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0, "pad sequence at the ops layer"
+    grid = (bh, s // bq, s // bk)
+    kernel = functools.partial(_kernel, bq=bq, bk=bk,
+                               scale=1.0 / math.sqrt(d), causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: merged-segment convolution (VALID, stride 1, NHWC).
+
+The paper's hot spot: after LayerMerge, a segment executes as ONE conv
+whose kernel has grown (Eq. 1).  TPU adaptation: instead of im2col (which
+materializes the k²-unrolled input in HBM), the kernel keeps the whole
+input image tile resident in VMEM and accumulates the k_h·k_w shifted
+GEMMs — (Ho·Wo, Cin) @ (Cin, bCout) per tap — on the MXU, so the grown
+kernel costs FLOPs but no extra HBM traffic (that is exactly the trade the
+DP's latency table models).
+
+Grid: (batch, cout-tiles).  VMEM: image H·W·Cin ≤ ~2 MiB for the CNN-paper
+shapes (56×56×256·bf16 ≈ 1.6 MiB), weights k²·Cin·bCout, fp32 acc.
+Bias + activation are fused in ops.py's epilogue.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int):
+    ho, wo = o_ref.shape[0], o_ref.shape[1]
+    cin = x_ref.shape[-1]
+    bcout = o_ref.shape[-1]
+    acc = jnp.zeros((ho * wo, bcout), jnp.float32)
+    for u in range(kh):
+        for v in range(kw):
+            xs = x_ref[u:u + ho, v:v + wo, :].astype(jnp.float32)
+            ws = w_ref[u, v].astype(jnp.float32)          # (Cin, bCout)
+            acc = acc + jnp.dot(xs.reshape(ho * wo, cin), ws,
+                                preferred_element_type=jnp.float32)
+    o_ref[...] = acc.reshape(ho, wo, bcout).astype(o_ref.dtype)
+
+
+def merged_conv(x, w, *, bcout: int = 128, interpret: bool = False):
+    """x: (N, H, W, Cin); w: (kh, kw, Cin, Cout) → (N, Ho, Wo, Cout)."""
+    n, h, wdt, cin = x.shape
+    kh, kw, _, cout = w.shape
+    ho, wo = h - kh + 1, wdt - kw + 1
+    bcout = min(bcout, cout)
+    assert cout % bcout == 0, "pad channels at the ops layer"
+    grid = (n, cout // bcout)
+    return pl.pallas_call(
+        functools.partial(_kernel, kh=kh, kw=kw),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, h, wdt, cin), lambda b, co: (b, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, cin, bcout), lambda b, co: (0, 0, 0, co)),
+        ],
+        out_specs=pl.BlockSpec((None, ho, wo, bcout),
+                               lambda b, co: (b, 0, 0, co)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, cout), x.dtype),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,162 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Each ``*_op``:
+* pads inputs to tile boundaries, calls the kernel, slices back;
+* dispatches to the Pallas path on TPU and to the jnp oracle elsewhere
+  (``pl.pallas_call`` does not lower on the CPU backend; interpret=True is
+  for tests only — far too slow inside real models);
+* is differentiable: ``flash_attention_op`` uses ``jax.custom_vjp`` with the
+  Pallas forward and the reference backward (recompute-style, consistent
+  with the training remat policy); the other ops are linear/elementwise and
+  get transparent AD via the oracle path off-TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .merged_conv import merged_conv
+from .merged_ffn import merged_ffn
+from .rglru_scan import rglru_scan
+from .rmsnorm import rmsnorm
+
+_FORCE = {"mode": None}       # tests can force 'pallas' | 'ref'
+
+
+def _use_pallas() -> bool:
+    if _FORCE["mode"] == "pallas":
+        return True
+    if _FORCE["mode"] == "ref":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+# ---------------------------------------------------------------------------
+
+def merged_ffn_op(x, u, v, *, interpret: bool = False):
+    """(..., D) rank-r residual; pads tokens/rank/features to 128."""
+    if not (_use_pallas() or interpret):
+        return ref.merged_ffn_ref(x, u, v)
+    shape = x.shape
+    d = shape[-1]
+    n = x.size // d
+    x2 = x.reshape(n, d)
+    x2, _ = _pad_to(x2, 0, 128)       # token rows
+    x2, pd = _pad_to(x2, 1, 128)      # feature dim
+    u_p, _ = _pad_to(u, 1, 128)       # rank
+    v_p, _ = _pad_to(v, 0, 128)
+    if pd:
+        u_p = jnp.pad(u_p, ((0, pd), (0, 0)))
+        v_p = jnp.pad(v_p, ((0, 0), (0, pd)))
+    bm = 256 if x2.shape[0] % 256 == 0 else 128
+    y = merged_ffn(x2, u_p, v_p, bm=bm, interpret=interpret)
+    return y[:n, :d].reshape(shape)
+
+
+def rmsnorm_op(x, g, *, eps: float = 1e-6, interpret: bool = False):
+    if not (_use_pallas() or interpret):
+        return ref.rmsnorm_ref(x, g, eps)
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    x2, pm = _pad_to(x2, 0, 128)
+    bm = 128 if shape[-1] >= 8192 else 256
+    bm = min(bm, x2.shape[0])
+    y = rmsnorm(x2, g, eps=eps, bm=bm, interpret=interpret)
+    if pm:
+        y = y[:-pm]
+    return y.reshape(shape)
+
+
+def merged_conv_op(x, w, b=None, *, interpret: bool = False):
+    if not (_use_pallas() or interpret):
+        return ref.merged_conv_ref(x, w, b)
+    cout = w.shape[-1]
+    w_p, pc = _pad_to(w, 3, 128 if cout >= 128 else cout)
+    y = merged_conv(x, w_p, bcout=min(128, w_p.shape[-1]),
+                    interpret=interpret)
+    if pc:
+        y = y[..., :cout]
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def rglru_scan_op(a, b, *, interpret: bool = False):
+    if not (_use_pallas() or interpret):
+        return ref.rglru_scan_ref(a, b)
+    bsz, s, c = a.shape
+    a_p, pc = _pad_to(a, 2, 128)
+    b_p, _ = _pad_to(b, 2, 128)
+    # pad a with ones in time? channel padding only: zeros fine (h stays 0)
+    bt = 256
+    pt = (-s) % bt
+    if pt:
+        a_p = jnp.pad(a_p, ((0, 0), (0, pt), (0, 0)))
+        b_p = jnp.pad(b_p, ((0, 0), (0, pt), (0, 0)))
+    h = rglru_scan(a_p, b_p, bt=min(bt, a_p.shape[1]), interpret=interpret)
+    return h[:, :s, :c]
+
+
+# ---------------------------------------------------------------------------
+# Flash attention with custom VJP (Pallas fwd, reference bwd)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention_op(q, k, v, causal: bool = True,
+                       interpret: bool = False):
+    """(B, S, H, D) causal attention; same heads for q/k/v (GQA expanded
+    at the call site via repeat — see models/layers for the grouping)."""
+    return _fa_fwd(q, k, v, causal, interpret)[0]
+
+
+def _fa_fwd(q, k, v, causal, interpret):
+    if not (_use_pallas() or interpret):
+        return ref.flash_attention_ref(q, k, v, causal=causal), (q, k, v)
+    b, s, h, d = q.shape
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * h, s, d)
+    kf = jnp.moveaxis(k, 2, 1).reshape(b * h, s, d)
+    vf = jnp.moveaxis(v, 2, 1).reshape(b * h, s, d)
+    bq = 512 if s % 512 == 0 else (256 if s % 256 == 0 else s)
+    o = flash_attention(qf, kf, vf, causal=causal, bq=bq, bk=bq,
+                        interpret=interpret)
+    o = jnp.moveaxis(o.reshape(b, h, s, d), 1, 2)
+    return o, (q, k, v)
+
+
+def _fa_bwd(causal, interpret, saved, g):
+    q, k, v = saved
+    # recompute-style backward via the reference implementation's VJP
+    _, vjp = jax.vjp(lambda q, k, v: ref.flash_attention_ref(
+        q, k, v, causal=causal), q, k, v)
+    return vjp(g)
+
+
+flash_attention_op.defvjp(_fa_fwd, _fa_bwd)
+
+
+def force_backend(mode):
+    """Context for tests: force 'pallas' (interpret on CPU) or 'ref'."""
+    import contextlib
+
+    @contextlib.contextmanager
+    def ctx():
+        prev = _FORCE["mode"]
+        _FORCE["mode"] = mode
+        try:
+            yield
+        finally:
+            _FORCE["mode"] = prev
+    return ctx()

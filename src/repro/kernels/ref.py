@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` is the semantic ground truth: kernels are validated against
+these in ``tests/test_kernels.py`` over shape/dtype sweeps (interpret=True
+on CPU; compiled on real TPU).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def merged_ffn_ref(x, u, v):
+    """LayerMerge rank-r residual: x + (x@U)@V, fp32 accumulation."""
+    h = jnp.dot(x.astype(jnp.float32), u.astype(jnp.float32))
+    y = jnp.dot(h, v.astype(jnp.float32))
+    return (x.astype(jnp.float32) + y).astype(x.dtype)
+
+
+def merged_conv_ref(x, w, b=None):
+    """VALID NHWC conv (stride 1) + bias — the merged-segment layer."""
+    y = lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32), (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """(B, S, H, D) GQA-free attention oracle, fp32 softmax."""
+    b, s, h, d = q.shape
+    logits = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None], logits,
+                           jnp.finfo(jnp.float32).min)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rglru_scan_ref(a, gated, h0=None):
+    """h_t = a_t ⊙ h_{t-1} + gated_t over axis 1 (fp32)."""
+    def step(h, xs):
+        at, gt = xs
+        h = at * h + gt
+        return h, h
+    b, s, d = a.shape
+    h0 = jnp.zeros((b, d), jnp.float32) if h0 is None else h0
+    _, hs = lax.scan(step, h0,
+                     (jnp.moveaxis(a, 1, 0).astype(jnp.float32),
+                      jnp.moveaxis(gated, 1, 0).astype(jnp.float32)))
+    return jnp.moveaxis(hs, 0, 1)

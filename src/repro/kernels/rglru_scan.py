@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: RG-LRU linear recurrence  h_t = a_t ⊙ h_{t-1} + b_t.
+
+Grid (batch, channel-tiles, time-tiles), time innermost; the carry h lives
+in VMEM scratch and persists across time tiles.  Within a tile the scan is
+a sequential fori_loop over rows — the VPU processes a full (bc,) channel
+vector per step, so the kernel is bandwidth-bound exactly like the
+recurrence itself; tiling time bounds the VMEM residency of a/b to
+(bt × bc) each.
+
+Decode (one step) is a trivial fused multiply-add and stays in XLA.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, o_ref, h_ref, *, bt: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    def step(t, h):
+        h = a_ref[t, :] * h + b_ref[t, :]
+        o_ref[t, :] = h
+        return h
+    h = jax.lax.fori_loop(0, bt, step, h_ref[...])
+    h_ref[...] = h
+
+
+def rglru_scan(a, b, *, bc: int = 512, bt: int = 256,
+               interpret: bool = False):
+    """a, b: (B, S, C) fp32 → h: (B, S, C).  S % bt == 0, C % bc == 0."""
+    bsz, s, c = a.shape
+    bc = min(bc, c)
+    bt = min(bt, s)
+    assert s % bt == 0 and c % bc == 0, "pad at the ops layer"
+    grid = (bsz, c // bc, s // bt)
+    return pl.pallas_call(
+        functools.partial(_kernel, bt=bt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bt, bc), lambda n, ci, ti: (n, ti, ci)),
+            pl.BlockSpec((None, bt, bc), lambda n, ci, ti: (n, ti, ci)),
+        ],
+        out_specs=pl.BlockSpec((None, bt, bc), lambda n, ci, ti: (n, ti, ci)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, c), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bc,), jnp.float32)],
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))

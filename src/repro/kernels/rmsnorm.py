@@ -1,0 +1,40 @@
+"""Pallas TPU kernel: fused RMSNorm  y = x · rsqrt(mean(x²)+ε) · (1+g).
+
+One pass per row tile: the row stays in VMEM between the reduction and the
+scale, so HBM traffic is exactly read-x + write-y (XLA sometimes spills the
+normalized intermediate for wide rows).  Grid: (row-tiles,); feature dim is
+kept whole per tile (d ≤ ~16k fits easily: 512×12288×2 ≈ 12 MiB at bm=512 —
+use bm=128 for d=12288, see ops.py heuristics).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * (1.0 + g_ref[...].astype(jnp.float32))).astype(
+        o_ref.dtype)
+
+
+def rmsnorm(x, g, *, eps: float = 1e-6, bm: int = 256,
+            interpret: bool = False):
+    """x: (M, D); g: (D,) → (M, D).  M % bm == 0."""
+    m, d = x.shape
+    bm = min(bm, m)
+    assert m % bm == 0, "pad rows at the ops layer"
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=interpret,
+    )(x, g)

@@ -1,0 +1,358 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Everything below is ordinary.
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch × shape × mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. builds ShapeDtypeStruct inputs (specs.py) and FSDP+TP shardings
+     (sharding/rules.py) for params, optimizer state, batch and cache,
+  3. jits the train_step / serve_step / prefill_step with explicit
+     in/out_shardings and donation, lowers, compiles,
+  4. records memory_analysis, cost_analysis, and the collective bytes parsed
+     from the compiled (post-SPMD) HLO into results/dryrun/<cell>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch a] [--shape s]
+      [--mesh single|multi|both] [--out results/dryrun]
+      [--no-fsdp] [--seq-parallel] [--microbatches N] [--tag name]
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ARCH_IDS, LONG_CONTEXT_OK, SHAPES,
+                                get_config)
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh, mesh_info
+from repro.models import transformer as T
+from repro.optim.adamw import AdamWConfig, init_opt_state, opt_state_axes
+from repro.sharding.rules import (make_rules, param_shardings_with_shapes,
+                                  use_rules)
+from repro.train.step import (make_prefill_step, make_serve_step,
+                              make_train_step)
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,
+               "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+               "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+               "c128": 16}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in a post-SPMD HLO."""
+    out = {k: {"count": 0, "bytes": 0} for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+ = ([^=]+?) (\w[\w\-]*)\(", line)
+        if not m:
+            continue
+        shape_str, opname = m.groups()
+        base = opname.rstrip("-start").rstrip("-done") if False else opname
+        for k in COLLECTIVE_OPS:
+            if opname == k or opname == k + "-start":
+                out[k]["count"] += 1
+                out[k]["bytes"] += _shape_bytes(shape_str)
+                break
+    out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                             if isinstance(v, dict))
+    return out
+
+
+def _memory_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:          # pragma: no cover
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    d = {}
+    for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes", "host_argument_size_in_bytes",
+                  "peak_memory_in_bytes"):
+        v = getattr(ma, field, None)
+        if v is not None:
+            d[field] = int(v)
+    if not d:
+        d["repr"] = str(ma)
+    return d
+
+
+def _cost_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:          # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and not k.startswith("utilization")}
+
+
+@dataclasses.dataclass
+class CellOptions:
+    fsdp: bool = True
+    seq_parallel: bool = False
+    microbatches: int = 1
+    remat: bool = True
+    decode_kv_model: bool = True
+    scan_layers: bool = True
+    flash_decode: bool = False
+    layermerge_budget: float | None = None  # lower the LayerMerge-compressed
+                                            # network at this latency budget
+                                            # (plan from analytic tables)
+    depth_override: int | None = None   # depth-probe (see roofline.py):
+                                        # XLA cost analysis counts while-loop
+                                        # bodies ONCE, so per-layer costs are
+                                        # extrapolated from unrolled shallow
+                                        # probes at depth p and 2p.
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             opts: CellOptions = CellOptions()) -> dict:
+    cfg = get_config(arch)
+    cfg = dataclasses.replace(cfg, remat=opts.remat,
+                              scan_layers=opts.scan_layers,
+                              decode_flash=opts.flash_decode)
+    if opts.depth_override is not None:
+        cfg = dataclasses.replace(cfg, num_layers=opts.depth_override,
+                                  scan_layers=False)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    seq_par = opts.seq_parallel or (shape.mode == "prefill"
+                                    and shape.seq_len >= 32768)
+    rules = make_rules(mesh, fsdp=opts.fsdp, seq_parallel=seq_par,
+                       decode_kv_model=opts.decode_kv_model)
+
+    units_spec = None
+    if opts.layermerge_budget is not None:
+        from repro.models import transformer_host as TH
+        env = TH.CostEnv(batch=shape.global_batch, seq=shape.seq_len,
+                         chips=int(mesh.devices.size))
+        cres = TH.abstract_plan(cfg, budget_ratio=opts.layermerge_budget,
+                                env=env)
+        if cres is None:
+            raise RuntimeError("no feasible LayerMerge plan at this budget")
+        units_spec = TH.plan_units_spec(cfg, cres.plan)
+        rec_plan = {"budget": opts.layermerge_budget,
+                    "predicted_speedup": cres.speedup,
+                    "units": [u[0] if u[0] == "merged" else u[2]
+                              for u in units_spec],
+                    "merged_ranks": [u[1] for u in units_spec
+                                     if u[0] == "merged"]}
+
+    if units_spec is not None:
+        abstract_params = jax.eval_shape(
+            lambda: __import__("repro.models.transformer_host",
+                               fromlist=["init_compressed_model"])
+            .init_compressed_model(cfg, units_spec, jax.random.PRNGKey(0)))
+        from repro.models import transformer_host as TH
+        axes = TH.compressed_model_axes(cfg, units_spec)
+    else:
+        abstract_params, axes = S.param_specs(cfg)
+    p_shard = param_shardings_with_shapes(rules, axes, abstract_params)
+    batch_ax = S.batch_axes(cfg, shape,
+                            with_targets=(shape.mode == "train"))
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": mesh_info(mesh), "mode": shape.mode,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "options": dataclasses.asdict(opts),
+        "params": int(cfg.param_count()),
+        "active_params": int(cfg.active_param_count()),
+        "num_layers": cfg.num_layers,
+    }
+
+    forward_fn = None
+    if units_spec is not None:
+        from repro.models import transformer_host as TH
+        rec["compression"] = rec_plan
+        forward_fn = (lambda p, b: TH.forward_compressed_spec(
+            cfg, units_spec, p, b))
+        if shape.mode == "decode":
+            raise RuntimeError("compressed decode cells are out of scope; "
+                               "use train/prefill shapes with --budget")
+
+    t0 = time.time()
+    with use_rules(rules):
+        if shape.mode == "train":
+            opt_cfg = AdamWConfig()
+            abstract_opt = jax.eval_shape(init_opt_state, abstract_params)
+            # optimizer moments: always fully sharded (ZeRO); when params
+            # are TP-only (--no-fsdp) this is the ZeRO-1 layout
+            o_rules = make_rules(mesh, fsdp=True, seq_parallel=seq_par,
+                                 decode_kv_model=opts.decode_kv_model,
+                                 opt_state=True)
+            m_shard = param_shardings_with_shapes(o_rules, axes,
+                                                  abstract_params)
+            o_shard = {"mu": m_shard, "nu": m_shard,
+                       "step": jax.sharding.NamedSharding(
+                           mesh, jax.sharding.PartitionSpec())}
+            step = make_train_step(cfg, opt_cfg,
+                                   microbatches=opts.microbatches,
+                                   forward_fn=forward_fn,
+                                   grad_shardings=m_shard)
+            b_specs = S.batch_specs(cfg, shape, with_targets=True)
+            b_shard = {k: rules.named(batch_ax[k], b_specs[k].shape)
+                       for k in b_specs}
+            jitted = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                             out_shardings=(p_shard, o_shard, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(abstract_params, abstract_opt, b_specs)
+        elif shape.mode == "prefill":
+            step = forward_fn if forward_fn is not None \
+                else make_prefill_step(cfg)
+            b_specs = S.batch_specs(cfg, shape, with_targets=False)
+            b_shard = {k: rules.named(batch_ax[k], b_specs[k].shape)
+                       for k in b_specs}
+            jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(abstract_params, b_specs)
+        else:  # decode
+            step = make_serve_step(cfg)
+            cache_specs = S.cache_specs(cfg, shape)
+            cache_ax = T.cache_axes(cfg)
+            c_shard = jax.tree.map(
+                lambda spec_leaf, ax_leaf: rules.named(
+                    tuple(ax_leaf), spec_leaf.shape),
+                cache_specs,
+                jax.tree.map(lambda a: a, cache_ax,
+                             is_leaf=lambda x: isinstance(x, tuple)),
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            b_specs = S.batch_specs(cfg, shape, with_targets=False)
+            b_shard = {k: rules.named(batch_ax[k], b_specs[k].shape)
+                       for k in b_specs}
+            jitted = jax.jit(step, in_shardings=(p_shard, c_shard, b_shard),
+                             out_shardings=(None, c_shard),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(abstract_params, cache_specs, b_specs)
+        rec["lower_s"] = round(time.time() - t0, 2)
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    rec["memory"] = _memory_dict(compiled)
+    rec["cost"] = _cost_dict(compiled)
+    hlo = compiled.as_text()
+    rec["collectives"] = parse_collectives(hlo)
+    rec["hlo_bytes"] = len(hlo)
+    return rec
+
+
+def cell_list(args):
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = []
+    for a in archs:
+        for s in shapes:
+            if s == "long_500k" and a not in LONG_CONTEXT_OK:
+                continue  # documented skip (DESIGN §2.3)
+            for m in meshes:
+                cells.append((a, s, m))
+    return cells
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-scan", action="store_true")
+    ap.add_argument("--no-decode-kv-model", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--flash-decode", action="store_true",
+                    help="decode attention via shard_map LSE combine")
+    ap.add_argument("--budget", type=float, default=None,
+                    help="lower the LayerMerge-compressed net at this "
+                         "latency-budget ratio (train/prefill shapes)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--probe", action="store_true",
+                    help="depth-probe pass: compile each cell unrolled at "
+                         "pattern depth p and 2p (per-layer cost "
+                         "extrapolation for scanned cells)")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    opts = CellOptions(fsdp=not args.no_fsdp,
+                       seq_parallel=args.seq_parallel,
+                       microbatches=args.microbatches,
+                       remat=not args.no_remat,
+                       decode_kv_model=not args.no_decode_kv_model,
+                       scan_layers=not args.no_scan,
+                       flash_decode=args.flash_decode,
+                       layermerge_budget=args.budget)
+    failures = 0
+    jobs = []
+    for arch, shape, multi in cell_list(args):
+        if args.probe:
+            p = len(get_config(arch).temporal_pattern)
+            suffix = f"-{args.tag}" if args.tag else ""
+            jobs.append((arch, shape, multi, p, f"probe{p}{suffix}"))
+            if p < get_config(arch).num_layers:
+                jobs.append((arch, shape, multi, 2 * p,
+                             f"probe{2 * p}{suffix}"))
+        else:
+            jobs.append((arch, shape, multi, None, args.tag))
+    for arch, shape, multi, depth, tag in jobs:
+        mesh_tag = "multi" if multi else "single"
+        name = f"{arch}__{shape}__{mesh_tag}"
+        if tag:
+            name += f"__{tag}"
+        path = os.path.join(args.out, name + ".json")
+        print(f"[dryrun] {name} ...", flush=True)
+        try:
+            rec = run_cell(arch, shape, multi,
+                           dataclasses.replace(opts, depth_override=depth))
+            rec["status"] = "ok"
+            print(f"[dryrun] {name}: OK lower={rec['lower_s']}s "
+                  f"compile={rec['compile_s']}s "
+                  f"flops={rec['cost'].get('flops', 0):.3e} "
+                  f"coll={rec['collectives']['total_bytes']:.3e}B",
+                  flush=True)
+        except Exception as e:
+            failures += 1
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_tag,
+                   "status": "fail", "error": str(e),
+                   "traceback": traceback.format_exc()}
+            print(f"[dryrun] {name}: FAIL {e}", flush=True)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+    print(f"[dryrun] done, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

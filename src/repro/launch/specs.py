@@ -1,0 +1,75 @@
+"""ShapeDtypeStruct input specs for every (arch × shape) dry-run cell.
+
+Weak-type-correct, shardable, zero allocation.  For ``embeddings``-frontend
+archs (musicgen, qwen2-vl) the modality frontend is a stub per the
+assignment: the spec feeds precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import transformer as T
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, *, with_targets: bool):
+    B, S = shape.global_batch, shape.seq_len
+    if shape.mode == "decode":
+        S = 1
+    specs = {"positions": _sds((B, S), "int32")}
+    if cfg.frontend == "tokens":
+        specs["tokens"] = _sds((B, S), "int32")
+    else:
+        specs["embeds"] = _sds((B, S, cfg.d_model), cfg.dtype)
+    if cfg.rope_kind == "mrope":
+        specs["mrope_positions"] = _sds((3, B, S), "int32")
+    if with_targets:
+        specs["targets"] = _sds((B, S), "int32")
+    if shape.mode == "decode":
+        specs.pop("positions")      # decode derives positions from the cache
+    return specs
+
+
+def batch_axes(cfg: ArchConfig, shape: ShapeConfig, *, with_targets: bool):
+    """Logical axes matching batch_specs (for in_shardings)."""
+    ax = {"positions": ("batch", "seq")}
+    if cfg.frontend == "tokens":
+        ax["tokens"] = ("batch", "seq")
+    else:
+        ax["embeds"] = ("batch", "seq", None)
+    if cfg.rope_kind == "mrope":
+        ax["mrope_positions"] = (None, "batch", "seq")
+    if with_targets:
+        ax["targets"] = ("batch", "seq")
+    if shape.mode == "decode":
+        ax.pop("positions")
+    return ax
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def param_specs(cfg: ArchConfig):
+    """(abstract params, logical axes) without allocating anything."""
+    params = jax.eval_shape(
+        lambda: T.init_model(cfg, jax.random.PRNGKey(0))[0])
+    return params, T.model_axes(cfg)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """The full spec dict the dry-run lowers against."""
+    if shape.mode == "train":
+        return {"batch": batch_specs(cfg, shape, with_targets=True)}
+    if shape.mode == "prefill":
+        return {"batch": batch_specs(cfg, shape, with_targets=False)}
+    if shape.mode == "decode":
+        return {"batch": batch_specs(cfg, shape, with_targets=False),
+                "cache": cache_specs(cfg, shape)}
+    raise ValueError(shape.mode)

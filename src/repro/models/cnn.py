@@ -1,0 +1,567 @@
+"""Plan-aware CNNs in pure JAX — the paper-faithful substrate.
+
+A network is a flat chain of 1-indexed :class:`ConvSpec` units plus skip
+annotations.  The same definition can be *applied* three ways:
+
+* original            — ``apply_replaced(net, params, x, identity_plan)``;
+* replaced (pruned, unmerged) — ``apply_replaced(net, params, x, plan)``:
+  activations outside ``A`` are dropped, convs outside ``C`` become the
+  identity, padding is re-ordered to the front of every merged group
+  (paper Appendix A), GroupNorms are moved to group ends;
+* merged              — ``merge_network(net, params, plan)`` folds every
+  segment into a single convolution (Eq. 1 composition, BN folding,
+  skip-add Dirac fusion) and ``apply_merged`` runs it.
+
+``apply_replaced(plan)`` and ``apply_merged(merge_network(plan))`` are
+*exactly equal* (same function, same floats up to accumulation order) —
+asserted by ``tests/test_merge.py``; this equality is the cornerstone of the
+paper's method.
+
+Skip blocks may carry a projection shortcut (ResNet downsample blocks);
+those blocks cannot be Dirac-fused, so spans may only sit *inside* them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import merge as M
+from repro.core.plan import CompressionPlan, LayerDesc, Segment, identity_plan
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    cin: int
+    cout: int
+    k: int = 3
+    stride: int = 1
+    depthwise: bool = False
+    act: str = "relu"            # 'relu' | 'relu6' | 'silu' | 'none'
+    norm: str | None = None      # None | 'bn' (frozen, foldable) | 'gn'
+    gn_groups: int = 8
+    bias: bool = True
+    kind: str = "conv"           # 'conv' | 'pool' (avg) | 'upsample' | 'attn'
+
+    @property
+    def shape_preserving(self) -> bool:
+        return (self.kind == "conv" and self.stride == 1
+                and self.cin == self.cout)
+
+
+@dataclasses.dataclass(frozen=True)
+class SkipSpec:
+    kind: str                    # 'add' | 'concat'
+    start: int                   # boundary position (block = layers start+1..end)
+    end: int
+    proj: bool = False           # 1x1 projection shortcut (stride = block stride)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvNet:
+    specs: tuple[ConvSpec, ...]
+    skips: tuple[SkipSpec, ...] = ()
+    in_hw: int = 32
+    in_ch: int = 3
+    head: str = "classifier"     # 'classifier' | 'none'
+    num_classes: int = 10
+    act_after_merge: bool = False   # paper's MobileNetV2 trick (Appendix A)
+
+    @property
+    def L(self) -> int:
+        return len(self.specs)
+
+    def spec(self, l: int) -> ConvSpec:
+        return self.specs[l - 1]
+
+    # -- compressibility metadata -------------------------------------------
+    def irreducible(self) -> tuple[int, ...]:
+        """R — layers whose input/output shapes differ (plus non-convs)."""
+        return tuple(l for l in range(1, self.L + 1)
+                     if not self.spec(l).shape_preserving)
+
+    def layer_descs(self, params=None) -> list[LayerDesc]:
+        descs = []
+        for l in range(1, self.L + 1):
+            s = self.spec(l)
+            w = (params or {}).get("layers", [{}] * self.L)[l - 1].get("w") \
+                if params else None
+            val = float(jnp.sum(jnp.abs(w))) if w is not None else 0.0
+            descs.append(LayerDesc(
+                index=l, kind="dwconv" if s.depthwise else s.kind,
+                growth=(s.k - 1) if s.kind == "conv" else 0,
+                value=val,
+                prunable=s.shape_preserving,
+                linearizable=(s.kind == "conv"),
+                meta={"stride": s.stride, "k": s.k},
+            ))
+        return descs
+
+    def allowed_span(self, i: int, j: int) -> bool:
+        """Span predicate: skip-block consistency + strided restriction +
+        barrier units (pool/upsample/attn) must not sit strictly inside."""
+        if j - i > 1:
+            for l in range(i + 1, j + 1):
+                s = self.spec(l)
+                if s.kind != "conv":
+                    return False
+                # paper Appendix A: don't merge a strided conv with a following
+                # k>1 conv (kernel blow-up).  Conservative: any in-span strided
+                # layer may only be followed by k==1 layers within the span.
+                if s.stride > 1 and l < j:
+                    if any(self.spec(m).k > 1 for m in range(l + 1, j + 1)):
+                        return False
+        for sk in self.skips:
+            inter = max(0, min(j, sk.end) - max(i, sk.start))
+            if inter == 0:
+                continue
+            inside = (sk.start <= i and j <= sk.end)
+            whole_block = (i <= sk.start and sk.end <= j)
+            if sk.kind == "concat" or sk.proj:
+                # never merge across (or Dirac-fuse) these blocks
+                if not inside:
+                    return False
+            else:  # plain skip-add
+                if not (whole_block or inside):
+                    return False
+                if whole_block:
+                    # Dirac fusion needs stride-1, odd kernels in the block
+                    for l in range(sk.start + 1, sk.end + 1):
+                        sl = self.spec(l)
+                        if sl.stride > 1 or sl.k % 2 == 0 or sl.kind != "conv":
+                            return False
+        return True
+
+    # -- shape inference ------------------------------------------------------
+    def boundary_shapes(self) -> list[tuple[int, int, int]]:
+        """(h, w, c) at every boundary position 0..L (post-concat)."""
+        shapes = [(self.in_hw, self.in_hw, self.in_ch)]
+        h = w = self.in_hw
+        c = self.in_ch
+        concat_at = {sk.end: sk.start for sk in self.skips
+                     if sk.kind == "concat"}
+        for l in range(1, self.L + 1):
+            s = self.spec(l)
+            if s.kind == "conv":
+                h, w = -(-h // s.stride), -(-w // s.stride)
+                c = s.cout
+            elif s.kind == "pool":
+                h, w = -(-h // s.stride), -(-w // s.stride)
+            elif s.kind == "upsample":
+                h, w = h * s.stride, w * s.stride
+            if l in concat_at:
+                c += shapes[concat_at[l]][2]
+            shapes.append((h, w, c))
+        return shapes
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_params(net: ConvNet, key: jax.Array, dtype=jnp.float32):
+    params = []
+    keys = jax.random.split(key, net.L + len(net.skips) + 2)
+    shapes = net.boundary_shapes()
+    for l in range(1, net.L + 1):
+        s = net.spec(l)
+        p = {}
+        if s.kind == "conv":
+            cin_eff = shapes[l - 1][2]
+            if s.depthwise:
+                wshape = (s.k, s.k, 1, s.cout)
+                fan_in = s.k * s.k
+            else:
+                wshape = (s.k, s.k, cin_eff, s.cout)
+                fan_in = s.k * s.k * cin_eff
+            w = jax.random.normal(keys[l], wshape, dtype) * math.sqrt(2.0 / fan_in)
+            p["w"] = w
+            if s.bias:
+                p["b"] = jnp.zeros((s.cout,), dtype)
+            if s.norm == "bn":
+                p["bn"] = {"gamma": jnp.ones((s.cout,), dtype),
+                           "beta": jnp.zeros((s.cout,), dtype),
+                           "mean": jnp.zeros((s.cout,), dtype),
+                           "var": jnp.ones((s.cout,), dtype)}
+            elif s.norm == "gn":
+                p["gn"] = {"gamma": jnp.ones((s.cout,), dtype),
+                           "beta": jnp.zeros((s.cout,), dtype)}
+        elif s.kind == "attn":
+            c = shapes[l - 1][2]
+            sub = jax.random.split(keys[l], 4)
+            p = {n: jax.random.normal(kk, (c, c), dtype) / math.sqrt(c)
+                 for n, kk in zip(("wq", "wk", "wv", "wo"), sub)}
+        params.append(p)
+    skip_params = []
+    for idx, sk in enumerate(net.skips):
+        if sk.proj:
+            cin = shapes[sk.start][2]
+            cout = shapes[sk.end][2]
+            stride = 1
+            for l in range(sk.start + 1, sk.end + 1):
+                stride *= net.spec(l).stride
+            w = jax.random.normal(keys[net.L + 1 + idx], (1, 1, cin, cout),
+                                  dtype) * math.sqrt(2.0 / cin)
+            skip_params.append({"w": w, "b": jnp.zeros((cout,), dtype)})
+        else:
+            skip_params.append({})
+    head = {}
+    if net.head == "classifier":
+        c_final = shapes[-1][2]
+        head["w"] = jax.random.normal(keys[0], (c_final, net.num_classes),
+                                      dtype) * math.sqrt(1.0 / c_final)
+        head["b"] = jnp.zeros((net.num_classes,), dtype)
+    return {"layers": params, "skips": skip_params, "head": head}
+
+
+# ---------------------------------------------------------------------------
+# Primitive application
+# ---------------------------------------------------------------------------
+
+def _act(x, name):
+    if name == "relu":
+        return jax.nn.relu(x)
+    if name == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    if name == "silu":
+        return jax.nn.silu(x)
+    return x
+
+
+def _conv(x, w, stride, depthwise, padding="VALID"):
+    groups = w.shape[-1] if depthwise else 1
+    return lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def _frozen_bn(x, bn, eps=1e-5):
+    scale = bn["gamma"] / jnp.sqrt(bn["var"] + eps)
+    return x * scale + (bn["beta"] - bn["mean"] * scale)
+
+
+def _gn(x, gn, groups, eps=1e-5):
+    n, h, w, c = x.shape
+    g = math.gcd(groups, c)
+    xg = x.reshape(n, h, w, g, c // g)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) / jnp.sqrt(var + eps)
+    return xg.reshape(n, h, w, c) * gn["gamma"] + gn["beta"]
+
+
+def _folded_wb(spec: ConvSpec, p):
+    """Conv weight/bias with frozen BN folded in (exact at inference)."""
+    w = p["w"]
+    b = p.get("b")
+    if "bn" in p:
+        bn = p["bn"]
+        w, b = M.fold_batchnorm(w, b, bn["gamma"], bn["beta"], bn["mean"],
+                                bn["var"])
+    return w, (jnp.zeros((spec.cout,), w.dtype) if b is None else b)
+
+
+def _center_crop_to(src, like):
+    """Center-crop ``src`` spatially to the shape of ``like`` (Dirac tap)."""
+    dh = src.shape[1] - like.shape[1]
+    dw = src.shape[2] - like.shape[2]
+    if dh == 0 and dw == 0:
+        return src
+    assert dh >= 0 and dw >= 0 and dh % 2 == 0 and dw % 2 == 0, (
+        src.shape, like.shape)
+    return src[:, dh // 2: src.shape[1] - dh // 2,
+               dw // 2: src.shape[2] - dw // 2, :]
+
+
+def segment_geometry(net: ConvNet, seg: Segment) -> tuple[int, int]:
+    """(merged kernel size, merged stride) of a segment under its kept set."""
+    K, S = 1, 1
+    kept = set(seg.kept)
+    for l in seg.layers:
+        s = net.spec(l)
+        if s.kind != "conv":
+            continue
+        k_eff = s.k if l in kept else 1
+        K = K + (k_eff - 1) * S
+        S *= s.stride
+    return K, S
+
+
+def _skip_stride(net: ConvNet, sk: SkipSpec) -> int:
+    s = 1
+    for l in range(sk.start + 1, sk.end + 1):
+        if net.spec(l).kind in ("conv", "pool"):
+            s *= net.spec(l).stride
+        elif net.spec(l).kind == "upsample":
+            s //= net.spec(l).stride
+    return s
+
+
+def _apply_proj(saved, skp, stride):
+    return _conv(saved, skp["w"], stride, False, padding="SAME") + skp["b"]
+
+
+def _segment_gn(net: ConvNet, layers, seg: Segment):
+    """GN moved to segment end (paper Appendix A): the last kept conv's GN
+    whose channel count matches the segment output; None otherwise."""
+    kept = set(seg.kept)
+    out_c = None
+    for l in reversed(seg.layers):
+        s = net.spec(l)
+        if l in kept and s.kind == "conv":
+            out_c = s.cout
+            break
+    if out_c is None:
+        return None, 8
+    for l in reversed(seg.layers):
+        s = net.spec(l)
+        if l in kept and s.kind == "conv" and "gn" in layers[l - 1] \
+                and s.cout == out_c:
+            return layers[l - 1]["gn"], s.gn_groups
+        if l in kept and s.kind == "conv" and s.cout != out_c:
+            break
+    return None, 8
+
+
+# ---------------------------------------------------------------------------
+# Replaced (pruned, unmerged) forward
+# ---------------------------------------------------------------------------
+
+def apply_replaced(net: ConvNet, params, x, plan: CompressionPlan | None = None):
+    """Forward pass of the pruned-but-unmerged network under ``plan``."""
+    if plan is None:
+        plan = identity_plan(net.L, net.layer_descs())
+    layers = params["layers"]
+    add_end = {sk.end: (sk.start, i) for i, sk in enumerate(net.skips)
+               if sk.kind == "add"}
+    cat_end = {sk.end: sk.start for i, sk in enumerate(net.skips)
+               if sk.kind == "concat"}
+    need_save = {sk.start for sk in net.skips}
+
+    saved: dict[int, jax.Array] = {}     # true boundary values (post-act)
+    if 0 in need_save:
+        saved[0] = x
+
+    for seg in plan.segments:
+        Km, _ = segment_geometry(net, seg)
+        lo = (Km - 1) // 2
+        hi = Km - 1 - lo
+        if Km > 1:
+            x = jnp.pad(x, ((0, 0), (lo, hi), (lo, hi), (0, 0)))
+        local: dict[int, jax.Array] = {seg.i: x}   # halo'd in-segment values
+        kept = set(seg.kept)
+        gn, gn_groups = _segment_gn(net, layers, seg)
+        for l in seg.layers:
+            s = net.spec(l)
+            p = layers[l - 1]
+            if s.kind == "conv":
+                if l in kept:
+                    w, b = _folded_wb(s, p)
+                    x = _conv(x, w, s.stride, s.depthwise) + b
+            elif s.kind == "pool":
+                x = lax.reduce_window(
+                    x, 0.0, lax.add, (1, s.k, s.k, 1),
+                    (1, s.stride, s.stride, 1), "SAME") / (s.k * s.k)
+            elif s.kind == "upsample":
+                n, h, w_, c = x.shape
+                x = jax.image.resize(x, (n, h * s.stride, w_ * s.stride, c),
+                                     "nearest")
+            elif s.kind == "attn":
+                x = _tiny_self_attention(x, p)
+            if l in add_end:
+                src, ski = add_end[l]
+                sk = net.skips[ski]
+                if sk.proj:
+                    # proj blocks are never Dirac-fused: src is always a true
+                    # segment boundary (allowed_span guarantees it)
+                    base = _apply_proj(saved[src], params["skips"][ski],
+                                       _skip_stride(net, sk))
+                else:
+                    base = local[src] if src >= seg.i else saved[src]
+                x = x + _center_crop_to(base, x)
+            if l in cat_end:
+                x = jnp.concatenate([x, saved[cat_end[l]]], axis=-1)
+            local[l] = x
+        if gn is not None:
+            x = _gn(x, gn, gn_groups)
+        # boundary activation σ_j (σ_L is the identity, paper §2)
+        if seg.j < net.L:
+            bspec = net.spec(seg.j)
+            act = bspec.act
+            if (net.act_after_merge and not seg.original
+                    and bspec.kind == "conv" and act == "none"):
+                act = "relu6"
+            x = _act(x, act)
+        if seg.j in need_save:
+            saved[seg.j] = x
+    return _apply_head(net, params, x)
+
+
+def _tiny_self_attention(x, p):
+    """Single-head self-attention over spatial positions (DDPM barrier)."""
+    n, h, w, c = x.shape
+    t = x.reshape(n, h * w, c)
+    q = t @ p["wq"]
+    k = t @ p["wk"]
+    v = t @ p["wv"]
+    a = jax.nn.softmax(q @ jnp.swapaxes(k, -1, -2) / math.sqrt(c), axis=-1)
+    return (t + (a @ v) @ p["wo"]).reshape(n, h, w, c)
+
+
+def _apply_head(net: ConvNet, params, x):
+    if net.head == "classifier":
+        x = x.mean(axis=(1, 2))
+        return x @ params["head"]["w"] + params["head"]["b"]
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Merge (Algorithm 2 final step)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MergedUnit:
+    """One executable unit of the merged network."""
+
+    kind: str                     # 'conv' | 'pool' | 'upsample' | 'attn'
+    seg: Segment
+    w: jax.Array | None = None
+    b: jax.Array | None = None
+    stride: int = 1
+    depthwise: bool = False
+    gn: dict | None = None
+    gn_groups: int = 8
+    act: str = "none"
+    params_ref: dict | None = None   # for attn passthrough
+
+
+def merge_segment(net: ConvNet, layers_params, seg: Segment):
+    """Fold one segment into a single conv: returns (w, b, stride, dw)."""
+    kept = set(seg.kept)
+    add_blocks = {sk.start: sk.end for sk in net.skips
+                  if sk.kind == "add" and not sk.proj}
+
+    def compose(acc, w, b, stride, dw):
+        if acc is None:
+            return (w, b, stride, dw)
+        w_a, b_a, s_a, dw_a = acc
+        w_m, dw_m = M.merge_conv_pair(w_a, w, stride1=s_a, dw1=dw_a, dw2=dw)
+        b_m = M.merge_bias_through(w, b_a, b, dw2=dw)
+        return (w_m, b_m, s_a * stride, dw_m)
+
+    def chain(lo: int, hi: int, as_branch: bool = False):
+        acc = None
+        l = lo + 1
+        while l <= hi:
+            blk_end = add_blocks.get(l - 1)
+            # fuse a complete block inside (lo, hi]; when this call IS the
+            # block's own branch ((lo,hi) == (start,end)), compose plainly
+            if blk_end is not None and blk_end <= hi and l - 1 >= lo \
+                    and not (as_branch and l - 1 == lo and blk_end == hi):
+                wb, bb, sb, dwb = chain(l - 1, blk_end, as_branch=True)
+                assert sb == 1, "Dirac fusion requires stride-1 block"
+                wb = M.fuse_skip_add(wb, depthwise=dwb)
+                acc = compose(acc, wb, bb, 1, dwb)
+                l = blk_end + 1
+                continue
+            s = net.spec(l)
+            assert s.kind == "conv", f"cannot merge unit kind {s.kind}"
+            if l in kept:
+                w, b = _folded_wb(s, layers_params[l - 1])
+                acc = compose(acc, w, b, s.stride, s.depthwise)
+            l += 1
+        if acc is None:   # fully pruned segment — identity conv
+            c = net.boundary_shapes()[lo][2]
+            w0 = M.identity_kernel(c)
+            return (w0, jnp.zeros((c,), w0.dtype), 1, True)
+        return acc
+
+    return chain(seg.i, seg.j)
+
+
+def merge_network(net: ConvNet, params, plan: CompressionPlan
+                  ) -> list[MergedUnit]:
+    units: list[MergedUnit] = []
+    layers = params["layers"]
+    for seg in plan.segments:
+        s_last = net.spec(seg.j)
+        if s_last.kind != "conv":
+            assert seg.j - seg.i == 1, "barrier units are singleton segments"
+            units.append(MergedUnit(kind=s_last.kind, seg=seg,
+                                    stride=s_last.stride,
+                                    params_ref=layers[seg.j - 1],
+                                    act=s_last.act))
+            continue
+        w, b, stride, dw = merge_segment(net, layers, seg)
+        gn, gn_groups = _segment_gn(net, layers, seg)
+        act = s_last.act
+        if net.act_after_merge and not seg.original and act == "none":
+            act = "relu6"
+        units.append(MergedUnit(kind="conv", seg=seg, w=w, b=b, stride=stride,
+                                depthwise=dw, gn=gn, gn_groups=gn_groups,
+                                act=act))
+    return units
+
+
+def apply_merged(net: ConvNet, params, units: list[MergedUnit], x):
+    saved: dict[int, jax.Array] = {}
+    need_save = {sk.start for sk in net.skips}
+    add_end = {sk.end: (sk.start, i) for i, sk in enumerate(net.skips)
+               if sk.kind == "add"}
+    cat_end = {sk.end: sk.start for sk in net.skips if sk.kind == "concat"}
+    if 0 in need_save:
+        saved[0] = x
+    for unit in units:
+        seg = unit.seg
+        if unit.kind == "conv":
+            Km = unit.w.shape[0]
+            lo = (Km - 1) // 2
+            hi = Km - 1 - lo
+            if Km > 1:
+                x = jnp.pad(x, ((0, 0), (lo, hi), (lo, hi), (0, 0)))
+            x = _conv(x, unit.w, unit.stride, unit.depthwise) + unit.b
+            # a skip-add whose block spans whole segments ends here; blocks
+            # with start >= seg.i were Dirac-fused inside merge_segment
+            # (proj blocks are never fused)
+            if seg.j in add_end:
+                src, ski = add_end[seg.j]
+                if src < seg.i or net.skips[ski].proj:
+                    base = saved[src]
+                    if net.skips[ski].proj:
+                        base = _apply_proj(base, params["skips"][ski],
+                                           _skip_stride(net, net.skips[ski]))
+                    x = x + base
+            if seg.j in cat_end:
+                x = jnp.concatenate([x, saved[cat_end[seg.j]]], axis=-1)
+            if unit.gn is not None:
+                x = _gn(x, unit.gn, unit.gn_groups)
+            if seg.j < net.L:
+                x = _act(x, unit.act)
+        elif unit.kind == "pool":
+            s = net.spec(seg.j)
+            x = lax.reduce_window(x, 0.0, lax.add, (1, s.k, s.k, 1),
+                                  (1, s.stride, s.stride, 1),
+                                  "SAME") / (s.k * s.k)
+            if seg.j in cat_end:
+                x = jnp.concatenate([x, saved[cat_end[seg.j]]], axis=-1)
+        elif unit.kind == "upsample":
+            n, h, w_, c = x.shape
+            x = jax.image.resize(
+                x, (n, h * unit.stride, w_ * unit.stride, c), "nearest")
+            if seg.j in cat_end:
+                x = jnp.concatenate([x, saved[cat_end[seg.j]]], axis=-1)
+        elif unit.kind == "attn":
+            x = _tiny_self_attention(x, unit.params_ref)
+        if seg.j in need_save:
+            saved[seg.j] = x
+    return _apply_head(net, params, x)

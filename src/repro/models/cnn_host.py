@@ -1,0 +1,115 @@
+"""Host adapter: plan-aware CNNs → the generic LayerMerge core."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.latency import CostBreakdown, conv2d_cost
+from repro.core.plan import CompressionPlan, LayerDesc, Segment
+from repro.core.segments import SegmentEnumerator
+
+from . import cnn
+
+
+@dataclasses.dataclass
+class CNNHost:
+    net: cnn.ConvNet
+    params: dict                      # pre-trained parameters
+    batch: int = 8                    # batch size for cost/latency accounting
+    dtype_bytes: int = 2
+    max_span: int | None = None
+
+    def __post_init__(self):
+        self._descs = self.net.layer_descs(self.params)
+        self._shapes = self.net.boundary_shapes()
+
+    # -- core protocol ---------------------------------------------------------
+    def descs(self) -> list[LayerDesc]:
+        return self._descs
+
+    def enumerator(self, method: str = "layermerge") -> SegmentEnumerator:
+        return SegmentEnumerator(
+            self._descs, offset=1, cap=None,
+            allowed_span=self.net.allowed_span,
+            depth_mode=(method == "depth"),
+            max_span=self.max_span)
+
+    def original_k(self, l: int) -> int:
+        return self._descs[l - 1].growth + 1
+
+    def pruned_k(self, l: int) -> int:
+        return 1
+
+    # -- latency ----------------------------------------------------------------
+    def segment_cost(self, seg: Segment) -> CostBreakdown:
+        """Analytic cost of the merged segment at its true input shape."""
+        h, w, cin = self._shapes[seg.i]
+        _, _, cout = self._shapes[seg.j]
+        s_last = self.net.spec(seg.j)
+        if s_last.kind != "conv":
+            if s_last.kind == "attn":
+                n = h * w
+                c = cin
+                flops = 4 * 2 * n * c * c + 2 * n * n * c * 2
+                return CostBreakdown(flops * self.batch,
+                                     4 * n * c * self.dtype_bytes * self.batch)
+            return CostBreakdown(0.0, h * w * cin * self.dtype_bytes
+                                 * self.batch * 2)
+        K, S = cnn.segment_geometry(self.net, seg)
+        kept = set(seg.kept)
+        dw = all(self.net.spec(l).depthwise for l in seg.layers
+                 if l in kept and self.net.spec(l).kind == "conv") and kept
+        return conv2d_cost(h, w, cin, cout, K, stride=S, depthwise=bool(dw),
+                           dtype_bytes=self.dtype_bytes, batch=self.batch)
+
+    def segment_callable(self, seg: Segment, params=None):
+        """Zero-arg jitted merged-segment forward for wall-clock timing."""
+        params = params or self.params
+        h, w, cin = self._shapes[seg.i]
+        x = jnp.zeros((self.batch, h, w, cin), jnp.float32)
+        s_last = self.net.spec(seg.j)
+        if s_last.kind != "conv":
+            p = params["layers"][seg.j - 1]
+
+            @jax.jit
+            def barrier_fn(x):
+                if s_last.kind == "attn":
+                    return cnn._tiny_self_attention(x, p)
+                if s_last.kind == "pool":
+                    return jax.lax.reduce_window(
+                        x, 0.0, jax.lax.add, (1, s_last.k, s_last.k, 1),
+                        (1, s_last.stride, s_last.stride, 1),
+                        "SAME") / (s_last.k * s_last.k)
+                n, hh, ww, c = x.shape
+                return jax.image.resize(
+                    x, (n, hh * s_last.stride, ww * s_last.stride, c),
+                    "nearest")
+            return lambda: barrier_fn(x)
+        wgt, b, stride, dw = cnn.merge_segment(self.net, params["layers"], seg)
+        K = wgt.shape[0]
+        lo, hi = (K - 1) // 2, (K - 1) - (K - 1) // 2
+
+        @jax.jit
+        def fn(x, wgt, b):
+            xp = jnp.pad(x, ((0, 0), (lo, hi), (lo, hi), (0, 0))) if K > 1 else x
+            return cnn._conv(xp, wgt, stride, dw) + b
+        return lambda: fn(x, wgt, b)
+
+    # -- network builders ---------------------------------------------------------
+    def replaced_apply(self, plan: CompressionPlan, params=None):
+        params = params or self.params
+
+        def apply_fn(p, x):
+            return cnn.apply_replaced(self.net, p, x, plan)
+        return apply_fn, params
+
+    def merged_apply(self, plan: CompressionPlan, params=None):
+        params = params or self.params
+        units = cnn.merge_network(self.net, params, plan)
+
+        def apply_fn(p, x):
+            return cnn.apply_merged(self.net, p, units, x)
+        return apply_fn, params

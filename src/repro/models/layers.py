@@ -1,0 +1,262 @@
+"""Transformer building blocks — pure functions over explicit param pytrees.
+
+Every ``init_*`` returns ``(params, axes)`` where ``axes`` mirrors the param
+tree with *logical axis name tuples* (MaxText-style).  ``sharding/rules.py``
+maps logical names → mesh axes to build PartitionSpecs for pjit, so the same
+model definition serves 1-device smoke tests and 512-chip dry-runs.
+
+Logical axis vocabulary:
+  'embed'   — d_model;          'heads' — query heads;   'kv'   — kv heads
+  'head'    — head_dim;         'ffn'   — ffn hidden;    'vocab'— vocabulary
+  'experts' — MoE expert count; 'rank'  — merged-FFN rank (LayerMerge)
+  'layers'  — stacked-scan layer axis (never sharded)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * lax.rsqrt(var + eps).astype(x.dtype)
+    return y * (1.0 + scale.astype(x.dtype))
+
+
+def init_rmsnorm(d, dtype):
+    return jnp.zeros((d,), dtype), ("embed",)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE and multimodal M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float = 10000.0,
+                sections=(0.25, 0.375, 0.375)):
+    """Qwen2-VL M-RoPE: head_dim split into (temporal, height, width)
+    sections, each rotated by its own position stream.
+
+    x: (B, S, H, D); positions3: (3, B, S).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    sec = [int(round(s * half)) for s in sections]
+    sec[-1] = half - sum(sec[:-1])
+    freqs = rope_freqs(d, theta)                       # (half,)
+    # build per-frequency position stream by section
+    pos_parts = []
+    for i, n in enumerate(sec):
+        pos_parts.append(jnp.broadcast_to(positions3[i][..., None],
+                                          positions3[i].shape + (n,)))
+    pos = jnp.concatenate(pos_parts, axis=-1)          # (B, S, half)
+    ang = pos.astype(jnp.float32) * freqs              # (B, S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / MQA, causal, optional local window, KV cache)
+# ---------------------------------------------------------------------------
+
+def attention_axes(cfg):
+    ax = {"wq": ("embed", "heads", "head"), "wk": ("embed", "kv", "head"),
+          "wv": ("embed", "kv", "head"), "wo": ("heads", "head", "embed")}
+    if cfg.qkv_bias:
+        ax.update({"bq": ("heads", "head"), "bk": ("kv", "head"),
+                   "bv": ("kv", "head")})
+    return ax
+
+
+def init_attention(cfg, key, dtype):
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {"wq": jax.random.normal(ks[0], (d, h, hd), dtype) * s,
+         "wk": jax.random.normal(ks[1], (d, kvh, hd), dtype) * s,
+         "wv": jax.random.normal(ks[2], (d, kvh, hd), dtype) * s,
+         "wo": jax.random.normal(ks[3], (h, hd, d), dtype) * s}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kvh, hd), dtype)
+        p["bv"] = jnp.zeros((kvh, hd), dtype)
+    return p, attention_axes(cfg)
+
+
+def _qkv(p, x, cfg, positions, mrope_positions=None):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.rope_kind == "mrope" and mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.rope_theta)
+        k = apply_mrope(k, mrope_positions, cfg.rope_theta)
+    elif cfg.rope_kind != "none":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg):
+    """Reference scaled-dot-product attention with GQA head grouping.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, KVH, D); mask: (B|1, 1, Sq, Skv) bool.
+    The Pallas flash-attention kernel (kernels/flash_attention.py) replaces
+    this on TPU; XLA fuses this form acceptably for the dry-run.
+    """
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    group = h // kvh
+    qg = q.reshape(b, sq, kvh, group, d)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k) / math.sqrt(d)
+    logits = logits.astype(jnp.float32)
+    neg = jnp.finfo(jnp.float32).min
+    logits = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask,
+                       logits, neg)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, sq, h, d)
+
+
+def causal_mask(sq, skv, offset=0, window: int = 0):
+    """(1, 1, sq, skv) bool; ``offset`` = absolute position of q[0]."""
+    qpos = jnp.arange(sq)[:, None] + offset
+    kpos = jnp.arange(skv)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m[None, None]
+
+
+def attention(p, x, cfg, positions, *, window: int = 0,
+              mrope_positions=None):
+    """Full (training / prefill) causal attention."""
+    q, k, v = _qkv(p, x, cfg, positions, mrope_positions)
+    mask = causal_mask(x.shape[1], x.shape[1], 0, window)
+    out = _sdpa(q, k, v, mask, cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def attention_decode(p, x, cfg, cache, *, window: int = 0,
+                     mrope_positions=None):
+    """One-token decode against a KV cache.
+
+    cache: {"k": (B, S, KVH, D), "v": ..., "pos": ()} — ``pos`` is the number
+    of tokens already in the cache.  For windowed attention the cache is a
+    ring buffer of size ``window``.
+    """
+    pos = cache["pos"]
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k, v = _qkv(p, x, cfg, positions, mrope_positions)
+    size = cache["k"].shape[1]
+    slot = (pos % size) if window > 0 else pos
+    ck = lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    kpos = jnp.arange(size)
+    if window > 0:
+        # ring buffer: entry i holds absolute position derived from slot
+        abs_pos = jnp.where(kpos <= slot, pos - slot + kpos,
+                            pos - slot - size + kpos)
+        valid = (abs_pos >= 0) & (abs_pos <= pos) & (abs_pos > pos - size)
+    else:
+        valid = kpos <= pos
+    from repro.sharding.rules import current_rules
+    rules = current_rules()
+    if getattr(cfg, "decode_flash", False) and rules is not None \
+            and rules.mesh is not None and "model" in rules.mesh.shape:
+        # flash-decoding: seq-sharded cache, distributed LSE combine (§Perf)
+        from repro.sharding.collectives import flash_decode_attention
+        vmask = jnp.broadcast_to(valid[None, :], (x.shape[0], size))
+        out = flash_decode_attention(q[:, 0], ck, cv, vmask,
+                                     mesh=rules.mesh, axis="model")
+        out = out[:, None]
+    else:
+        mask = valid[None, None, None, :]
+        out = _sdpa(q, ck, cv, mask, cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": ck, "v": cv, "pos": pos + 1}
+
+
+def init_cache(cfg, batch, seq_len, dtype, window: int = 0):
+    size = min(seq_len, window) if window > 0 else seq_len
+    shape = (batch, size, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+CACHE_AXES = {"k": ("batch", "kv_seq", "kv", "head"),
+              "v": ("batch", "kv_seq", "kv", "head"), "pos": ()}
+
+
+# ---------------------------------------------------------------------------
+# FFN family (GeGLU / SwiGLU / GELU) + LayerMerge rank-merged FFN
+# ---------------------------------------------------------------------------
+
+def ffn_axes(kind):
+    ax = {"w_up": ("embed", "ffn"), "w_down": ("ffn", "embed")}
+    if kind in ("geglu", "swiglu"):
+        ax["w_gate"] = ("embed", "ffn")
+    return ax
+
+
+def init_ffn(d, dff, kind, key, dtype):
+    ks = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(dff)
+    p = {"w_up": jax.random.normal(ks[0], (d, dff), dtype) * s_in,
+         "w_down": jax.random.normal(ks[1], (dff, d), dtype) * s_out}
+    if kind in ("geglu", "swiglu"):
+        p["w_gate"] = jax.random.normal(ks[2], (d, dff), dtype) * s_in
+    return p, ffn_axes(kind)
+
+
+def ffn(p, x, kind):
+    up = x @ p["w_up"]
+    if kind == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"]) * up
+    elif kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ p["w_down"]
+
+
+def merged_ffn(u, v, x):
+    """LayerMerge rank-``r`` residual map: ``x + (x·U)·V`` (see DESIGN §2.1).
+
+    The Pallas kernel (kernels/merged_ffn.py) fuses both GEMMs + the residual
+    add; this jnp form is the oracle and the dry-run path.
+    """
+    return x + (x @ u) @ v
+
+
+def init_embedding(vocab, d, key, dtype):
+    p = jax.random.normal(key, (vocab, d), dtype) / math.sqrt(d)
+    return p, ("vocab", "embed")

@@ -1,0 +1,119 @@
+"""RG-LRU recurrence block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The temporal mixing block is: linear in/out projections, a 1D depthwise
+conv (width 4), and the Real-Gated Linear Recurrence Unit::
+
+    r_t = σ(x_t W_a)                     (recurrence gate)
+    i_t = σ(x_t W_x)                     (input gate)
+    a_t = exp(-c · softplus(Λ) · r_t)    (per-channel decay, c = 8)
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+The recurrence is evaluated with ``jax.lax.associative_scan`` (O(log S)
+depth) for train/prefill and as a single fused state update for decode.
+A Pallas kernel (kernels/rglru_scan.py) provides the TPU-tiled version.
+
+LayerMerge note: gates are input-dependent — the block is prunable, not
+linearizable (DESIGN §2.3).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+C_DECAY = 8.0
+
+
+def rglru_axes():
+    return {"w_in": ("embed", "ffn"), "w_out": ("ffn", "embed"),
+            "conv_w": (None, "ffn"), "conv_b": ("ffn",),
+            "w_a": ("ffn", "ffn_in"), "w_x": ("ffn", "ffn_in"),
+            "lam": ("ffn",)}
+
+
+def init_rglru(cfg, key, dtype):
+    d = cfg.d_model
+    dr = cfg.rnn_width or d
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "w_in": jax.random.normal(ks[0], (d, dr), dtype) * s,
+        "w_out": jax.random.normal(ks[1], (dr, d), dtype) / math.sqrt(dr),
+        "conv_w": jax.random.normal(ks[2], (4, dr), dtype) * 0.1,
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_a": jax.random.normal(ks[3], (dr, dr), dtype) / math.sqrt(dr),
+        "w_x": jax.random.normal(ks[4], (dr, dr), dtype) / math.sqrt(dr),
+        # Λ init so that a spans (0.9, 0.999) as in the paper
+        "lam": jnp.asarray(
+            jnp.log(jnp.expm1(-jnp.log(
+                jax.random.uniform(ks[5], (dr,), jnp.float32,
+                                   0.9 ** C_DECAY, 0.999 ** C_DECAY)))),
+            dtype),
+    }
+    return p, rglru_axes()
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(u @ p["w_a"])
+    i = jax.nn.sigmoid(u @ p["w_x"])
+    log_a = -C_DECAY * jax.nn.softplus(p["lam"].astype(jnp.float32)) \
+        * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i.astype(jnp.float32) * u.astype(jnp.float32))
+    return a, gated
+
+
+def _causal_conv1d(p, u, state=None):
+    """Width-4 depthwise causal conv.  state: (B, 3, Dr) trailing inputs."""
+    w, b = p["conv_w"], p["conv_b"]
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([state.astype(u.dtype), u], axis=1)
+    out = sum(pad[:, i:i + u.shape[1]] * w[i] for i in range(k)) + b
+    new_state = pad[:, -(k - 1):]
+    return out, new_state
+
+
+def rglru_scan(a, gated, h0=None):
+    """Associative scan of h_t = a_t h_{t-1} + gated_t over axis 1."""
+    if h0 is not None:
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h
+
+
+def rglru_block(p, x, cfg):
+    """Full temporal block for train/prefill: (B, S, D) → (B, S, D)."""
+    u = x @ p["w_in"]
+    u, _ = _causal_conv1d(p, u)
+    a, gated = _gates(p, u)
+    h = rglru_scan(a, gated)
+    return (h.astype(x.dtype) * jax.nn.gelu(u)) @ p["w_out"]
+
+
+def rglru_decode(p, x, cfg, state):
+    """One-step decode.  state: {"h": (B, Dr) f32, "conv": (B, 3, Dr)}."""
+    u = x @ p["w_in"]                                   # (B, 1, Dr)
+    u, conv_state = _causal_conv1d(p, u, state["conv"])
+    a, gated = _gates(p, u)
+    h = a[:, 0] * state["h"] + gated[:, 0]              # (B, Dr)
+    y = (h[:, None].astype(x.dtype) * jax.nn.gelu(u)) @ p["w_out"]
+    return y, {"h": h, "conv": conv_state}
+
+
+def init_rglru_state(cfg, batch, dtype):
+    dr = cfg.rnn_width or cfg.d_model
+    return {"h": jnp.zeros((batch, dr), jnp.float32),
+            "conv": jnp.zeros((batch, 3, dr), dtype)}
+
+
+RGLRU_STATE_AXES = {"h": ("batch", "ffn"), "conv": ("batch", None, "ffn")}

@@ -1,0 +1,424 @@
+"""Decoder stack assembly — scan-over-layers, KV-cache decode, and the
+LayerMerge-compressed variant.
+
+The stack is a sequence of *layer groups*: maximal runs of layers with the
+same temporal kind (attn / attn_local / rglru / mlstm / slstm).  Params are
+stacked per group and applied with ``lax.scan`` so tracing cost is O(#groups)
+not O(#layers) — essential for the 512-device dry-run.
+
+Three entry points:
+* ``forward(cfg, params, batch)``            — train/prefill logits
+* ``decode_step(cfg, params, cache, batch)`` — one-token serve step
+* ``forward_compressed(...)``                — plan-aware compressed net
+  (merged rank-FFN segments + pruned blocks), used by the LayerMerge host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding.rules import logical_constraint
+
+from . import layers as L
+from . import moe as MOE
+from . import rglru as RG
+from . import xlstm as XL
+
+
+# ---------------------------------------------------------------------------
+# Layer groups
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    kind: str
+    count: int
+    start: int      # first layer index (0-based)
+
+
+def layer_groups(cfg) -> tuple[GroupSpec, ...]:
+    kinds = cfg.layer_kinds()
+    groups = []
+    i = 0
+    while i < len(kinds):
+        j = i
+        while j < len(kinds) and kinds[j] == kinds[i]:
+            j += 1
+        groups.append(GroupSpec(kind=kinds[i], count=j - i, start=i))
+        i = j
+    return tuple(groups)
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_temporal(cfg, kind, key, dtype):
+    if kind in ("attn", "attn_local"):
+        return L.init_attention(cfg, key, dtype)
+    if kind == "rglru":
+        return RG.init_rglru(cfg, key, dtype)
+    if kind == "mlstm":
+        return XL.init_mlstm(cfg, key, dtype)
+    if kind == "slstm":
+        return XL.init_slstm(cfg, key, dtype)
+    raise ValueError(kind)
+
+
+def _init_layer(cfg, kind, key, dtype):
+    k1, k2 = jax.random.split(key)
+    n1, n1_ax = L.init_rmsnorm(cfg.d_model, dtype)
+    p = {"norm1": n1}
+    ax = {"norm1": n1_ax}
+    p["temporal"], ax["temporal"] = _init_temporal(cfg, kind, k1, dtype)
+    if cfg.has_ffn:
+        n2, n2_ax = L.init_rmsnorm(cfg.d_model, dtype)
+        p["norm2"] = n2
+        ax["norm2"] = n2_ax
+        if cfg.is_moe:
+            p["ffn"], ax["ffn"] = MOE.init_moe(cfg, k2, dtype)
+        else:
+            p["ffn"], ax["ffn"] = L.init_ffn(cfg.d_model, cfg.d_ff,
+                                             cfg.ffn_kind, k2, dtype)
+    return p, ax
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _stack_axes(ax):
+    """Prepend the scan 'layers' axis to every logical-axes tuple."""
+    return jax.tree.map(
+        lambda a: ("layers",) + tuple(a) if a is not None else ("layers",),
+        ax, is_leaf=lambda x: isinstance(x, tuple) or x is None)
+
+
+def _layer_axes(cfg, kind):
+    ax = {"norm1": ("embed",)}
+    if kind in ("attn", "attn_local"):
+        ax["temporal"] = L.attention_axes(cfg)
+    elif kind == "rglru":
+        ax["temporal"] = RG.rglru_axes()
+    elif kind == "mlstm":
+        ax["temporal"] = XL.mlstm_axes()
+    elif kind == "slstm":
+        ax["temporal"] = XL.slstm_axes()
+    else:
+        raise ValueError(kind)
+    if cfg.has_ffn:
+        ax["norm2"] = ("embed",)
+        ax["ffn"] = MOE.moe_axes() if cfg.is_moe else L.ffn_axes(cfg.ffn_kind)
+    return ax
+
+
+def model_axes(cfg):
+    """Static logical-axes tree mirroring init_model's params (no tracing)."""
+    axes = {"groups": [_stack_axes(_layer_axes(cfg, g.kind))
+                       for g in layer_groups(cfg)],
+            "final_norm": ("embed",)}
+    if cfg.frontend == "tokens":
+        axes["embed"] = ("vocab", "embed")
+    if not cfg.tie_embeddings or cfg.frontend != "tokens":
+        axes["unembed"] = ("embed", "vocab")
+    return axes
+
+
+def init_model(cfg, key):
+    dtype = _dtype(cfg)
+    groups = layer_groups(cfg)
+    keys = jax.random.split(key, len(groups) + 2)
+    gparams = []
+    for gi, g in enumerate(groups):
+        lkeys = jax.random.split(keys[gi], g.count)
+        ps = [_init_layer(cfg, g.kind, k, dtype)[0] for k in lkeys]
+        gparams.append(_stack(ps))
+    params = {"groups": gparams}
+    params["final_norm"], _ = L.init_rmsnorm(cfg.d_model, dtype)
+    if cfg.frontend == "tokens":
+        params["embed"], _ = L.init_embedding(
+            cfg.vocab_size, cfg.d_model, keys[-1], dtype)
+    if not cfg.tie_embeddings or cfg.frontend != "tokens":
+        params["unembed"] = jax.random.normal(
+            keys[-2], (cfg.d_model, cfg.vocab_size), dtype) \
+            / math.sqrt(cfg.d_model)
+    return params, model_axes(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _temporal_apply(cfg, kind, lp, h, positions, mrope_positions):
+    if kind in ("attn", "attn_local"):
+        window = cfg.local_window if kind == "attn_local" else 0
+        return L.attention(lp, h, cfg, positions, window=window,
+                           mrope_positions=mrope_positions)
+    if kind == "rglru":
+        return RG.rglru_block(lp, h, cfg)
+    if kind == "mlstm":
+        return XL.mlstm_block(lp, h, cfg)
+    if kind == "slstm":
+        return XL.slstm_block(lp, h, cfg)
+    raise ValueError(kind)
+
+
+def _layer_fn(cfg, kind, positions, mrope_positions, lp, x):
+    h = L.rms_norm(x, lp["norm1"], cfg.norm_eps)
+    t = _temporal_apply(cfg, kind, lp["temporal"], h, positions,
+                        mrope_positions)
+    x = logical_constraint(x + t, ("batch", "seq", "act_embed"))
+    if cfg.has_ffn:
+        h = L.rms_norm(x, lp["norm2"], cfg.norm_eps)
+        if cfg.is_moe:
+            f = MOE.moe_dispatch(lp["ffn"], h, cfg,
+                                 capacity_factor=cfg.capacity_factor)
+        else:
+            f = L.ffn(lp["ffn"], h, cfg.ffn_kind)
+        x = logical_constraint(x + f, ("batch", "seq", "act_embed"))
+    return x
+
+
+def _embed_in(cfg, params, batch):
+    if cfg.frontend == "tokens":
+        x = params["embed"][batch["tokens"]]
+    else:
+        x = batch["embeds"].astype(_dtype(cfg))
+    return logical_constraint(x, ("batch", "seq", "act_embed"))
+
+
+def _unembed(cfg, params, x):
+    if cfg.tie_embeddings and cfg.frontend == "tokens":
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["unembed"]
+    return logical_constraint(logits, ("batch", "seq", "act_vocab"))
+
+
+def forward(cfg, params, batch):
+    """Logits for train/prefill.  batch: tokens|embeds, positions[, mrope]."""
+    x = _embed_in(cfg, params, batch)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.arange(x.shape[1])[None, :]
+    mrope = batch.get("mrope_positions")
+    for g, gp in zip(layer_groups(cfg), params["groups"]):
+        fn = functools.partial(_layer_fn, cfg, g.kind, positions, mrope)
+        if cfg.remat:
+            fn = jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+        def body(carry, lp, fn=fn):
+            return fn(lp, carry), None
+        if cfg.scan_layers and g.count > 1:
+            x, _ = lax.scan(body, x, gp)
+        else:
+            for i in range(g.count):
+                x = fn(jax.tree.map(lambda t: t[i], gp), x)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(cfg, params, x)
+
+
+@jax.custom_vjp
+def upcast_for_loss(x):
+    """f32 view of bf16 logits whose COTANGENT stays bf16.
+
+    Without this, the f32 loss cast promotes the entire backward pass to
+    f32 — every TP activation psum and dL/dx all-reduce doubles in bytes
+    (measured: ~3.6 GB/layer of f32[16,4096,2048] all-reduce at qwen3-moe
+    train_4k; see EXPERIMENTS §Perf iteration 4)."""
+    return x.astype(jnp.float32)
+
+
+def _upcast_fwd(x):
+    return x.astype(jnp.float32), jnp.zeros((0,), x.dtype)
+
+
+def _upcast_bwd(res, g):
+    return (g.astype(res.dtype),)
+
+
+upcast_for_loss.defvjp(_upcast_fwd, _upcast_bwd)
+
+
+def lm_loss(cfg, params, batch):
+    """Causal LM cross-entropy (fp32 softmax, bf16 cotangents)."""
+    logits = upcast_for_loss(forward(cfg, params, batch))
+    targets = batch["targets"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch_size, seq_len):
+    """Cache pytree aligned with layer groups (stacked per group)."""
+    dtype = _dtype(cfg)
+    caches = []
+    for g in layer_groups(cfg):
+        if g.kind in ("attn", "attn_local"):
+            window = cfg.local_window if g.kind == "attn_local" else 0
+            one = L.init_cache(cfg, batch_size, seq_len, dtype, window=window)
+        elif g.kind == "rglru":
+            one = RG.init_rglru_state(cfg, batch_size, dtype)
+        elif g.kind == "mlstm":
+            one = XL.init_mlstm_state(cfg, batch_size)
+        elif g.kind == "slstm":
+            one = XL.init_slstm_state(cfg, batch_size)
+        else:
+            one = {}
+        caches.append(jax.tree.map(
+            lambda t: jnp.broadcast_to(t, (g.count,) + t.shape), one))
+    return caches
+
+
+def cache_axes(cfg):
+    """Logical axes for the cache pytree (for dry-run in_shardings)."""
+    out = []
+    for g in layer_groups(cfg):
+        if g.kind in ("attn", "attn_local"):
+            ax = dict(L.CACHE_AXES)
+        elif g.kind == "rglru":
+            ax = dict(RG.RGLRU_STATE_AXES)
+        elif g.kind == "mlstm":
+            ax = dict(XL.MLSTM_STATE_AXES)
+        elif g.kind == "slstm":
+            ax = dict(XL.SLSTM_STATE_AXES)
+        else:
+            ax = {}
+        out.append(jax.tree.map(
+            lambda a: ("layers",) + tuple(a),
+            ax, is_leaf=lambda x: isinstance(x, tuple)))
+    return out
+
+
+def _decode_layer_fn(cfg, kind, mrope_positions, lp, cache, x):
+    h = L.rms_norm(x, lp["norm1"], cfg.norm_eps)
+    if kind in ("attn", "attn_local"):
+        window = cfg.local_window if kind == "attn_local" else 0
+        t, cache = L.attention_decode(lp["temporal"], h, cfg, cache,
+                                      window=window,
+                                      mrope_positions=mrope_positions)
+    elif kind == "rglru":
+        t, cache = RG.rglru_decode(lp["temporal"], h, cfg, cache)
+    elif kind == "mlstm":
+        t, cache = XL.mlstm_decode(lp["temporal"], h, cfg, cache)
+    elif kind == "slstm":
+        t, cache = XL.slstm_decode(lp["temporal"], h, cfg, cache)
+    else:
+        raise ValueError(kind)
+    x = logical_constraint(x + t, ("batch", "seq", "act_embed"))
+    if cfg.has_ffn:
+        h = L.rms_norm(x, lp["norm2"], cfg.norm_eps)
+        if cfg.is_moe:
+            f = MOE.moe_dispatch(lp["ffn"], h, cfg,
+                                 capacity_factor=cfg.capacity_factor)
+        else:
+            f = L.ffn(lp["ffn"], h, cfg.ffn_kind)
+        x = logical_constraint(x + f, ("batch", "seq", "act_embed"))
+    return x, cache
+
+
+def decode_step(cfg, params, cache, batch):
+    """One-token decode: batch {'tokens': (B,1)|'embeds': (B,1,D)} → logits."""
+    x = _embed_in(cfg, params, batch)
+    mrope = batch.get("mrope_positions")
+    new_cache = []
+    for g, gp, gc in zip(layer_groups(cfg), params["groups"], cache):
+        fn = functools.partial(_decode_layer_fn, cfg, g.kind, mrope)
+
+        def body(carry, xs, fn=fn):
+            lp, c = xs
+            x, c = fn(lp, c, carry)
+            return x, c
+        if cfg.scan_layers and g.count > 1:
+            x, gc = lax.scan(body, x, (gp, gc))
+        else:
+            outs = []
+            for i in range(g.count):
+                x, ci = fn(jax.tree.map(lambda t: t[i], gp),
+                           jax.tree.map(lambda t: t[i], gc), x)
+                outs.append(ci)
+            gc = _stack(outs)
+        new_cache.append(gc)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(cfg, params, x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# LayerMerge-compressed forward (plan-aware)
+# ---------------------------------------------------------------------------
+
+def sublayer_kinds(cfg) -> tuple[str, ...]:
+    """Flattened sublayer chain: temporal and FFN blocks interleaved —
+    this is the 1-based layer indexing the compression plan refers to."""
+    out = []
+    for kind in cfg.layer_kinds():
+        out.append(kind)
+        if cfg.has_ffn:
+            out.append("moe" if cfg.is_moe else "ffn")
+    return tuple(out)
+
+
+def sublayer_params(cfg, params):
+    """Unstacked per-sublayer param list aligned with sublayer_kinds."""
+    out = []
+    for g, gp in zip(layer_groups(cfg), params["groups"]):
+        for i in range(g.count):
+            lp = jax.tree.map(lambda t: t[i], gp)
+            out.append({"norm": lp["norm1"], "p": lp["temporal"],
+                        "kind": g.kind})
+            if cfg.has_ffn:
+                out.append({"norm": lp["norm2"], "p": lp["ffn"],
+                            "kind": "moe" if cfg.is_moe else "ffn"})
+    return out
+
+
+def forward_compressed(cfg, params, units, batch):
+    """Forward through compressed units (see transformer_host.build_units).
+
+    ``units`` is a list of ('orig', sub) | ('merged', (u, v)) | ('skip',)
+    produced from a CompressionPlan; python loop is fine — compressed nets
+    are shallow by construction.
+    """
+    x = _embed_in(cfg, params, batch)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.arange(x.shape[1])[None, :]
+    mrope = batch.get("mrope_positions")
+    for unit in units:
+        if unit[0] == "skip":
+            continue
+        if unit[0] == "merged":
+            u, v = unit[1]
+            x = L.merged_ffn(u, v, x)
+            continue
+        sub = unit[1]
+        h = L.rms_norm(x, sub["norm"], cfg.norm_eps)
+        kind = sub["kind"]
+        if kind in ("attn", "attn_local", "rglru", "mlstm", "slstm"):
+            t = _temporal_apply(cfg, kind, sub["p"], h, positions, mrope)
+        elif kind == "moe":
+            t = MOE.moe_ffn(sub["p"], h, cfg,
+                            capacity_factor=cfg.capacity_factor)
+        else:
+            t = L.ffn(sub["p"], h, cfg.ffn_kind)
+        x = x + t
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(cfg, params, x)

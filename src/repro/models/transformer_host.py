@@ -1,0 +1,377 @@
+"""Host adapter: transformer stacks → the generic LayerMerge core.
+
+Sublayer chain (1-based): temporal and FFN blocks interleaved
+(``transformer.sublayer_kinds``), plus a virtual ``head`` boundary at the
+end (growth 0, zero latency, always kept) so segments may end at the top of
+the stack.  Block capability model per DESIGN §2.3:
+
+* FFN / GLU-FFN — prunable, linearizable with growth = min(d_ff, d): the
+  rank of the residual map (the Eq. 1 analogue).  Linearization folds the
+  pre-norm scale into W_up and (for GLU) keeps the value path.
+* attention / MoE / RG-LRU / mLSTM / sLSTM — prunable, NOT linearizable.
+
+Merged segments execute as one fused rank-k residual layer
+(kernels/merged_ffn.py on TPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import merge as M
+from repro.core.latency import CostBreakdown, matmul_cost, rank_ffn_cost
+from repro.core.plan import CompressionPlan, LayerDesc, Segment
+from repro.core.segments import SegmentEnumerator
+
+from . import transformer as T
+
+LINEARIZABLE = ("ffn",)
+HEAD_KIND = "head"
+
+
+@dataclasses.dataclass
+class CostEnv:
+    """Workload/hardware context for the analytic latency table."""
+    batch: int = 8
+    seq: int = 2048
+    chips: int = 1
+    dtype_bytes: int = 2
+
+
+@dataclasses.dataclass
+class TransformerHost:
+    cfg: object
+    params: dict
+    env: CostEnv = dataclasses.field(default_factory=CostEnv)
+    max_span: int | None = None
+
+    def __post_init__(self):
+        self.kinds = T.sublayer_kinds(self.cfg) + (HEAD_KIND,)
+        self.subparams = T.sublayer_params(self.cfg, self.params) + [None]
+        self._descs = self._build_descs()
+
+    # -- chain description -----------------------------------------------------
+    def _build_descs(self):
+        d = self.cfg.d_model
+        descs = []
+        for i, kind in enumerate(self.kinds):
+            idx = i + 1
+            if kind == HEAD_KIND:
+                descs.append(LayerDesc(index=idx, kind=kind, growth=0,
+                                       value=0.0, prunable=False,
+                                       linearizable=False))
+                continue
+            sp = self.subparams[i]
+            val = float(sum(jnp.sum(jnp.abs(x))
+                            for x in jax.tree.leaves(sp["p"])))
+            if kind == "ffn":
+                descs.append(LayerDesc(
+                    index=idx, kind=kind, growth=min(self.cfg.d_ff, d),
+                    value=val, prunable=True, linearizable=True))
+            else:
+                descs.append(LayerDesc(index=idx, kind=kind, growth=0,
+                                       value=val, prunable=True,
+                                       linearizable=False))
+        return descs
+
+    def descs(self):
+        return self._descs
+
+    def enumerator(self, method: str = "layermerge") -> SegmentEnumerator:
+        return SegmentEnumerator(
+            self._descs, offset=0, cap=self.cfg.d_model,
+            depth_mode=(method == "depth"), max_span=self.max_span)
+
+    def original_k(self, l: int) -> int:
+        return 0        # offset-0 convention: singleton original has k = 0
+
+    def pruned_k(self, l: int) -> int:
+        return 0
+
+    # -- latency ------------------------------------------------------------
+    def _block_cost(self, kind, idx=None) -> CostBreakdown:
+        cfg, env = self.cfg, self.env
+        d = cfg.d_model
+        tokens = env.batch * env.seq / max(env.chips, 1)
+        by = env.dtype_bytes
+        if kind == HEAD_KIND:
+            return CostBreakdown(0.0, 0.0)
+        if kind in ("attn", "attn_local"):
+            hd = cfg.head_dim
+            qk = matmul_cost(tokens, d, (cfg.num_heads + cfg.num_kv_heads * 2)
+                             * hd, by) + matmul_cost(tokens, cfg.num_heads * hd,
+                                                     d, by)
+            span = min(cfg.local_window or env.seq, env.seq)
+            attn_flops = 4.0 * tokens * span * cfg.num_heads * hd
+            return qk + CostBreakdown(attn_flops, tokens * span * by / 64)
+        if kind == "ffn":
+            mult = 3 if cfg.ffn_kind in ("swiglu", "geglu") else 2
+            return CostBreakdown(*[x * mult / 2 for x in
+                                   dataclasses.astuple(
+                                       matmul_cost(tokens, d, cfg.d_ff, by)
+                                       + matmul_cost(tokens, cfg.d_ff, d, by))])
+        if kind == "moe":
+            active = cfg.experts_per_token * 3
+            c = matmul_cost(tokens, d, cfg.moe_dff, by)
+            return CostBreakdown(c.flops * active, c.hbm_bytes * active,
+                                 2.0 * tokens * d * by)   # a2a dispatch
+        if kind in ("rglru",):
+            dr = cfg.rnn_width or d
+            return (matmul_cost(tokens, d, dr, by) * 2
+                    + matmul_cost(tokens, dr, 2 * dr, by)
+                    + CostBreakdown(8.0 * tokens * dr, 2 * tokens * dr * by))
+        if kind in ("mlstm", "slstm"):
+            return (matmul_cost(tokens, d, 4 * d, by)
+                    + CostBreakdown(12.0 * tokens * d, 4 * tokens * d * by))
+        raise ValueError(kind)
+
+    def segment_cost(self, seg: Segment) -> CostBreakdown:
+        cfg, env = self.cfg, self.env
+        tokens = env.batch * env.seq / max(env.chips, 1)
+        boundary_kind = self.kinds[seg.j - 1]
+        cost = self._block_cost(boundary_kind)
+        interior_kept = [l for l in seg.kept if l != seg.j]
+        if interior_kept or seg.j - seg.i > 1:
+            rank = min(seg.k, cfg.d_model)
+            if rank > 0:
+                cost = cost + rank_ffn_cost(tokens, cfg.d_model, rank,
+                                            env.dtype_bytes)
+        return cost
+
+    def segment_callable(self, seg: Segment, params=None):
+        """Jitted merged-segment forward for the wall-clock oracle."""
+        params = params or self.params
+        units = self._segment_units(seg, params)
+        x = jnp.zeros((max(self.env.batch, 1), max(self.env.seq, 8),
+                       self.cfg.d_model), jnp.float32)
+
+        @jax.jit
+        def fn(x):
+            return _apply_units(self.cfg, units, x)
+        return lambda: fn(x)
+
+    # -- unit construction -----------------------------------------------------
+    def _linear_factors(self, sub):
+        """(U, V) of one linearized FFN: norm scale folded into W_up."""
+        g = sub["norm"]
+        u = sub["p"]["w_up"] * (1.0 + g)[:, None]
+        v = sub["p"]["w_down"]
+        return u, v
+
+    def _segment_units(self, seg: Segment, params, merged: bool = True):
+        units = []
+        kept = set(seg.kept)
+        subs = T.sublayer_params(self.cfg, params) + [None]
+        interior = [l for l in seg.layers if l != seg.j or
+                    self.kinds[seg.j - 1] == HEAD_KIND]
+        boundary = None if self.kinds[seg.j - 1] == HEAD_KIND else seg.j
+        factors = []
+        for l in seg.layers:
+            if l == boundary or self.kinds[l - 1] == HEAD_KIND:
+                continue
+            if l in kept:
+                factors.append(self._linear_factors(subs[l - 1]))
+        if factors:
+            if merged:
+                u, v = M.merge_linear_residual_chain(factors)
+                u, v = M.truncate_rank(u, v, self.cfg.d_model)
+                units.append(("merged", (u, v)))
+            else:
+                for u, v in factors:
+                    units.append(("merged", (u, v)))   # unmerged rank maps
+        if boundary is not None and boundary in kept:
+            units.append(("orig", subs[boundary - 1]))
+        return units
+
+    def build_units(self, plan: CompressionPlan, params, merged: bool = True):
+        units = []
+        for seg in plan.segments:
+            if seg.original:
+                units.append(("orig",
+                              T.sublayer_params(self.cfg, params)[seg.j - 1]
+                              if self.kinds[seg.j - 1] != HEAD_KIND else
+                              ("skip",)))
+                continue
+            units.extend(self._segment_units(seg, params, merged=merged))
+        return [u for u in units if u != ("orig", ("skip",))]
+
+    # -- network builders --------------------------------------------------------
+    def replaced_apply(self, plan: CompressionPlan, params=None):
+        params = params or self.params
+
+        def apply_fn(p, batch):
+            units = self.build_units(plan, p, merged=False)
+            return T.forward_compressed(self.cfg, p, units, batch)
+        return apply_fn, params
+
+    def merged_apply(self, plan: CompressionPlan, params=None):
+        params = params or self.params
+
+        def apply_fn(p, batch):
+            units = self.build_units(plan, p, merged=True)
+            return T.forward_compressed(self.cfg, p, units, batch)
+        return apply_fn, params
+
+
+def abstract_plan(cfg, *, budget_ratio: float, env: CostEnv,
+                  P: int = 500, method: str = "layermerge"):
+    """Compute a compression plan WITHOUT materializing parameters.
+
+    Uses growth-proportional ℓ1 proxies (value = growth per sublayer) and
+    the analytic v5e latency oracle — exactly the table machinery of the
+    paper, minus measured importance.  This is how the dry-run lowers a
+    LayerMerge-compressed network at full production scale (§Perf)."""
+    from repro.core.compress import compress as _compress
+
+    kinds = T.sublayer_kinds(cfg) + (HEAD_KIND,)
+    d = cfg.d_model
+    descs = []
+    for i, kind in enumerate(kinds):
+        idx = i + 1
+        if kind == HEAD_KIND:
+            descs.append(LayerDesc(idx, kind, 0, 0.0, False, False))
+        elif kind == "ffn":
+            descs.append(LayerDesc(idx, kind, min(cfg.d_ff, d),
+                                   float(min(cfg.d_ff, d)), True, True))
+        else:
+            descs.append(LayerDesc(idx, kind, 0, float(d), True, False))
+    proto = TransformerHost.__new__(TransformerHost)
+    proto.cfg = cfg
+    proto.env = env
+    proto.kinds = kinds
+    proto._descs = descs
+    proto.max_span = None
+    host = proto
+    return _compress(host, budget_ratio=budget_ratio, P=P, method=method,
+                     importance="magnitude")
+
+
+def plan_units_spec(cfg, plan) -> list:
+    """Static unit descriptors for a plan: ('merged', rank) |
+    ('orig', sublayer_index, kind).  Abstractly instantiable."""
+    kinds = T.sublayer_kinds(cfg) + (HEAD_KIND,)
+    out = []
+    for seg in plan.segments:
+        kept = set(seg.kept)
+        boundary = None if kinds[seg.j - 1] == HEAD_KIND else seg.j
+        if seg.original:
+            if boundary is not None:
+                out.append(("orig", seg.j, kinds[seg.j - 1]))
+            continue
+        rank = 0
+        for l in seg.layers:
+            if l != boundary and kinds[l - 1] == "ffn" and l in kept:
+                rank += min(cfg.d_ff, cfg.d_model)
+        rank = min(rank, cfg.d_model)
+        if rank > 0:
+            out.append(("merged", rank))
+        if boundary is not None and boundary in kept:
+            out.append(("orig", boundary, kinds[boundary - 1]))
+    return out
+
+
+def init_compressed_model(cfg, units_spec, key):
+    """Real (or eval_shape-abstract) params for a compressed unit chain."""
+    import jax.random as jrandom
+
+    from . import layers as L
+    dtype = T._dtype(cfg)
+    keys = jrandom.split(key, len(units_spec) + 2)
+    unit_params = []
+    for i, spec in enumerate(units_spec):
+        if spec[0] == "merged":
+            r = spec[1]
+            d = cfg.d_model
+            unit_params.append({
+                "u": jrandom.normal(keys[i], (d, r), dtype) * 0.02,
+                "v": jrandom.normal(keys[i], (r, d), dtype) * 0.02})
+        else:
+            _, _, kind = spec
+            p, _ = T._init_layer(
+                cfg, kind if kind not in ("ffn", "moe") else
+                cfg.layer_kinds()[0], keys[i], dtype)
+            if kind in ("ffn", "moe"):
+                unit_params.append({"norm": p["norm2"], "p": p["ffn"]})
+            else:
+                unit_params.append({"norm": p["norm1"], "p": p["temporal"]})
+    params = {"units": unit_params}
+    params["final_norm"], _ = L.init_rmsnorm(cfg.d_model, dtype)
+    if cfg.frontend == "tokens":
+        params["embed"], _ = L.init_embedding(cfg.vocab_size, cfg.d_model,
+                                              keys[-1], dtype)
+    if not cfg.tie_embeddings or cfg.frontend != "tokens":
+        import math
+        params["unembed"] = jrandom.normal(
+            keys[-2], (cfg.d_model, cfg.vocab_size), dtype) \
+            / math.sqrt(cfg.d_model)
+    return params
+
+
+def compressed_model_axes(cfg, units_spec):
+    from . import layers as L
+    from . import moe as MOE
+    from . import rglru as RG
+    from . import xlstm as XL
+    ax_units = []
+    for spec in units_spec:
+        if spec[0] == "merged":
+            ax_units.append({"u": ("embed", "rank"), "v": ("rank", "embed")})
+        else:
+            kind = spec[2]
+            if kind in ("attn", "attn_local"):
+                a = L.attention_axes(cfg)
+            elif kind == "moe":
+                a = MOE.moe_axes()
+            elif kind == "ffn":
+                a = L.ffn_axes(cfg.ffn_kind)
+            elif kind == "rglru":
+                a = RG.rglru_axes()
+            elif kind == "mlstm":
+                a = XL.mlstm_axes()
+            else:
+                a = XL.slstm_axes()
+            ax_units.append({"norm": ("embed",), "p": a})
+    axes = {"units": ax_units, "final_norm": ("embed",)}
+    if cfg.frontend == "tokens":
+        axes["embed"] = ("vocab", "embed")
+    if not cfg.tie_embeddings or cfg.frontend != "tokens":
+        axes["unembed"] = ("embed", "vocab")
+    return axes
+
+
+def forward_compressed_spec(cfg, units_spec, params, batch):
+    """Plan-aware forward from spec + params (dry-run / production path)."""
+    units = []
+    for spec, p in zip(units_spec, params["units"]):
+        if spec[0] == "merged":
+            units.append(("merged", (p["u"], p["v"])))
+        else:
+            units.append(("orig", {"norm": p["norm"], "p": p["p"],
+                                   "kind": spec[2]}))
+    return T.forward_compressed(cfg, params, units, batch)
+
+
+def _apply_units(cfg, units, x):
+    """Standalone unit chain for segment timing (no embed/unembed)."""
+    from . import layers as L
+    from . import moe as MOE
+    for unit in units:
+        if unit[0] == "merged":
+            u, v = unit[1]
+            x = L.merged_ffn(u, v, x)
+        else:
+            sub = unit[1]
+            h = L.rms_norm(x, sub["norm"], cfg.norm_eps)
+            kind = sub["kind"]
+            positions = jnp.arange(x.shape[1])[None, :]
+            if kind == "moe":
+                t = MOE.moe_ffn(sub["p"], h, cfg)
+            elif kind == "ffn":
+                t = L.ffn(sub["p"], h, cfg.ffn_kind)
+            else:
+                t = T._temporal_apply(cfg, kind, sub["p"], h, positions, None)
+            x = x + t
+    return x

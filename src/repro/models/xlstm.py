@@ -1,0 +1,239 @@
+"""xLSTM blocks (arXiv:2405.04517) — mLSTM (matrix memory, chunkwise
+parallel) and sLSTM (scalar memory, sequential scan).
+
+mLSTM per head: C_t = f_t C_{t-1} + i_t v_t k_tᵀ ;  n_t = f_t n_{t-1} + i_t k_t
+               h_t = C_t q_t / max(|n_tᵀ q_t|, 1)
+with log-space stabilization (m_t running max).  Train/prefill uses the
+chunkwise-parallel form (intra-chunk quadratic + inter-chunk state carry via
+``lax.scan``), the standard linear-attention chunking adapted to exp gates.
+Decode is a single fused state update.
+
+sLSTM is inherently sequential — ``lax.scan`` over time.
+
+LayerMerge note: both are prunable-only (input-dependent gates).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def mlstm_axes():
+    return {"wq": ("embed", "heads", "head"), "wk": ("embed", "heads", "head"),
+            "wv": ("embed", "heads", "head"), "wi": ("embed", "heads"),
+            "wf": ("embed", "heads"), "bf": ("heads",), "bi": ("heads",),
+            "wo": ("heads", "head", "embed"), "skip": ("embed", "embed")}
+
+
+def init_mlstm(cfg, key, dtype):
+    d, h = cfg.d_model, cfg.num_heads
+    hd = d // h
+    ks = jax.random.split(key, 7)
+    s = 1.0 / math.sqrt(d)
+    p = {"wq": jax.random.normal(ks[0], (d, h, hd), dtype) * s,
+         "wk": jax.random.normal(ks[1], (d, h, hd), dtype) * s,
+         "wv": jax.random.normal(ks[2], (d, h, hd), dtype) * s,
+         "wi": jax.random.normal(ks[3], (d, h), dtype) * s,
+         "wf": jax.random.normal(ks[4], (d, h), dtype) * s,
+         "bf": jnp.full((h,), 3.0, dtype),       # forget-gate bias (keep)
+         "bi": jnp.zeros((h,), dtype),
+         "wo": jax.random.normal(ks[5], (h, hd, d), dtype) * s,
+         "skip": jax.random.normal(ks[6], (d, d), dtype) * s}
+    return p, mlstm_axes()
+
+
+def _mlstm_chunk_scan(q, k, v, log_i, log_f, chunk: int):
+    """Chunkwise-parallel mLSTM.  q,k,v: (B,S,H,D); gates: (B,S,H) logs."""
+    b, s, h, d = q.shape
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    q = q.reshape(b, nc, chunk, h, d)
+    k = k.reshape(b, nc, chunk, h, d)
+    v = v.reshape(b, nc, chunk, h, d)
+    log_i = log_i.reshape(b, nc, chunk, h).astype(jnp.float32)
+    log_f = log_f.reshape(b, nc, chunk, h).astype(jnp.float32)
+    csum_f = jnp.cumsum(log_f, axis=2)                     # within-chunk
+    total_f = csum_f[:, :, -1]                             # (B,NC,H)
+
+    # intra-chunk decay matrix: D[t,u] = sum_{u<τ<=t} logf + logi_u  (u <= t)
+    dmat = csum_f[:, :, :, None, :] - csum_f[:, :, None, :, :] \
+        + log_i[:, :, None, :, :]                          # (B,NC,T,U,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    dmat = jnp.where(tri[None, None, :, :, None], dmat, -jnp.inf)
+
+    def body(carry, xs):
+        C, n, m = carry            # (B,H,D,D), (B,H,D), (B,H)
+        qc, kc, vc, d_c, csf, lgi, tot = xs
+        # stabilizer: max over inter (m + csf) and intra (row max of dmat)
+        intra_max = jnp.max(d_c, axis=2)                   # (B,T,H) over U
+        m_new = jnp.maximum(m[:, None] + csf, intra_max)   # (B,T,H)
+        inter_w = jnp.exp(m[:, None] + csf - m_new)        # (B,T,H)
+        intra_w = jnp.exp(d_c - m_new[:, :, None])         # (B,T,U,H)
+        # intra-chunk attention
+        scores = jnp.einsum("bthd,buhd->btuh", qc, kc) / math.sqrt(d)
+        att = scores * intra_w
+        out_intra = jnp.einsum("btuh,buhd->bthd", att, vc)
+        # inter-chunk contribution
+        # C is (value_dim d, key_dim e): contract q against the key dim
+        out_inter = jnp.einsum("bthe,bhde->bthd", qc, C) / math.sqrt(d)
+        out_inter = out_inter * inter_w[..., None]
+        den_intra = jnp.sum(att, axis=2)                   # Σ_u w·(kᵀq/√d)
+        den_inter = jnp.einsum("bthd,bhd->bth", qc, n) / math.sqrt(d) * inter_w
+        den = jnp.abs(den_intra + den_inter)
+        out = (out_intra + out_inter) / jnp.maximum(den, 1.0)[..., None]
+        # carry state to end of chunk (stabilized by the new running max)
+        m_end = jnp.maximum(m + tot, jnp.max(d_c[:, -1], axis=1))
+        decay_old = jnp.exp(m + tot - m_end)               # (B,H)
+        kw_st = jnp.exp(csf[:, -1][:, None] - csf + lgi - m_end[:, None])
+        C_new = C * decay_old[..., None, None] \
+            + jnp.einsum("buh,buhd,buhe->bhde", kw_st, vc, kc)
+        n_new = n * decay_old[..., None] \
+            + jnp.einsum("buh,buhd->bhd", kw_st, kc)
+        return (C_new, n_new, m_end), out
+
+    C0 = jnp.zeros((b, h, d, d), jnp.float32)
+    n0 = jnp.zeros((b, h, d), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    xs = (jnp.moveaxis(q, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(k, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(v, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dmat, 1, 0),
+          jnp.moveaxis(csum_f, 1, 0),
+          jnp.moveaxis(log_i, 1, 0),
+          jnp.moveaxis(total_f, 1, 0))
+    _, out = lax.scan(body, (C0, n0, m0), xs)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, h, d)
+    return out
+
+
+def mlstm_block(p, x, cfg, chunk: int = 64):
+    b, s, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    log_i = jax.nn.log_sigmoid((x @ p["wi"] + p["bi"]).astype(jnp.float32))
+    log_f = jax.nn.log_sigmoid((x @ p["wf"] + p["bf"]).astype(jnp.float32))
+    chunk = min(chunk, s)
+    out = _mlstm_chunk_scan(q, k, v, log_i, log_f, chunk)
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
+    return y + jax.nn.silu(x @ p["skip"])
+
+
+def mlstm_decode(p, x, cfg, state):
+    """state: {"C": (B,H,D,D) f32, "n": (B,H,D) f32, "m": (B,H) f32}."""
+    b = x.shape[0]
+    d = x.shape[-1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])[:, 0]
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])[:, 0]
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])[:, 0]
+    log_i = jax.nn.log_sigmoid((x @ p["wi"] + p["bi"]))[:, 0].astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid((x @ p["wf"] + p["bf"]))[:, 0].astype(jnp.float32)
+    m_new = jnp.maximum(state["m"] + log_f, log_i)
+    decay = jnp.exp(state["m"] + log_f - m_new)
+    inw = jnp.exp(log_i - m_new)
+    kf, vf, qf = (t.astype(jnp.float32) for t in (k, v, q))
+    C = state["C"] * decay[..., None, None] \
+        + inw[..., None, None] * vf[..., :, None] * kf[..., None, :]
+    n = state["n"] * decay[..., None] + inw[..., None] * kf
+    hd = q.shape[-1]
+    num = jnp.einsum("bhde,bhe->bhd", C, qf) / math.sqrt(hd)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", n, qf)) / math.sqrt(hd)
+    out = (num / jnp.maximum(den, 1.0)[..., None]).astype(x.dtype)
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None]
+    return y + jax.nn.silu(x @ p["skip"]), \
+        {"C": C, "n": n, "m": m_new}
+
+
+def init_mlstm_state(cfg, batch):
+    h = cfg.num_heads
+    hd = cfg.d_model // h
+    return {"C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, h, hd), jnp.float32),
+            "m": jnp.full((batch, h), -1e30, jnp.float32)}
+
+
+MLSTM_STATE_AXES = {"C": ("batch", "heads", None, None),
+                    "n": ("batch", "heads", None), "m": ("batch", "heads")}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_axes():
+    return {"wz": ("embed", "heads", "head"), "wi": ("embed", "heads", "head"),
+            "wf": ("embed", "heads", "head"),
+            "wo_gate": ("embed", "heads", "head"), "bf": ("heads", "head"),
+            "wo": ("heads", "head", "embed")}
+
+
+def init_slstm(cfg, key, dtype):
+    d, h = cfg.d_model, cfg.num_heads
+    hd = d // h
+    ks = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d)
+    p = {"wz": jax.random.normal(ks[0], (d, h, hd), dtype) * s,
+         "wi": jax.random.normal(ks[1], (d, h, hd), dtype) * s,
+         "wf": jax.random.normal(ks[2], (d, h, hd), dtype) * s,
+         "wo_gate": jax.random.normal(ks[3], (d, h, hd), dtype) * s,
+         "bf": jnp.full((h, hd), 3.0, dtype),
+         "wo": jax.random.normal(ks[4], (h, hd, d), dtype) * s}
+    return p, slstm_axes()
+
+
+def _slstm_step(carry, gates):
+    c, n, m = carry
+    z, i_log, f_log, o = gates
+    m_new = jnp.maximum(f_log + m, i_log)
+    i_w = jnp.exp(i_log - m_new)
+    f_w = jnp.exp(f_log + m - m_new)
+    c_new = f_w * c + i_w * jnp.tanh(z)
+    n_new = f_w * n + i_w
+    h = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new), h
+
+
+def slstm_block(p, x, cfg):
+    b, s, d = x.shape
+    z = jnp.einsum("bsd,dhk->bshk", x, p["wz"]).astype(jnp.float32)
+    i_log = jnp.einsum("bsd,dhk->bshk", x, p["wi"]).astype(jnp.float32)
+    f_log = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dhk->bshk", x, p["wf"]).astype(jnp.float32)
+        + p["bf"].astype(jnp.float32))
+    o = jax.nn.sigmoid(
+        jnp.einsum("bsd,dhk->bshk", x, p["wo_gate"]).astype(jnp.float32))
+    zeros = jnp.zeros((b,) + z.shape[2:], jnp.float32)
+    carry0 = (zeros, zeros, jnp.full_like(zeros, -1e30))
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (z, i_log, f_log, o))
+    _, h = lax.scan(_slstm_step, carry0, xs)
+    h = jnp.moveaxis(h, 0, 1).astype(x.dtype)              # (B,S,H,D)
+    return jnp.einsum("bshk,hkd->bsd", h, p["wo"])
+
+
+def slstm_decode(p, x, cfg, state):
+    z = jnp.einsum("bsd,dhk->bshk", x, p["wz"])[:, 0].astype(jnp.float32)
+    i_log = jnp.einsum("bsd,dhk->bshk", x, p["wi"])[:, 0].astype(jnp.float32)
+    f_log = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dhk->bshk", x, p["wf"])[:, 0].astype(jnp.float32)
+        + p["bf"].astype(jnp.float32))
+    o = jax.nn.sigmoid(
+        jnp.einsum("bsd,dhk->bshk", x, p["wo_gate"])[:, 0].astype(jnp.float32))
+    carry = (state["c"], state["n"], state["m"])
+    carry, h = _slstm_step(carry, (z, i_log, f_log, o))
+    y = jnp.einsum("bhk,hkd->bd", h.astype(x.dtype), p["wo"])[:, None]
+    return y, {"c": carry[0], "n": carry[1], "m": carry[2]}
+
+
+def init_slstm_state(cfg, batch):
+    h = cfg.num_heads
+    hd = cfg.d_model // h
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full_like(z, -1e30)}
+
+
+SLSTM_STATE_AXES = {"c": ("batch", "heads", None),
+                    "n": ("batch", "heads", None),
+                    "m": ("batch", "heads", None)}

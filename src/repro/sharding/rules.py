@@ -1,0 +1,156 @@
+"""Logical-axis sharding rules (MaxText-style) for pjit/shard_map.
+
+Model code annotates params and activations with *logical* axis names
+('embed', 'heads', 'ffn', 'vocab', 'experts', 'batch', 'seq', …); a
+:class:`ShardingRules` maps those to mesh axes and builds PartitionSpecs.
+An ambient context (``use_rules``) lets the model call
+``logical_constraint(x, names)`` without threading the mesh through every
+function — a no-op outside the context, so the same code runs on one CPU
+device in tests.
+
+Default production mapping (16×16 pod, see launch/mesh.py):
+
+* ``batch``   → ('pod', 'data')  — data parallel (pod axis folds in)
+* ``embed``   → 'data' for *parameters* (FSDP / ZeRO-3 style weight shard)
+* ``heads`` / ``ffn`` / ``vocab`` / ``experts`` → 'model' (tensor/expert par.)
+* ``kv``      → 'model' when divisible, else replicated (GQA)
+* ``kv_seq``  → 'model' for decode caches (flash-decoding layout, §Perf)
+* ``seq``     → 'data' in sequence-parallel prefill configs
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Mapping
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mesh: Mesh | None
+    rules: Mapping[str, Any]          # logical name -> mesh axis (or tuple)
+
+    def spec(self, names, shape=None) -> P:
+        """PartitionSpec for a tuple of logical axis names.
+
+        ``shape`` (optional) enables divisibility fallback: a dim that does
+        not divide by its mesh-axis size is replicated instead (GQA kv<TP).
+        """
+        if self.mesh is None:
+            return P()
+        parts = []
+        used = set()
+        for i, n in enumerate(names):
+            ax = self.rules.get(n) if n is not None else None
+            if ax is None:
+                parts.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            axes = tuple(a for a in axes if a in self.mesh.shape
+                         and a not in used)
+            if not axes:
+                parts.append(None)
+                continue
+            if shape is not None:
+                size = int(np.prod([self.mesh.shape[a] for a in axes]))
+                if shape[i] % size != 0:
+                    parts.append(None)
+                    continue
+            used.update(axes)
+            parts.append(axes if len(axes) > 1 else axes[0])
+        return P(*parts)
+
+    def named(self, names, shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(names, shape))
+
+
+_ctx = threading.local()
+
+
+def current_rules() -> ShardingRules | None:
+    return getattr(_ctx, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules | None):
+    prev = getattr(_ctx, "rules", None)
+    _ctx.rules = rules
+    try:
+        yield rules
+    finally:
+        _ctx.rules = prev
+
+
+def logical_constraint(x, names):
+    """with_sharding_constraint by logical names; no-op without context."""
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, r.named(tuple(names), x.shape))
+
+
+# ---------------------------------------------------------------------------
+# Rule presets
+# ---------------------------------------------------------------------------
+
+def make_rules(mesh: Mesh | None, *, fsdp: bool = True,
+               seq_parallel: bool = False,
+               decode_kv_model: bool = True,
+               opt_state: bool = False) -> ShardingRules:
+    """The production mapping used by the dry-run and launcher."""
+    data_axes = tuple(a for a in ("pod", "data") if mesh is not None
+                      and a in mesh.shape) or ("data",)
+    rules = {
+        # activations
+        "batch": data_axes,
+        "seq": (data_axes if seq_parallel else None),
+        "act_embed": None,
+        "act_heads": "model",
+        "act_ffn": "model",
+        "act_vocab": "model",
+        # parameters (FSDP shards the embed dim over the data axes)
+        "embed": (data_axes if fsdp else None),
+        "heads": "model",
+        "kv": "model",
+        "head": None,
+        "ffn": "model",
+        "ffn_in": None,
+        "vocab": "model",
+        "experts": "model",
+        # expert weights live TP-sharded + data-replicated (the shard_map
+        # MoE needs whole (E_loc, d, dff) blocks locally); their ZeRO-1
+        # optimizer moments ARE data-sharded (opt_state=True rule set)
+        "expert_embed": (data_axes if opt_state else None),
+        "expert_ffn": None,
+        "moe_group": data_axes,   # MoE token groups over data (GShard layout)
+        "rank": "model",
+        "layers": None,
+        # decode KV cache: sequence over the model axis (flash-decoding)
+        "kv_seq": ("model" if decode_kv_model else None),
+    }
+    return ShardingRules(mesh=mesh, rules=rules)
+
+
+def param_shardings(rules: ShardingRules, axes_tree):
+    """Map a tree of logical-axes tuples to NamedShardings (for in_shardings)."""
+    def one(ax):
+        if ax is None:
+            return NamedSharding(rules.mesh, P())
+        return NamedSharding(rules.mesh, rules.spec(tuple(ax)))
+    return jax.tree.map(one, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) or x is None)
+
+
+def param_shardings_with_shapes(rules: ShardingRules, axes_tree, shape_tree):
+    """Like :func:`param_shardings` but with divisibility fallback per leaf."""
+    def one(ax, shaped):
+        shape = shaped.shape if hasattr(shaped, "shape") else None
+        if ax is None:
+            return NamedSharding(rules.mesh, P())
+        return NamedSharding(rules.mesh, rules.spec(tuple(ax), shape))
+    return jax.tree.map(one, axes_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) or x is None)

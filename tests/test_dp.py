@@ -1,0 +1,117 @@
+"""Theorem 3.1 property tests: the DP solves Problem (5) exactly.
+
+Random surrogate instances (tables with integer latencies so that the
+discretization is lossless) are solved by both Algorithm 1 and exhaustive
+enumeration; objectives must match exactly, and the DP's plan must be
+feasible and achieve its reported objective.
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dp import brute_force, solve_dp, solve_knapsack
+
+
+def make_instance(rng, L, max_k_opts=3, max_lat=10):
+    """Random (i, j) -> {k: (I, T, kept)} table with integer latencies."""
+    table = {}
+    for i in range(L):
+        for j in range(i + 1, L + 1):
+            if j - i > 1 and rng.random() < 0.3:
+                continue  # some spans unmergeable
+            opts = {}
+            for k in rng.choice(range(1, 12), size=rng.integers(1, max_k_opts + 1),
+                                replace=False):
+                imp = float(rng.random())
+                lat = int(rng.integers(1, max_lat + 1))
+                opts[int(k)] = (imp, float(lat), ())
+            table[(i, j)] = opts
+    return lambda i, j: table.get((i, j), {})
+
+
+@given(seed=st.integers(0, 10_000), L=st.integers(2, 5),
+       budget=st.integers(3, 40))
+@settings(max_examples=60, deadline=None)
+def test_dp_matches_brute_force(seed, L, budget):
+    rng = np.random.default_rng(seed)
+    table = make_instance(rng, L)
+    P = budget          # unit latency grid: discretization is exact
+    dp = solve_dp(L, table, float(budget), P)
+    bf = brute_force(L, table, float(budget), P)
+    if bf is None:
+        assert dp is None
+        return
+    assert dp is not None
+    assert dp.objective == pytest.approx(bf[0], rel=1e-9)
+
+
+@given(seed=st.integers(0, 10_000), L=st.integers(2, 5),
+       budget=st.integers(3, 40))
+@settings(max_examples=40, deadline=None)
+def test_dp_plan_is_feasible_and_consistent(seed, L, budget):
+    rng = np.random.default_rng(seed)
+    table = make_instance(rng, L)
+    dp = solve_dp(L, table, float(budget), budget)
+    if dp is None:
+        return
+    # segments tile (0, L]
+    assert dp.plan.segments[0].i == 0
+    assert dp.plan.segments[-1].j == L
+    # reported objective & latency recompute from the table
+    tot_i = tot_t = 0.0
+    for s in dp.plan.segments:
+        opts = table(s.i, s.j)
+        assert s.k in opts
+        tot_i += opts[s.k][0]
+        tot_t += opts[s.k][1]
+    assert tot_i == pytest.approx(dp.objective)
+    assert tot_t == pytest.approx(dp.latency)
+    # discretized feasibility (integer latencies: exact)
+    assert tot_t <= budget + 1e-9
+
+
+@given(seed=st.integers(0, 5_000), L=st.integers(1, 8),
+       budget=st.integers(1, 30))
+@settings(max_examples=40, deadline=None)
+def test_knapsack_matches_enumeration(seed, L, budget):
+    rng = np.random.default_rng(seed)
+    imp = {l: float(rng.random()) for l in range(1, L + 1)}
+    lat = {l: float(rng.integers(1, 8)) for l in range(1, L + 1)}
+    forced = tuple(l for l in range(1, L + 1) if rng.random() < 0.2)
+    sol = solve_knapsack(L, imp, lat, float(budget), budget, forced=forced)
+    # exhaustive reference
+    best = None
+    for mask in range(2 ** L):
+        C = [l for l in range(1, L + 1) if mask >> (l - 1) & 1]
+        if any(f not in C for f in forced):
+            continue
+        t = sum(lat[l] for l in C)
+        if t <= budget:
+            v = sum(imp[l] for l in C)
+            if best is None or v > best:
+                best = v
+    if best is None:
+        assert sol is None
+        return
+    assert sol is not None
+    assert sol[1] == pytest.approx(best, rel=1e-9)
+    assert set(forced) <= set(sol[0])
+
+
+def test_dp_respects_budget_monotonicity():
+    rng = np.random.default_rng(0)
+    table = make_instance(rng, 4)
+    prev = -math.inf
+    for budget in range(2, 30):
+        dp = solve_dp(4, table, float(budget), budget)
+        if dp is None:
+            continue
+        assert dp.objective >= prev - 1e-12
+        prev = dp.objective
+
+
+def test_infeasible_returns_none():
+    table = lambda i, j: ({1: (1.0, 100.0, ())} if j - i == 1 else {})
+    assert solve_dp(3, table, 10.0, 10) is None

@@ -1,0 +1,89 @@
+"""Roofline machinery unit tests: HLO collective parsing, shape-byte
+accounting, depth-probe extrapolation, sharding-rule specs."""
+import sys
+
+import pytest
+
+sys.path.insert(0, "benchmarks")
+
+from repro.launch.dryrun import _shape_bytes, parse_collectives  # noqa: E402
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,1024]") == 16 * 1024 * 4
+    assert _shape_bytes("bf16[8,4096,2048]") == 8 * 4096 * 2048 * 2
+    assert _shape_bytes("(f32[4], bf16[2,2])") == 16 + 8
+    assert _shape_bytes("pred[10]") == 10
+    assert _shape_bytes("token[]") == 0          # non-numeric types ignored
+
+
+def test_parse_collectives():
+    hlo = """
+  ENTRY %main {
+    %ar = f32[16,1024]{1,0} all-reduce(%x), replica_groups={{0,1}}
+    %ag.1 = bf16[32,64]{1,0} all-gather(%y), dimensions={0}
+    %p = f32[8]{0} collective-permute(%z), source_target_pairs={{0,1}}
+    %d = f32[4,4]{1,0} dot(%a, %b)
+    %ars = f32[2,2]{1,0} all-reduce-start(%w)
+  }
+    """
+    out = parse_collectives(hlo)
+    assert out["all-reduce"]["count"] == 2       # incl. -start form
+    assert out["all-reduce"]["bytes"] == 16 * 1024 * 4 + 16
+    assert out["all-gather"] == {"count": 1, "bytes": 32 * 64 * 2}
+    assert out["collective-permute"]["bytes"] == 32
+    assert out["total_bytes"] == sum(
+        v["bytes"] for k, v in out.items() if isinstance(v, dict))
+
+
+def test_depth_correct_extrapolation():
+    import roofline
+    rec = {"arch": "smollm-135m", "shape": "train_4k", "num_layers": 30,
+           "cost": {"flops": 1.0, "bytes accessed": 1.0},
+           "collectives": {"all-reduce": {"count": 1, "bytes": 100},
+                           "total_bytes": 100}}
+    p1 = {"num_layers": 1, "cost": {"flops": 10.0, "bytes accessed": 4.0},
+          "collectives": {"all-reduce": {"count": 1, "bytes": 100}}}
+    p2 = {"num_layers": 2, "cost": {"flops": 16.0, "bytes accessed": 6.0},
+          "collectives": {"all-reduce": {"count": 2, "bytes": 150}}}
+    key = ("smollm-135m", "train_4k")
+    out = roofline.depth_correct(rec, ({key: p1}, {key: p2}))
+    # body = 6, base = 4 → 4 + 30·6 = 184
+    assert out["cost"]["flops"] == pytest.approx(184.0)
+    assert out["cost"]["bytes accessed"] == pytest.approx(2 + 30 * 2)
+    assert out["collectives"]["all-reduce"]["bytes"] == pytest.approx(
+        50 + 30 * 50)
+
+
+def test_rules_divisibility_fallback():
+    """GQA kv heads < TP shards must fall back to replication."""
+    import subprocess
+    import textwrap
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.sharding.rules import make_rules
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        r = make_rules(mesh, fsdp=True)
+        # kv=2 doesn't divide model=4 → replicated; heads=8 divides → sharded
+        assert r.spec(("embed", "kv", "head"), (64, 2, 16)) == P("data", None, None)
+        assert r.spec(("embed", "heads", "head"), (64, 8, 16)) == P("data", "model", None)
+        # axis dedup: experts takes model, ffn falls back
+        assert r.spec(("experts", "ffn"), (8, 128)) == P("model", None)
+        print("RULES_OK")
+    """)
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd="/root/repo", timeout=300,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert "RULES_OK" in res.stdout, res.stdout + res.stderr
+
+
+def test_model_flops_conventions():
+    import roofline
+    rec_train = {"active_params": 1e9, "params": 2e9, "seq_len": 4096,
+                 "global_batch": 256, "mode": "train"}
+    assert roofline.model_flops(rec_train) == 6 * 1e9 * 4096 * 256
+    rec_dec = dict(rec_train, mode="decode")
+    assert roofline.model_flops(rec_dec) == 2 * 1e9 * 256

@@ -1,0 +1,88 @@
+"""Eq. 3 subset-selection and segment-enumeration property tests."""
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.plan import LayerDesc
+from repro.core.segments import SegmentEnumerator, subset_selection
+
+
+@given(seed=st.integers(0, 500), n=st.integers(1, 8))
+@settings(max_examples=40, deadline=None)
+def test_subset_selection_is_exact(seed, n):
+    """For every achievable weight, the returned subset has maximal value —
+    checked against exhaustive enumeration."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    items = [(i, int(rng.integers(0, 5)), float(rng.random()))
+             for i in range(n)]
+    forced = [i for i in range(n) if rng.random() < 0.25]
+    got = subset_selection(items, forced=forced)
+    best = {}
+    for r in range(n + 1):
+        for combo in itertools.combinations(range(n), r):
+            if any(f not in combo for f in forced):
+                continue
+            w = sum(items[i][1] for i in combo)
+            v = sum(items[i][2] for i in combo)
+            if w not in best or v > best[w][0]:
+                best[w] = (v, tuple(sorted(combo)))
+    assert set(got) == set(best)
+    for w in best:
+        assert got[w][0] == pytest.approx(best[w][0])
+        # the kept set achieves the claimed value and weight
+        ids = got[w][1]
+        assert sum(items[i][1] for i in ids) == w
+        assert sum(items[i][2] for i in ids) == pytest.approx(got[w][0])
+        assert set(forced) <= set(ids)
+
+
+def test_subset_selection_cap_groups_max():
+    items = [(0, 3, 1.0), (1, 3, 2.0), (2, 3, 0.5)]
+    got = subset_selection(items, cap=4)
+    # weights 6 and 9 clamp to 4: best value among them must win
+    assert got[4][0] == pytest.approx(3.5)   # all three (w=9 → 4, v=3.5)
+
+
+def _descs(spec):
+    """spec: list of (growth, prunable, linearizable)."""
+    return [LayerDesc(index=i + 1, kind="x", growth=g, value=float(i + 1),
+                      prunable=p, linearizable=lin)
+            for i, (g, p, lin) in enumerate(spec)]
+
+
+def test_depth_mode_single_k_per_span():
+    descs = _descs([(2, True, True), (2, True, True), (4, True, True)])
+    enum = SegmentEnumerator(descs, offset=1, depth_mode=True)
+    for i, j, opts in enum.all_spans():
+        assert len(opts) == 1
+        (k, (val, kept)), = opts.items()
+        assert set(kept) == set(range(i + 1, j + 1))   # C = [L]
+
+
+def test_nonlinearizable_interior_requires_prunable():
+    descs = _descs([(2, True, True), (0, False, False), (2, True, True)])
+    enum = SegmentEnumerator(descs, offset=1)
+    assert enum.options(0, 3) == {}          # barrier inside, not prunable
+    # singleton fallback keeps the barrier as-is
+    opts = enum.options(1, 2)
+    assert list(opts) == [1] and opts[1][1] == (2,)
+
+
+def test_transformer_convention_boundary_kept():
+    descs = _descs([(8, True, True), (0, True, False), (8, True, True)])
+    enum = SegmentEnumerator(descs, offset=0, cap=12)
+    opts = enum.options(0, 3)
+    # interior = layers 1,2 (ffn growth 8 + non-linearizable prunable attn);
+    # boundary layer 3 is always kept
+    assert set(opts) == {0, 8}
+    for k, (val, kept) in opts.items():
+        assert 3 in kept
+
+
+def test_irreducible_forced_in_every_subset():
+    descs = _descs([(2, False, True), (2, True, True)])
+    enum = SegmentEnumerator(descs, offset=1)
+    for k, (val, kept) in enum.options(0, 2).items():
+        assert 1 in kept                     # layer 1 ∈ R is always kept
