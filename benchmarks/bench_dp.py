@@ -1,0 +1,131 @@
+"""DP-planner + merged-conv tiling benchmark — machine-readable output.
+
+Measures the vectorized Algorithm-1 solver against the scalar reference at
+production-depth instances (the fine budget grids of Kim et al. 2023's
+two-stage DP, P up to 8192), plus the effect of Pareto-dominance pruning
+and a merged-conv output-row tile sweep.  Writes ``results/BENCH_dp.json``
+so the perf trajectory is trackable across PRs.
+
+  PYTHONPATH=src python -m benchmarks.bench_dp [--full] [--out PATH]
+
+``--full`` also times the scalar reference at the largest instance (slow:
+the quadruple-nested Python loop is exactly what this PR deletes from the
+hot path).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+from repro.core.dp import solve_dp, solve_dp_reference  # noqa: E402
+from repro.core.segments import pareto_prune_options    # noqa: E402
+
+
+def make_instance(rng, L, max_span=12, n_k=7, max_lat=30):
+    table = {}
+    for i in range(L):
+        for j in range(i + 1, min(i + max_span, L) + 1):
+            table[(i, j)] = {k: (float(rng.random()),
+                                 float(rng.integers(1, max_lat + 1)), ())
+                             for k in range(1, n_k + 1)}
+    return table
+
+
+def timeit(fn, repeats=3):
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def bench_solver(L, P, *, scalar: bool, rng):
+    table = make_instance(rng, L)
+    fn = lambda i, j: table.get((i, j), {})
+    t_vec, res_vec = timeit(lambda: solve_dp(L, fn, float(P), P))
+    row = {
+        "L": L, "P": P,
+        "entries": sum(len(v) for v in table.values()),
+        "vectorized_ms": t_vec * 1e3,
+        "objective": res_vec.objective,
+    }
+    if scalar:
+        t_ref, res_ref = timeit(lambda: solve_dp_reference(L, fn, float(P), P),
+                                repeats=1)
+        assert res_ref.objective == res_vec.objective
+        assert res_ref.plan == res_vec.plan
+        row.update(scalar_ms=t_ref * 1e3, speedup=t_ref / t_vec,
+                   plans_identical=True)
+    pruned = {sp: pareto_prune_options(o) for sp, o in table.items()}
+    pfn = lambda i, j: pruned.get((i, j), {})
+    t_pru, res_pru = timeit(lambda: solve_dp(L, pfn, float(P), P))
+    assert res_pru.objective == res_vec.objective
+    row.update(pruned_entries=sum(len(v) for v in pruned.values()),
+               pruned_vectorized_ms=t_pru * 1e3,
+               pruned_objective_identical=True)
+    return row
+
+
+def bench_conv_tiles(rng):
+    """Merged-conv output-row tile sweep (jnp oracle wall-time on this host;
+    interpret-mode max|Δ| certifies each tiling against the oracle)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    from repro.kernels.merged_conv import choose_tile_ho
+
+    n, h, w, cin, cout, k = 1, 56, 56, 32, 32, 5
+    x = jnp.asarray(rng.standard_normal((n, h, w, cin)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((k, k, cin, cout)) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.standard_normal(cout), jnp.float32)
+    oracle = ref.apply_activation(ref.merged_conv_ref(x, wt, b), "relu")
+
+    rows = []
+    for tile_ho in (4, 8, 16, 32, None):
+        t0 = time.perf_counter()
+        y = ops.merged_conv_op(x, wt, b, activation="relu", tile_ho=tile_ho,
+                               interpret=True)
+        dt = time.perf_counter() - t0
+        rows.append({
+            "shape": f"n{n}_h{h}w{w}_cin{cin}cout{cout}_k{k}",
+            "tile_ho": tile_ho if tile_ho is not None else
+                       choose_tile_ho(h, w, cin, k, 4),
+            "auto": tile_ho is None,
+            "interpret_s": dt,
+            "maxdiff_vs_oracle": float(jnp.abs(y - oracle).max()),
+        })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="also time the scalar reference at (L=128, P=8192)")
+    ap.add_argument("--out", default="results/BENCH_dp.json")
+    args = ap.parse_args(argv)
+    rng = np.random.default_rng(0)
+
+    solver = [
+        bench_solver(64, 2048, scalar=True, rng=rng),
+        bench_solver(128, 8192, scalar=args.full, rng=rng),
+    ]
+    conv = bench_conv_tiles(rng)
+    report = {"solver": solver, "merged_conv_tiles": conv}
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report, indent=2))
+    print(f"# wrote {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,15 @@
 """Benchmark harness — one function per paper table/figure + kernels +
-roofline.  Prints ``name,us_per_call,derived`` CSV (and writes
-results/bench.csv).
+roofline.  Prints ``name,us_per_call,derived`` CSV and writes
+results/bench.csv plus machine-readable results/BENCH_kernels.json
+(name → µs + parsed derived fields) so the perf trajectory is trackable
+across PRs.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig1,table1,...]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -152,6 +155,23 @@ def main(argv=None):
         f.write("name,us_per_call,derived\n")
         for r in all_rows:
             f.write(f"{r[0]},{r[1]:.2f},{r[2]}\n")
+    with open("results/BENCH_kernels.json", "w") as f:
+        json.dump({r[0]: _json_row(r) for r in all_rows}, f, indent=2)
+
+
+def _json_row(row):
+    """(name, µs, derived) → {us_per_call, **parsed derived k=v fields}."""
+    out = {"us_per_call": row[1]}
+    for field in str(row[2]).split(";"):
+        if "=" in field:
+            k, v = field.split("=", 1)
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = v
+        elif field:
+            out["derived"] = field
+    return out
 
 
 if __name__ == "__main__":

@@ -1,7 +1,9 @@
 """LayerMerge core — the paper's contribution as a composable JAX module."""
 from .plan import CompressionPlan, LayerDesc, Segment, identity_plan
-from .segments import SegmentEnumerator, subset_selection, table_entry_count
-from .dp import solve_dp, solve_knapsack, brute_force, DPResult
+from .segments import (SegmentEnumerator, pareto_prune_options,
+                       subset_selection, table_entry_count)
+from .dp import (solve_dp, solve_dp_reference, solve_knapsack, brute_force,
+                 DPResult)
 from .latency import (AnalyticTPUOracle, WallClockOracle, CostBreakdown,
                       conv2d_cost, matmul_cost, rank_ffn_cost)
 from .importance import (ImportanceSpec, measure_importance,
@@ -12,8 +14,10 @@ from .compress import CompressResult, compress, original_latency
 
 __all__ = [
     "CompressionPlan", "LayerDesc", "Segment", "identity_plan",
-    "SegmentEnumerator", "subset_selection", "table_entry_count",
-    "solve_dp", "solve_knapsack", "brute_force", "DPResult",
+    "SegmentEnumerator", "pareto_prune_options", "subset_selection",
+    "table_entry_count",
+    "solve_dp", "solve_dp_reference", "solve_knapsack", "brute_force",
+    "DPResult",
     "AnalyticTPUOracle", "WallClockOracle", "CostBreakdown",
     "conv2d_cost", "matmul_cost", "rank_ffn_cost",
     "ImportanceSpec", "measure_importance", "magnitude_importance",

@@ -2,6 +2,8 @@
 
 Also provides:
 
+* :func:`solve_dp_reference` — the original scalar solver, kept as the
+  bit-exact oracle for the vectorized fast path;
 * :func:`solve_knapsack` — the paper's *LayerOnly* baseline (Problem 8), a
   0-1 knapsack over whole layers solved exactly on the same latency grid;
 * :func:`brute_force` — an exponential reference solver used by the property
@@ -11,6 +13,13 @@ Latency discretization follows the paper: every table latency is floored to
 the grid ``{T0/P, 2·T0/P, …, T0}`` (integer units of ``T0/P``).  With integer
 unit latencies the DP is exact; with real latencies it is exact for the
 floored instance, as in the paper.
+
+The fast path vectorizes the budget axis: for each layer ``l`` and candidate
+``(l', k)`` the whole row ``M[l', :]`` is shifted by the discretized latency
+and folded into a running max, so the per-budget Python loop of the scalar
+solver becomes two NumPy ops per candidate.  Candidates are visited in the
+scalar solver's order and only strictly-greater values replace the running
+max, so plans (not just objectives) are bit-identical to the reference.
 """
 from __future__ import annotations
 
@@ -41,6 +50,27 @@ def _discretize(t: float, unit: float) -> int:
     return int(math.floor(t / unit + 1e-9))
 
 
+def _collect_span_opts(L: int, table: TableFn):
+    """Materialize non-empty span options once, for solve + reconstruction."""
+    span_opts: dict[tuple[int, int], Mapping[int, tuple[float, float, tuple[int, ...]]]] = {}
+    for j in range(1, L + 1):
+        for i in range(j - 1, -1, -1):
+            opts = table(i, j)
+            if opts:
+                span_opts[(i, j)] = opts
+    return span_opts
+
+
+def _build_result(L, T0, P, M, segs_rev, method) -> DPResult:
+    segs = list(reversed(segs_rev))
+    true_lat = sum(s_lat for _, s_lat in segs)
+    plan = CompressionPlan(num_layers=L, segments=tuple(s for s, _ in segs),
+                           objective=float(M[L, P]), latency=true_lat,
+                           budget=T0, method=method)
+    return DPResult(plan=plan, objective=float(M[L, P]), latency=true_lat,
+                    table_M=M)
+
+
 def solve_dp(
     L: int,
     table: TableFn,
@@ -50,29 +80,87 @@ def solve_dp(
     method: str = "layermerge",
     original_k: Callable[[int], int] | None = None,
 ) -> DPResult | None:
-    """Exact DP of Algorithm 1.
+    """Exact DP of Algorithm 1 — vectorized over the budget axis.
 
     ``table(i, j)`` returns the merged-segment options for span ``(i, j]``
     (empty if the span is not mergeable).  Returns ``None`` when no feasible
     plan exists within ``T0`` (budget too tight even for the cheapest plan).
+    Bit-identical to :func:`solve_dp_reference`, including tie-breaking.
     """
     if T0 <= 0 or P <= 0:
         raise ValueError("T0 and P must be positive")
     unit = T0 / P
+    span_opts = _collect_span_opts(L, table)
 
     # M[l, t]: best Σ I over the first l layers with budget index t (0..P).
     M = np.full((L + 1, P + 1), NEG, dtype=np.float64)
     M[0, :] = 0.0
-    # Backpointers: for (l, t) store (l*, k*) and bookkeeping for reconstruction.
-    back: dict[tuple[int, int], tuple[int, int, int, float, tuple[int, ...]]] = {}
-    # cache span options so reconstruction does not recompute tables
-    span_opts: dict[tuple[int, int], Mapping[int, tuple[float, float, tuple[int, ...]]]] = {}
+    # choice[l, t]: index into cands_per_l[l] of the winning candidate.
+    choice = np.full((L + 1, P + 1), -1, dtype=np.int32)
+    cands_per_l: list[list[tuple[int, int, int, float, tuple[int, ...], float]]] = \
+        [[] for _ in range(L + 1)]
+    row_reachable = np.zeros(L + 1, dtype=bool)
+    row_reachable[0] = True
 
-    for j in range(1, L + 1):
-        for i in range(j - 1, -1, -1):
-            opts = table(i, j)
-            if opts:
-                span_opts[(i, j)] = opts
+    cand = np.empty(P + 1, dtype=np.float64)
+    for l in range(1, L + 1):
+        cands = cands_per_l[l]
+        for lp in range(l):
+            opts = span_opts.get((lp, l))
+            if not opts:
+                continue
+            for k, (imp, lat, kept) in opts.items():
+                td = _discretize(lat, unit)
+                if td > P:
+                    continue
+                cands.append((lp, k, td, lat, kept, imp))
+        best = M[l]
+        ch = choice[l]
+        for idx, (lp, k, td, lat, kept, imp) in enumerate(cands):
+            if not row_reachable[lp]:
+                continue        # all-NEG row can never win; pure skip
+            # cand[t] = M[lp, t - td] + imp for t >= td, NEG below — the
+            # scalar solver's inner t-loop as one shifted vector add.
+            cand[:td] = NEG
+            np.add(M[lp, :P + 1 - td], imp, out=cand[td:])
+            upd = cand > best                      # strict: first max wins,
+            best[upd] = cand[upd]                  # matching the reference
+            ch[upd] = idx
+        row_reachable[l] = bool(np.max(best) != NEG)
+
+    if M[L, P] == NEG:
+        return None
+
+    # -- reconstruct A*, C*, k* ----------------------------------------------
+    segs_rev: list[tuple[Segment, float]] = []
+    l, t = L, P
+    while l > 0:
+        lp, k, td, lat, kept, _imp = cands_per_l[l][choice[l, t]]
+        orig = (original_k is not None and l - lp == 1
+                and k == original_k(l) and set(kept) == {l})
+        segs_rev.append((Segment(i=lp, j=l, k=k, kept=kept, original=orig), lat))
+        l, t = lp, t - td
+    return _build_result(L, T0, P, M, segs_rev, method)
+
+
+def solve_dp_reference(
+    L: int,
+    table: TableFn,
+    T0: float,
+    P: int,
+    *,
+    method: str = "layermerge",
+    original_k: Callable[[int], int] | None = None,
+) -> DPResult | None:
+    """The original scalar DP — the certification oracle for :func:`solve_dp`."""
+    if T0 <= 0 or P <= 0:
+        raise ValueError("T0 and P must be positive")
+    unit = T0 / P
+    span_opts = _collect_span_opts(L, table)
+
+    M = np.full((L + 1, P + 1), NEG, dtype=np.float64)
+    M[0, :] = 0.0
+    back: dict[tuple[int, int], tuple[int, int, int, float, tuple[int, ...]]] = {}
 
     for l in range(1, L + 1):
         for lp in range(l):
@@ -83,8 +171,7 @@ def solve_dp(
                 td = _discretize(lat, unit)
                 if td > P:
                     continue
-                lo = max(td, 0)
-                for t in range(lo, P + 1):
+                for t in range(td, P + 1):
                     prev = M[lp, t - td]
                     if prev == NEG:
                         continue
@@ -96,23 +183,15 @@ def solve_dp(
     if M[L, P] == NEG:
         return None
 
-    # -- reconstruct A*, C*, k* ----------------------------------------------
-    segs: list[Segment] = []
+    segs_rev: list[tuple[Segment, float]] = []
     l, t = L, P
-    true_lat = 0.0
     while l > 0:
         lp, k, td, lat, kept = back[(l, t)]
         orig = (original_k is not None and l - lp == 1
                 and k == original_k(l) and set(kept) == {l})
-        segs.append(Segment(i=lp, j=l, k=k, kept=kept, original=orig))
-        true_lat += lat
+        segs_rev.append((Segment(i=lp, j=l, k=k, kept=kept, original=orig), lat))
         l, t = lp, t - td
-    segs.reverse()
-    plan = CompressionPlan(num_layers=L, segments=tuple(segs),
-                           objective=float(M[L, P]), latency=true_lat,
-                           budget=T0, method=method)
-    return DPResult(plan=plan, objective=float(M[L, P]), latency=true_lat,
-                    table_M=M)
+    return _build_result(L, T0, P, M, segs_rev, method)
 
 
 def solve_knapsack(
@@ -126,37 +205,45 @@ def solve_knapsack(
 ) -> tuple[tuple[int, ...], float, float] | None:
     """*LayerOnly* baseline (Problem 8): exact 0-1 knapsack on the grid.
 
-    Returns ``(C*, objective, true_latency)`` — the kept layer set — or
-    ``None`` if even the forced set exceeds the budget.
+    ``M[t]`` is the best value with discretized weight ≤ ``t``; with zero
+    layers processed every budget holds value 0, and forced layers replace
+    the row outright (no skip branch), so forced-infeasible budgets carry an
+    explicit ``NEG`` instead of a keep-flag recorded off a ``NEG``
+    predecessor.  Returns ``(C*, objective, true_latency)`` — the kept layer
+    set — or ``None`` if the forced set cannot fit the budget.
     """
+    if T0 <= 0 or P <= 0:
+        raise ValueError("T0 and P must be positive")
     unit = T0 / P
     forced_set = set(forced)
-    M = np.full(P + 1, NEG)
-    M[0:] = 0.0
-    keep: dict[tuple[int, int], bool] = {}
-    # classic knapsack, layer by layer
+    M = np.zeros(P + 1, dtype=np.float64)     # zero layers: 0 at every budget
+    keep = np.zeros((L + 1, P + 1), dtype=bool)
+    tds = {}
     for l in range(1, L + 1):
         imp, lat = importance[l], latency[l]
-        td = _discretize(lat, unit)
-        Mn = np.full(P + 1, NEG)
-        for t in range(P + 1):
-            skip = M[t] if l not in forced_set else NEG
-            take = M[t - td] + imp if t - td >= 0 and M[t - td] != NEG else NEG
-            if take >= skip:
-                Mn[t], keep[(l, t)] = take, True
-            else:
-                Mn[t], keep[(l, t)] = skip, False
-        M = Mn
+        td = tds[l] = _discretize(lat, unit)
+        take = np.full(P + 1, NEG)
+        if td <= P:
+            np.add(M[:P + 1 - td], imp, out=take[td:])
+        if l in forced_set:
+            # forced: the skip branch does not exist; infeasible stays NEG.
+            keep[l] = take != NEG
+            M = take
+        else:
+            # tie prefers take, but never records keep on an infeasible take.
+            upd = (take >= M) & (take != NEG)
+            keep[l] = upd
+            M = np.where(upd, take, M)
     if M[P] == NEG:
         return None
     C: list[int] = []
     t = P
     true_lat = 0.0
     for l in range(L, 0, -1):
-        if keep[(l, t)]:
+        if keep[l, t]:
             C.append(l)
             true_lat += latency[l]
-            t -= _discretize(latency[l], unit)
+            t -= tds[l]
     C.reverse()
     return tuple(C), float(M[P]), true_lat
 

@@ -16,9 +16,14 @@ segment, matching the paper's ``O(L² K₀)`` table bound overall.
 """
 from __future__ import annotations
 
+import math
 from typing import Mapping, Sequence
 
+import numpy as np
+
 from .plan import LayerDesc
+
+_NEG = -math.inf
 
 
 def subset_selection(
@@ -27,6 +32,12 @@ def subset_selection(
     cap: int | None = None,
 ) -> dict[int, tuple[float, tuple[int, ...]]]:
     """Exact max-value subset per achievable weight sum.
+
+    The weight axis is a flat NumPy array (one float row plus an
+    items × weights take-bit matrix for reconstruction) rather than a dict of
+    partial states, so each item is two vector ops instead of a Python loop
+    over states — the same recurrence, same floats, same tie-breaking (an
+    equal-value candidate never displaces the skip branch).
 
     Args:
       items: ``(id, weight, value)`` triples; weights are non-negative ints.
@@ -40,30 +51,64 @@ def subset_selection(
       (clamped) weight sum, the maximum total value and one argmax subset.
     """
     forced_set = set(forced)
-    # state: weight -> (value, kept-ids tuple)
-    states: dict[int, tuple[float, tuple[int, ...]]] = {0: (0.0, ())}
-    for ident, w, v in items:
+    n = len(items)
+    W = sum(w for _, w, _ in items)
+    values = np.full(W + 1, _NEG, dtype=np.float64)
+    values[0] = 0.0
+    took = np.zeros((n, W + 1), dtype=bool)
+    for idx, (ident, w, v) in enumerate(items):
+        shifted = np.full(W + 1, _NEG)
+        np.add(values[:W + 1 - w], v, out=shifted[w:])
         if ident in forced_set:
-            states = {
-                wt + w: (val + v, kept + (ident,))
-                for wt, (val, kept) in states.items()
-            }
+            took[idx] = shifted != _NEG
+            values = shifted
         else:
-            nxt = dict(states)
-            for wt, (val, kept) in states.items():
-                cand = (val + v, kept + (ident,))
-                key = wt + w
-                if key not in nxt or cand[0] > nxt[key][0]:
-                    nxt[key] = cand
-            states = nxt
-    if cap is not None:
-        clamped: dict[int, tuple[float, tuple[int, ...]]] = {}
-        for wt, (val, kept) in states.items():
-            key = min(wt, cap)
-            if key not in clamped or val > clamped[key][0]:
-                clamped[key] = (val, kept)
-        states = clamped
-    return {w: (v, tuple(sorted(ids))) for w, (v, ids) in states.items()}
+            upd = shifted > values          # strict: ties keep the skip branch
+            took[idx] = upd
+            values = np.where(upd, shifted, values)
+
+    def backtrack(wt: int) -> tuple[int, ...]:
+        ids = []
+        t = wt
+        for idx in range(n - 1, -1, -1):
+            ident, w, _v = items[idx]
+            if took[idx, t]:
+                ids.append(ident)
+                t -= w
+        return tuple(sorted(ids))
+
+    reachable = [int(wt) for wt in np.nonzero(values != _NEG)[0]]
+    if cap is None:
+        return {wt: (float(values[wt]), backtrack(wt)) for wt in reachable}
+    clamped: dict[int, int] = {}
+    for wt in reachable:                    # ascending: ties keep smallest wt
+        key = min(wt, cap)
+        if key not in clamped or values[wt] > values[clamped[key]]:
+            clamped[key] = wt
+    return {key: (float(values[wt]), backtrack(wt))
+            for key, wt in clamped.items()}
+
+
+def pareto_prune_options(
+    opts: Mapping[int, tuple[float, float, tuple[int, ...]]],
+) -> dict[int, tuple[float, float, tuple[int, ...]]]:
+    """Drop dominated ``k → (I, T, kept)`` options within one span.
+
+    Option ``a`` dominates ``b`` when ``I_a ≥ I_b`` and ``T_a ≤ T_b`` (ties
+    resolved toward the smaller ``k``).  Dominated options can never appear
+    in an optimal plan of Problem 5 — the DP maximizes ΣI under a ΣT budget,
+    so swapping a dominated pick for its dominator keeps feasibility and
+    does not lower the objective.  Pruning therefore preserves the DP's
+    optimum exactly while shrinking the candidate set it sweeps.
+    """
+    ordered = sorted(opts.items(), key=lambda kv: (kv[1][1], -kv[1][0], kv[0]))
+    out: dict[int, tuple[float, float, tuple[int, ...]]] = {}
+    best_i = _NEG
+    for k, (imp, lat, kept) in ordered:
+        if imp > best_i:
+            out[k] = (imp, lat, kept)
+            best_i = imp
+    return out
 
 
 class SegmentEnumerator:

@@ -24,6 +24,7 @@ from .dp import TableFn
 from .importance import ImportanceSpec, measure_importance, magnitude_importance
 from .latency import AnalyticTPUOracle, LatencyOracle, WallClockOracle
 from .plan import CompressionPlan, Segment, identity_plan
+from .segments import pareto_prune_options
 
 
 @dataclasses.dataclass
@@ -33,6 +34,7 @@ class Tables:
     entries: dict[tuple[int, int], dict[int, tuple[float, float, tuple[int, ...]]]]
     build_seconds_latency: float = 0.0
     build_seconds_importance: float = 0.0
+    num_pruned: int = 0              # options dropped by Pareto dominance
 
     @property
     def num_entries(self) -> int:
@@ -40,6 +42,24 @@ class Tables:
 
     def fn(self) -> TableFn:
         return lambda i, j: self.entries.get((i, j), {})
+
+
+def pareto_prune(
+    entries: dict[tuple[int, int], dict[int, tuple[float, float, tuple[int, ...]]]],
+) -> tuple[dict, int]:
+    """Apply per-span Pareto-dominance pruning; returns (pruned, #dropped).
+
+    Optimum-preserving for the DP (see
+    :func:`repro.core.segments.pareto_prune_options`), so it runs before the
+    solver ever sees the tables.
+    """
+    out: dict = {}
+    dropped = 0
+    for span, opts in entries.items():
+        row = pareto_prune_options(opts)
+        dropped += len(opts) - len(row)
+        out[span] = row
+    return out, dropped
 
 
 def build_tables(
@@ -51,35 +71,37 @@ def build_tables(
     base_perf: float | None = None,
     params=None,
     progress: Callable[[str], None] | None = None,
+    prune: bool = True,
 ) -> Tables:
-    """Construct both lookup tables for ``host`` (Algorithm 2, lines 1-8)."""
+    """Construct both lookup tables for ``host`` (Algorithm 2, lines 1-8).
+
+    Latency and importance are filled in a single pass over the enumerated
+    spans (one Segment build and one options walk per span instead of two);
+    per-table build times are still accounted separately.  With ``prune``
+    (default), options Pareto-dominated within their span are dropped before
+    the tables reach the DP — provably optimum-preserving.
+    """
     oracle = latency_oracle or AnalyticTPUOracle()
     enum = host.enumerator(method)
     entries: dict = {}
-
-    # ---- latency table ------------------------------------------------------
-    t0 = time.perf_counter()
-    lat: dict[tuple[int, int, int], float] = {}
-    spans = list(enum.all_spans())
-    for i, j, opts in spans:
-        for k, (val, kept) in opts.items():
-            seg = Segment(i=i, j=j, k=k, kept=kept)
-            if isinstance(oracle, WallClockOracle):
-                fn = host.segment_callable(seg, params)
-                lat[(i, j, k)] = oracle.time_callable(fn)
-            else:
-                lat[(i, j, k)] = oracle.segment_latency(host.segment_cost(seg))
-    t_lat = time.perf_counter() - t0
-
-    # ---- importance table ----------------------------------------------------
-    t0 = time.perf_counter()
+    t_lat = t_imp = 0.0
     total_value = sum(d.value for d in enum.descs)
-    for i, j, opts in spans:
+
+    for i, j, opts in enum.all_spans():
         row = {}
         for k, (val, kept) in opts.items():
             seg = Segment(i=i, j=j, k=k, kept=kept,
                           original=(j - i == 1 and k == host.original_k(j)
                                     and set(kept) == set(seg_layers(i, j))))
+            t0 = time.perf_counter()
+            if isinstance(oracle, WallClockOracle):
+                fn = host.segment_callable(seg, params)
+                lat = oracle.time_callable(fn)
+            else:
+                lat = oracle.segment_latency(host.segment_cost(seg))
+            t_lat += time.perf_counter() - t0
+
+            t0 = time.perf_counter()
             if seg.original:
                 imp = 1.0                      # exp(0): untouched layer
             elif importance == "magnitude":
@@ -90,15 +112,19 @@ def build_tables(
                     one_segment_plan(host, seg), params)
                 imp = measure_importance(apply_fn, p, importance,
                                          base_perf or 0.0)
-            row[k] = (imp, lat[(i, j, k)], kept)
+            t_imp += time.perf_counter() - t0
+            row[k] = (imp, lat, kept)
         if row:
             entries[(i, j)] = row
         if progress:
             progress(f"table span ({i},{j}]: {len(row)} entries")
-    t_imp = time.perf_counter() - t0
+
+    dropped = 0
+    if prune:
+        entries, dropped = pareto_prune(entries)
 
     return Tables(entries=entries, build_seconds_latency=t_lat,
-                  build_seconds_importance=t_imp)
+                  build_seconds_importance=t_imp, num_pruned=dropped)
 
 
 def seg_layers(i: int, j: int) -> tuple[int, ...]:

@@ -2,15 +2,25 @@
 
 The paper's hot spot: after LayerMerge, a segment executes as ONE conv
 whose kernel has grown (Eq. 1).  TPU adaptation: instead of im2col (which
-materializes the k²-unrolled input in HBM), the kernel keeps the whole
-input image tile resident in VMEM and accumulates the k_h·k_w shifted
-GEMMs — (Ho·Wo, Cin) @ (Cin, bCout) per tap — on the MXU, so the grown
+materializes the k²-unrolled input in HBM), each grid step keeps one
+*output-row tile* of the image in VMEM and accumulates the k_h·k_w shifted
+GEMMs — (tile_ho·Wo, Cin) @ (Cin, bCout) per tap — on the MXU, so the grown
 kernel costs FLOPs but no extra HBM traffic (that is exactly the trade the
 DP's latency table models).
 
-Grid: (batch, cout-tiles).  VMEM: image H·W·Cin ≤ ~2 MiB for the CNN-paper
-shapes (56×56×256·bf16 ≈ 1.6 MiB), weights k²·Cin·bCout, fp32 acc.
-Bias + activation are fused in ops.py's epilogue.
+Grid: ``(batch, ho-tiles, cout-tiles)``.  Each input block carries a
+``k_h − 1``-row halo so neighbouring output tiles need no communication;
+the halo'd row tiles are materialized host-side, which keeps the BlockSpec
+index maps blocked and static at the price of one extra input-sized HBM
+copy per call (the gather rewrites the whole image plus halo rows whenever
+more than one row tile is needed — a zero-copy halo needs manual DMA from
+an HBM-resident input; see ROADMAP).  VMEM per step: input
+``(tile_ho + k_h − 1)·W·Cin``, weights
+``k²·Cin·bCout``, fp32 accumulator ``tile_ho·Wo·bCout`` — bounded by the
+tile chooser regardless of image height, so 224×224-class inputs no longer
+require full-image VMEM residency.  Bias add and the boundary activation
+σ_j run in the kernel epilogue (fp32, before the store), eliminating the
+extra HBM round-trip the unfused epilogue paid.
 """
 from __future__ import annotations
 
@@ -18,40 +28,99 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
+from .ref import apply_activation
 
-def _kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int):
-    ho, wo = o_ref.shape[0], o_ref.shape[1]
+# VMEM budget for one halo'd input tile; ~1.5 MiB leaves room for the
+# weight block, fp32 accumulator and double buffering inside ~16 MiB/core.
+_TILE_IN_BYTES = 1.5 * 2 ** 20
+
+
+def choose_tile_ho(h: int, w: int, cin: int, kh: int, itemsize: int,
+                   budget_bytes: float = _TILE_IN_BYTES) -> int:
+    """Largest output-row tile whose halo'd input block fits the budget.
+
+    Prefers multiples of 8 (the fp32 sublane count) and collapses to the
+    full image when it already fits — then the kernel degenerates to the
+    untiled fast path with a single ho-tile.
+    """
+    ho = h - kh + 1
+    row_bytes = max(w * cin * itemsize, 1)
+    tile = int(budget_bytes // row_bytes) - (kh - 1)
+    if tile >= ho:
+        return max(ho, 1)
+    tile = max(tile, 1)
+    if tile > 8:
+        tile -= tile % 8
+    return tile
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, kh: int, kw: int,
+            activation: str | None):
+    tho, wo, bcout = o_ref.shape
     cin = x_ref.shape[-1]
-    bcout = o_ref.shape[-1]
-    acc = jnp.zeros((ho * wo, bcout), jnp.float32)
+    acc = jnp.zeros((tho * wo, bcout), jnp.float32)
     for u in range(kh):
         for v in range(kw):
-            xs = x_ref[u:u + ho, v:v + wo, :].astype(jnp.float32)
+            xs = x_ref[u:u + tho, v:v + wo, :].astype(jnp.float32)
             ws = w_ref[u, v].astype(jnp.float32)          # (Cin, bCout)
-            acc = acc + jnp.dot(xs.reshape(ho * wo, cin), ws,
+            acc = acc + jnp.dot(xs.reshape(tho * wo, cin), ws,
                                 preferred_element_type=jnp.float32)
-    o_ref[...] = acc.reshape(ho, wo, bcout).astype(o_ref.dtype)
+    acc = acc + b_ref[0].astype(jnp.float32)              # (bCout,) broadcast
+    # fused epilogue: σ_j on the fp32 accumulator, shared with the oracle
+    acc = apply_activation(acc, activation)
+    o_ref[...] = acc.reshape(tho, wo, bcout).astype(o_ref.dtype)
 
 
-def merged_conv(x, w, *, bcout: int = 128, interpret: bool = False):
-    """x: (N, H, W, Cin); w: (kh, kw, Cin, Cout) → (N, Ho, Wo, Cout)."""
+def merged_conv(x, w, b=None, *, bcout: int = 128, tile_ho: int | None = None,
+                activation: str | None = None, interpret: bool = False):
+    """x: (N, H, W, Cin); w: (kh, kw, Cin, Cout) → (N, Ho, Wo, Cout).
+
+    ``tile_ho`` is the output-row tile height (default: chosen to bound the
+    VMEM working set); ``b``/``activation`` fuse the segment epilogue.
+    """
     n, h, wdt, cin = x.shape
     kh, kw, _, cout = w.shape
     ho, wo = h - kh + 1, wdt - kw + 1
     bcout = min(bcout, cout)
     assert cout % bcout == 0, "pad channels at the ops layer"
-    grid = (n, cout // bcout)
-    return pl.pallas_call(
-        functools.partial(_kernel, kh=kh, kw=kw),
+    if tile_ho is None:
+        tile_ho = choose_tile_ho(h, wdt, cin, kh, x.dtype.itemsize)
+    tile_ho = max(1, min(tile_ho, ho))
+    n_th = -(-ho // tile_ho)
+    ho_p = n_th * tile_ho
+    tile_hi = tile_ho + kh - 1
+
+    # Halo'd row tiles, materialized host-side: tile t covers input rows
+    # [t·tile_ho, t·tile_ho + tile_hi).  Rows past H (only in the ragged
+    # last tile) are zero-padded and the garbage output rows sliced off.
+    need_h = ho_p + kh - 1
+    if need_h > h:
+        x = jnp.pad(x, ((0, 0), (0, need_h - h), (0, 0), (0, 0)))
+    if n_th == 1:
+        xt = x[:, None]
+    else:
+        rows = (np.arange(n_th)[:, None] * tile_ho
+                + np.arange(tile_hi)[None, :]).reshape(-1)
+        xt = x[:, rows].reshape(n, n_th, tile_hi, wdt, cin)
+
+    bias = jnp.zeros((1, cout), x.dtype) if b is None else b.reshape(1, cout)
+
+    grid = (n, n_th, cout // bcout)
+    out = pl.pallas_call(
+        functools.partial(_kernel, kh=kh, kw=kw, activation=activation),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((None, h, wdt, cin), lambda b, co: (b, 0, 0, 0)),
-            pl.BlockSpec((kh, kw, cin, bcout), lambda b, co: (0, 0, 0, co)),
+            pl.BlockSpec((None, None, tile_hi, wdt, cin),
+                         lambda bb, th, co: (bb, th, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, cin, bcout), lambda bb, th, co: (0, 0, 0, co)),
+            pl.BlockSpec((1, bcout), lambda bb, th, co: (0, co)),
         ],
-        out_specs=pl.BlockSpec((None, ho, wo, bcout),
-                               lambda b, co: (b, 0, 0, co)),
-        out_shape=jax.ShapeDtypeStruct((n, ho, wo, cout), x.dtype),
+        out_specs=pl.BlockSpec((None, tile_ho, wo, bcout),
+                               lambda bb, th, co: (bb, th, 0, co)),
+        out_shape=jax.ShapeDtypeStruct((n, ho_p, wo, cout), x.dtype),
         interpret=interpret,
-    )(x, w)
+    )(xt, w, bias)
+    return out[:, :ho] if ho_p != ho else out

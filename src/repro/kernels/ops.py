@@ -80,17 +80,28 @@ def rmsnorm_op(x, g, *, eps: float = 1e-6, interpret: bool = False):
     return y.reshape(shape)
 
 
-def merged_conv_op(x, w, b=None, *, interpret: bool = False):
+def merged_conv_op(x, w, b=None, *, activation: str | None = None,
+                   tile_ho: int | None = None, bcout: int | None = None,
+                   interpret: bool = False):
+    """Merged-segment conv with fused bias + boundary activation.
+
+    ``tile_ho`` (output-row tile) and ``bcout`` (output-channel tile) default
+    to the kernel's VMEM-budget heuristic; pass explicit values to sweep.
+    """
     if not (_use_pallas() or interpret):
-        return ref.merged_conv_ref(x, w, b)
+        y = ref.merged_conv_ref(x, w, b)
+        return ref.apply_activation(y, activation)
     cout = w.shape[-1]
     w_p, pc = _pad_to(w, 3, 128 if cout >= 128 else cout)
-    y = merged_conv(x, w_p, bcout=min(128, w_p.shape[-1]),
-                    interpret=interpret)
+    b_p = None if b is None else jnp.pad(b, (0, pc))
+    cout_p = w_p.shape[-1]
+    bc = min(bcout or 128, cout_p)
+    while cout_p % bc:                  # largest divisor of the padded cout
+        bc -= 1
+    y = merged_conv(x, w_p, b_p, bcout=bc, tile_ho=tile_ho,
+                    activation=activation, interpret=interpret)
     if pc:
         y = y[..., :cout]
-    if b is not None:
-        y = y + b.astype(y.dtype)
     return y
 
 

@@ -36,6 +36,23 @@ def merged_conv_ref(x, w, b=None):
     return y.astype(x.dtype)
 
 
+def apply_activation(y, name=None):
+    """Boundary activation σ_j of a merged segment (oracle for the fused
+    kernel epilogue); fp32 math regardless of storage dtype."""
+    if name is None or name == "none":
+        return y
+    z = y.astype(jnp.float32)
+    if name == "relu":
+        z = jnp.maximum(z, 0.0)
+    elif name == "relu6":
+        z = jnp.clip(z, 0.0, 6.0)
+    elif name == "silu":
+        z = jax.nn.silu(z)
+    else:
+        raise ValueError(f"unknown activation {name!r}")
+    return z.astype(y.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True):
     """(B, S, H, D) GQA-free attention oracle, fp32 softmax."""
     b, s, h, d = q.shape

@@ -25,7 +25,23 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from jax import shard_map as _shard_map
+import inspect
+
+try:                                    # jax >= 0.5 top-level export
+    from jax import shard_map as _jax_shard_map
+except ImportError:                     # jax 0.4.x: experimental namespace
+    from jax.experimental.shard_map import shard_map as _jax_shard_map
+
+if "check_vma" in inspect.signature(_jax_shard_map).parameters:
+    shard_map = _jax_shard_map
+else:
+    def shard_map(f, **kwargs):
+        """Map the modern ``check_vma`` kwarg onto jax 0.4.x's ``check_rep``."""
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _jax_shard_map(f, **kwargs)
+
+_shard_map = shard_map                  # module-internal alias
 
 from repro.optim.compress import compressed_psum
 

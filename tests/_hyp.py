@@ -1,0 +1,84 @@
+"""Hypothesis shim for hosts without the ``hypothesis`` package.
+
+The property tests in this repo use a small, fixed subset of the hypothesis
+API: ``@given`` with keyword strategies, ``@settings(max_examples=..,
+deadline=None)``, and the ``integers`` / ``floats`` / ``sampled_from``
+strategies.  When hypothesis is installed (see requirements-dev.txt) we
+re-export the real thing; otherwise this module provides a deterministic
+fallback that draws ``max_examples`` seeded pseudo-random examples per test.
+The fallback trades hypothesis's shrinking and edge-case bias for zero
+dependencies — every draw is reproducible from the test's qualified name, so
+failures are stable across runs.
+"""
+from __future__ import annotations
+
+try:                                        # pragma: no cover - thin re-export
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example_for(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            # log-uniform when the range spans decades (matches how the
+            # tests use it: scale factors 1e-3..1e3), uniform otherwise.
+            import math
+            if min_value > 0 and max_value / min_value > 1e3:
+                lo, hi = math.log(min_value), math.log(max_value)
+                return _Strategy(lambda rng: math.exp(rng.uniform(lo, hi)))
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: rng.choice(seq))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+    st = _strategies()
+
+    def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper():
+                n = getattr(fn, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+                for i in range(n):
+                    rng = random.Random(f"{fn.__module__}.{fn.__qualname__}:{i}")
+                    kwargs = {name: strat.example_for(rng)
+                              for name, strat in sorted(strategies.items())}
+                    try:
+                        fn(**kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example ({i + 1}/{n}): "
+                            f"{fn.__name__}({kwargs!r})") from e
+            # pytest resolves fixture names via inspect.signature, which
+            # follows __wrapped__ — drop it so the strategy kwargs are not
+            # mistaken for fixtures.
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

@@ -6,7 +6,12 @@ import textwrap
 
 import pytest
 
-ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+# The children simulate host devices via XLA_FLAGS, so cpu is always the
+# right platform — and it must be pinned explicitly: on hosts with libtpu
+# installed, an unset platform sends backend init into ~30-retry GCP
+# metadata fetches (minutes per subprocess).
+ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+       "JAX_PLATFORMS": "cpu"}
 
 
 def run_sub(code, devices=8, timeout=600):

@@ -1,0 +1,278 @@
+"""Certification of this PR's performance fast paths.
+
+Seeded ``numpy.random`` randomized equivalence (no hypothesis dependency):
+
+* vectorized ``solve_dp`` == scalar ``solve_dp_reference`` — bit-identical
+  plans, objectives, and latencies (same candidate order, same strict-max
+  tie-breaking);
+* both == ``brute_force`` on small instances (Theorem 3.1);
+* Pareto-dominance pruning of the lookup tables preserves the DP optimum;
+* the tiled merged-conv kernel (interpret mode) matches the jnp oracle
+  across odd shapes, ragged halo tiles, and the fused bias+activation
+  epilogue;
+* ``solve_knapsack`` returns ``None`` on forced-infeasible instances.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dp import (brute_force, solve_dp, solve_dp_reference,
+                           solve_knapsack)
+from repro.core.segments import pareto_prune_options, subset_selection
+from repro.core.tables import Tables, pareto_prune
+from repro.kernels import ops, ref
+from repro.kernels.merged_conv import choose_tile_ho, merged_conv
+
+
+def make_instance(rng, L, max_k_opts=3, max_lat=10):
+    table = {}
+    for i in range(L):
+        for j in range(i + 1, L + 1):
+            if j - i > 1 and rng.random() < 0.3:
+                continue
+            opts = {}
+            for k in rng.choice(range(1, 12),
+                                size=rng.integers(1, max_k_opts + 1),
+                                replace=False):
+                opts[int(k)] = (float(rng.random()),
+                                float(rng.integers(1, max_lat + 1)), ())
+            table[(i, j)] = opts
+    return table
+
+
+# ---------------------------------------------------------------------------
+# vectorized DP == scalar reference == brute force
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(40))
+def test_solve_dp_bitidentical_to_reference(seed):
+    rng = np.random.default_rng(seed)
+    L = int(rng.integers(2, 7))
+    budget = int(rng.integers(3, 41))
+    table = make_instance(rng, L)
+    fn = lambda i, j: table.get((i, j), {})
+    fast = solve_dp(L, fn, float(budget), budget)
+    slow = solve_dp_reference(L, fn, float(budget), budget)
+    if slow is None:
+        assert fast is None
+        return
+    assert fast is not None
+    # bit-identical, not approximately equal
+    assert fast.objective == slow.objective
+    assert fast.latency == slow.latency
+    assert fast.plan == slow.plan
+    assert np.array_equal(fast.table_M, slow.table_M)
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_solve_dp_matches_brute_force(seed):
+    rng = np.random.default_rng(seed + 10_000)
+    L = int(rng.integers(2, 6))
+    budget = int(rng.integers(3, 41))
+    table = make_instance(rng, L)
+    fn = lambda i, j: table.get((i, j), {})
+    dp = solve_dp(L, fn, float(budget), budget)
+    bf = brute_force(L, fn, float(budget), budget)
+    if bf is None:
+        assert dp is None
+        return
+    assert dp is not None
+    assert dp.objective == pytest.approx(bf[0], rel=1e-12)
+
+
+def test_solve_dp_fractional_latencies_match_reference():
+    rng = np.random.default_rng(7)
+    for _ in range(10):
+        L = int(rng.integers(2, 6))
+        P = int(rng.integers(5, 60))
+        T0 = float(rng.uniform(2.0, 20.0))
+        table = {}
+        for i in range(L):
+            for j in range(i + 1, L + 1):
+                table[(i, j)] = {int(k): (float(rng.random()),
+                                          float(rng.uniform(0.05, 6.0)), ())
+                                 for k in range(1, 4)}
+        fn = lambda i, j: table.get((i, j), {})
+        fast = solve_dp(L, fn, T0, P)
+        slow = solve_dp_reference(L, fn, T0, P)
+        assert (fast is None) == (slow is None)
+        if fast is not None:
+            assert fast.objective == slow.objective
+            assert fast.plan == slow.plan
+
+
+# ---------------------------------------------------------------------------
+# Pareto pruning preserves the optimum
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(25))
+def test_pareto_pruned_tables_same_objective(seed):
+    rng = np.random.default_rng(seed + 20_000)
+    L = int(rng.integers(2, 7))
+    budget = int(rng.integers(3, 41))
+    table = make_instance(rng, L, max_k_opts=5)
+    pruned, dropped = pareto_prune(table)
+    assert dropped >= 0
+    assert sum(map(len, pruned.values())) + dropped == \
+        sum(map(len, table.values()))
+    full = solve_dp(L, lambda i, j: table.get((i, j), {}),
+                    float(budget), budget)
+    slim = solve_dp(L, lambda i, j: pruned.get((i, j), {}),
+                    float(budget), budget)
+    assert (full is None) == (slim is None)
+    if full is not None:
+        assert slim.objective == full.objective
+
+
+def test_pareto_prune_drops_only_dominated():
+    opts = {3: (0.9, 5.0, ()),     # dominates k=5
+            5: (0.5, 7.0, ()),     # dominated: lower I, higher T
+            7: (0.95, 9.0, ()),    # kept: best I
+            9: (0.95, 9.5, ())}    # dominated by k=7 (equal I, higher T)
+    out = pareto_prune_options(opts)
+    assert set(out) == {3, 7}
+    assert out[3] == opts[3] and out[7] == opts[7]
+
+
+def test_tables_fn_roundtrip_with_pruning():
+    entries = {(0, 1): {1: (1.0, 1.0, (1,)), 2: (0.5, 2.0, (1,))}}
+    pruned, dropped = pareto_prune(entries)
+    t = Tables(entries=pruned, num_pruned=dropped)
+    assert dropped == 1
+    assert t.num_entries == 1
+    assert t.fn()(0, 1) == {1: (1.0, 1.0, (1,))}
+    assert t.fn()(5, 6) == {}
+
+
+# ---------------------------------------------------------------------------
+# vectorized subset_selection (flat weight-axis arrays)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(20))
+def test_subset_selection_exact(seed):
+    import itertools
+    rng = np.random.default_rng(seed + 30_000)
+    n = int(rng.integers(0, 8))
+    items = [(i, int(rng.integers(0, 5)), float(rng.random()))
+             for i in range(n)]
+    forced = [i for i in range(n) if rng.random() < 0.25]
+    cap = int(rng.integers(1, 10)) if rng.random() < 0.5 else None
+    got = subset_selection(items, forced=forced, cap=cap)
+    best = {}
+    for r in range(n + 1):
+        for sub in itertools.combinations(range(n), r):
+            if not set(forced) <= set(sub):
+                continue
+            w = sum(items[i][1] for i in sub)
+            v = sum(items[i][2] for i in sub)
+            key = min(w, cap) if cap is not None else w
+            if key not in best or v > best[key][0]:
+                best[key] = (v, sub)
+    assert set(got) == set(best)
+    for w, (v, ids) in got.items():
+        assert v == pytest.approx(best[w][0], rel=1e-12)
+        ww = sum(items[i][1] for i in ids)
+        assert (min(ww, cap) if cap is not None else ww) == w
+        assert sum(items[i][2] for i in ids) == pytest.approx(v, rel=1e-12)
+        assert set(forced) <= set(ids)
+
+
+# ---------------------------------------------------------------------------
+# knapsack: forced-infeasible returns None (regression)
+# ---------------------------------------------------------------------------
+
+def test_knapsack_forced_infeasible_returns_none():
+    # single forced layer beyond the whole budget
+    assert solve_knapsack(1, {1: 1.0}, {1: 100.0}, 10.0, 10,
+                          forced=(1,)) is None
+    # forced pair individually feasible, jointly infeasible
+    assert solve_knapsack(2, {1: 1.0, 2: 1.0}, {1: 6.0, 2: 6.0}, 10.0, 10,
+                          forced=(1, 2)) is None
+    # forced infeasible even though a cheap optional layer exists
+    assert solve_knapsack(2, {1: 5.0, 2: 1.0}, {1: 1.0, 2: 100.0}, 10.0, 10,
+                          forced=(2,)) is None
+
+
+def test_knapsack_feasible_forced_is_kept():
+    sol = solve_knapsack(3, {1: 0.1, 2: 5.0, 3: 0.2},
+                         {1: 4.0, 2: 4.0, 3: 4.0}, 8.0, 8, forced=(1,))
+    assert sol is not None
+    C, obj, lat = sol
+    assert 1 in C
+    assert obj == pytest.approx(5.1)
+    assert lat <= 8.0
+
+
+# ---------------------------------------------------------------------------
+# tiled merged conv vs oracle — halo edge cases, fused epilogue
+# ---------------------------------------------------------------------------
+
+CONV_CASES = [
+    # n, h, w, cin, cout, kh, kw, tile_ho, activation, bias
+    (1, 13, 11, 5, 7, 3, 5, 4, "relu", True),      # odd dims, ragged last tile
+    (2, 9, 9, 3, 6, 7, 7, 2, "relu6", True),       # halo taller than the tile
+    (1, 8, 8, 4, 4, 1, 1, 3, "silu", False),       # 1x1 kernel, no bias
+    (3, 10, 17, 2, 3, 5, 2, 1, None, True),        # tile_ho=1
+    (1, 6, 6, 2, 2, 6, 6, None, "relu", True),     # single output row
+    (1, 31, 29, 3, 5, 3, 3, 7, "relu", True),      # non-multiple-of-8 tile
+]
+
+
+@pytest.mark.parametrize("n,h,w,cin,cout,kh,kw,tile_ho,act,bias", CONV_CASES)
+def test_tiled_merged_conv_matches_oracle(n, h, w, cin, cout, kh, kw,
+                                          tile_ho, act, bias):
+    rng = np.random.default_rng(h * 31 + w * 7 + kh)
+    x = jnp.asarray(rng.standard_normal((n, h, w, cin)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((kh, kw, cin, cout)) * 0.1,
+                     jnp.float32)
+    b = jnp.asarray(rng.standard_normal(cout), jnp.float32) if bias else None
+    y = ops.merged_conv_op(x, wt, b, activation=act, tile_ho=tile_ho,
+                           interpret=True)
+    yr = ref.apply_activation(ref.merged_conv_ref(x, wt, b), act)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_tiled_equals_untiled_kernel():
+    """Tiling is a pure scheduling change: same floats per output element."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((2, 16, 12, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 8, 8)) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.standard_normal(8), jnp.float32)
+    whole = merged_conv(x, w, b, bcout=8, tile_ho=14, activation="relu",
+                        interpret=True)
+    tiled = merged_conv(x, w, b, bcout=8, tile_ho=4, activation="relu",
+                        interpret=True)
+    np.testing.assert_array_equal(np.asarray(whole), np.asarray(tiled))
+
+
+def test_merged_conv_bf16_tiled():
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((1, 14, 14, 8)), jnp.bfloat16)
+    w = jnp.asarray(rng.standard_normal((5, 5, 8, 16)) * 0.1, jnp.bfloat16)
+    y = merged_conv(x, w, bcout=16, tile_ho=3, interpret=True)
+    yr = ref.merged_conv_ref(x, w)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_choose_tile_ho_bounds_vmem():
+    # big image: the tile must bound the halo'd input block to the budget
+    tile = choose_tile_ho(224, 224, 64, 7, 4)
+    assert 1 <= tile < 224 - 7 + 1
+    assert (tile + 6) * 224 * 64 * 4 <= 1.5 * 2 ** 20
+    # small image: degenerates to a single full-height tile
+    assert choose_tile_ho(12, 12, 16, 3, 4) == 10
+
+
+def test_merged_conv_op_channel_padding_with_fusion():
+    """Cout not a multiple of the channel tile + fused bias/activation."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((1, 10, 10, 3)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 3, 130)) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.standard_normal(130), jnp.float32)
+    y = ops.merged_conv_op(x, w, b, activation="relu", interpret=True)
+    yr = ref.apply_activation(ref.merged_conv_ref(x, w, b), "relu")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-5, atol=2e-5)

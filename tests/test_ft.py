@@ -130,7 +130,10 @@ def test_elastic_reshard_restore(tmp_path):
             np.asarray(out["w"]), np.arange(32.0).reshape(8, 4))
         print("ELASTIC_OK")
     """)
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+           # without a pinned platform, libtpu hosts stall in TPU metadata
+           # fetches; the child only ever uses simulated host devices.
+           "JAX_PLATFORMS": "cpu"}
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-                       cwd="/root/repo", timeout=300)
+                       text=True, env=env, cwd="/root/repo", timeout=300)
     assert "ELASTIC_OK" in r.stdout, r.stdout + r.stderr

@@ -74,9 +74,12 @@ def test_rules_divisibility_fallback():
         assert r.spec(("experts", "ffn"), (8, 128)) == P("model", None)
         print("RULES_OK")
     """)
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+           # without a pinned platform, libtpu hosts stall in TPU metadata
+           # fetches; the child only ever uses simulated host devices.
+           "JAX_PLATFORMS": "cpu"}
     res = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, cwd="/root/repo", timeout=300,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                         text=True, cwd="/root/repo", timeout=300, env=env)
     assert "RULES_OK" in res.stdout, res.stdout + res.stderr
 
 

@@ -2,7 +2,7 @@
 import itertools
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.plan import LayerDesc
 from repro.core.segments import SegmentEnumerator, subset_selection
