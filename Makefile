@@ -1,0 +1,19 @@
+# Convenience targets; everything pins JAX_PLATFORMS=cpu (see
+# scripts/verify.sh for why).
+
+PY := python
+ENV := JAX_PLATFORMS=cpu PYTHONPATH=src
+
+.PHONY: verify test bench bench-dp
+
+verify:
+	bash scripts/verify.sh
+
+test:
+	$(ENV) $(PY) -m pytest -x -q
+
+bench:
+	$(ENV) $(PY) -m benchmarks.run
+
+bench-dp:
+	$(ENV) $(PY) -m benchmarks.bench_dp

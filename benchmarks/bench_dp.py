@@ -3,8 +3,9 @@
 Measures the vectorized Algorithm-1 solver against the scalar reference at
 production-depth instances (the fine budget grids of Kim et al. 2023's
 two-stage DP, P up to 8192), plus the effect of Pareto-dominance pruning
-and a merged-conv output-row tile sweep.  Writes ``results/BENCH_dp.json``
-so the perf trajectory is trackable across PRs.
+and a merged-conv stride × (tile_ho, tile_wo) sweep with DMA-halo traffic
+accounting.  Writes ``results/BENCH_dp.json`` so the perf trajectory is
+trackable across PRs.
 
   PYTHONPATH=src python -m benchmarks.bench_dp [--full] [--out PATH]
 
@@ -74,34 +75,68 @@ def bench_solver(L, P, *, scalar: bool, rng):
     return row
 
 
-def bench_conv_tiles(rng):
-    """Merged-conv output-row tile sweep (jnp oracle wall-time on this host;
-    interpret-mode max|Δ| certifies each tiling against the oracle)."""
+def conv_tile_sweep(rng, *, ks=(5,), strides=(1, 2),
+                    tiles=((4, None), (8, None), (16, 16), (32, 8),
+                           (None, None)),
+                    hw=56, cin=32, cout=32):
+    """The canonical merged-conv (stride, k) × (tile_ho, tile_wo) sweep.
+
+    One dict row per point: jnp-oracle wall time (``oracle_us``, timed once
+    per (stride, k) — tiling cannot affect it), interpret-mode max|Δ|
+    certifying the tiling against the oracle, and the traffic model's
+    DMA-halo bytes saved over the deleted host-side gather.  Shared by
+    this bench and ``benchmarks/run.py``'s ``conv_sweep`` so the two never
+    drift.
+    """
     import jax
     import jax.numpy as jnp
     from repro.kernels import ops, ref
-    from repro.kernels.merged_conv import choose_tile_ho
+    from repro.kernels.merged_conv import choose_tiles, input_traffic_model
 
-    n, h, w, cin, cout, k = 1, 56, 56, 32, 32, 5
-    x = jnp.asarray(rng.standard_normal((n, h, w, cin)), jnp.float32)
-    wt = jnp.asarray(rng.standard_normal((k, k, cin, cout)) * 0.1, jnp.float32)
-    b = jnp.asarray(rng.standard_normal(cout), jnp.float32)
-    oracle = ref.apply_activation(ref.merged_conv_ref(x, wt, b), "relu")
+    def timed_us(fn, n=10):
+        jax.block_until_ready(fn())
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(fn())
+        return (time.perf_counter() - t0) / n * 1e6
 
     rows = []
-    for tile_ho in (4, 8, 16, 32, None):
-        t0 = time.perf_counter()
-        y = ops.merged_conv_op(x, wt, b, activation="relu", tile_ho=tile_ho,
-                               interpret=True)
-        dt = time.perf_counter() - t0
-        rows.append({
-            "shape": f"n{n}_h{h}w{w}_cin{cin}cout{cout}_k{k}",
-            "tile_ho": tile_ho if tile_ho is not None else
-                       choose_tile_ho(h, w, cin, k, 4),
-            "auto": tile_ho is None,
-            "interpret_s": dt,
-            "maxdiff_vs_oracle": float(jnp.abs(y - oracle).max()),
-        })
+    for stride in strides:
+        for k in ks:
+            x = jnp.asarray(rng.standard_normal((1, hw, hw, cin)),
+                            jnp.float32)
+            wt = jnp.asarray(rng.standard_normal((k, k, cin, cout)) * 0.1,
+                             jnp.float32)
+            b = jnp.asarray(rng.standard_normal(cout), jnp.float32)
+            oracle = ref.apply_activation(
+                ref.merged_conv_ref(x, wt, b, stride=stride), "relu")
+            f = jax.jit(lambda x=x, wt=wt, b=b, s=stride: ref.merged_conv_ref(
+                x, wt, b, stride=s))
+            oracle_us = timed_us(f)
+            a_ho, a_wo = choose_tiles(hw, hw, cin, k, k, stride, 4,
+                                      bcout=cout)
+            for tile_ho, tile_wo in tiles:
+                t0 = time.perf_counter()
+                y = ops.merged_conv_op(x, wt, b, stride=stride,
+                                       activation="relu", tile_ho=tile_ho,
+                                       tile_wo=tile_wo, interpret=True)
+                dt = time.perf_counter() - t0
+                traffic = input_traffic_model(hw, hw, cin, k, k, stride, 4,
+                                              tile_ho=tile_ho or a_ho,
+                                              tile_wo=tile_wo or a_wo)
+                rows.append({
+                    "shape": f"n1_h{hw}w{hw}_cin{cin}cout{cout}_k{k}",
+                    "stride": stride,
+                    "k": k,
+                    "tile_ho": tile_ho or a_ho,
+                    "tile_wo": tile_wo or a_wo,
+                    "auto": tile_ho is None,
+                    "oracle_us": oracle_us,
+                    "interpret_s": dt,
+                    "halo_bytes_saved": traffic["saved_bytes"],
+                    "dma_bytes": traffic["dma_bytes"],
+                    "maxdiff_vs_oracle": float(jnp.abs(y - oracle).max()),
+                })
     return rows
 
 
@@ -117,7 +152,7 @@ def main(argv=None):
         bench_solver(64, 2048, scalar=True, rng=rng),
         bench_solver(128, 8192, scalar=args.full, rng=rng),
     ]
-    conv = bench_conv_tiles(rng)
+    conv = conv_tile_sweep(rng)
     report = {"solver": solver, "merged_conv_tiles": conv}
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)

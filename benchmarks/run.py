@@ -17,6 +17,15 @@ import time
 sys.path.insert(0, os.path.dirname(__file__))
 
 
+def _timeit(fn, n=10):
+    import jax
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / n * 1e6
+
+
 def bench_kernels():
     """Micro-bench each Pallas kernel's jnp path on this host + record the
     interpret-mode max|Δ| vs oracle (TPU wall-time needs real hardware)."""
@@ -27,13 +36,7 @@ def bench_kernels():
     rows = []
     key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 4)
-
-    def timeit(fn, n=10):
-        jax.block_until_ready(fn())
-        t0 = time.perf_counter()
-        for _ in range(n):
-            jax.block_until_ready(fn())
-        return (time.perf_counter() - t0) / n * 1e6
+    timeit = _timeit
 
     x = jax.random.normal(ks[0], (1024, 512))
     u = jax.random.normal(ks[1], (512, 256)) * 0.05
@@ -75,6 +78,33 @@ def bench_kernels():
                         - ref.merged_conv_ref(xc, wc)).max())
     rows.append(("kernel,merged_conv_k5_c32", timeit(f),
                  f"interpret_maxdiff={err:.2e}"))
+    return rows
+
+
+def bench_conv_sweep():
+    """Stride × k × (tile_ho, tile_wo) sweep of the generalized merged conv.
+
+    For each point: jnp-oracle wall time on this host, interpret-mode
+    max|Δ| vs the oracle, and the input-HBM bytes the zero-copy DMA halos
+    reclaim over the deleted host-side gather (``halo_bytes_saved``).
+    Delegates to the canonical sweep in ``bench_dp.conv_tile_sweep`` so the
+    two benches cannot drift; this wrapper only formats the CSV rows.
+    """
+    import numpy as np
+
+    from bench_dp import conv_tile_sweep
+
+    rows = []
+    for r in conv_tile_sweep(np.random.default_rng(7), ks=(3, 5, 7),
+                             strides=(1, 2),
+                             tiles=((8, None), (8, 16), (None, None))):
+        rows.append((
+            f"conv_sweep,s{r['stride']}_k{r['k']}_tile{r['tile_ho']}"
+            f"x{r['tile_wo']}{'_auto' if r['auto'] else ''}",
+            r["oracle_us"],
+            f"halo_bytes_saved={r['halo_bytes_saved']:.0f};"
+            f"dma_bytes={r['dma_bytes']:.0f};"
+            f"interpret_maxdiff={r['maxdiff_vs_oracle']:.2e}"))
     return rows
 
 
@@ -132,6 +162,7 @@ def main(argv=None):
         "table6": tables.table6_ablation,
         "table78": tables.table78_cost,
         "kernels": bench_kernels,
+        "conv_sweep": bench_conv_sweep,
         "dp": bench_dp_speed,
         "roofline": bench_roofline,
     }

@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Tier-1 verification + kernel equivalence, platform-pinned.
+#
+#   bash scripts/verify.sh [extra pytest args]
+#   make verify
+#
+# JAX_PLATFORMS=cpu is pinned because on libtpu hosts an unpinned child
+# process stalls for minutes in TPU metadata fetches; every test here is
+# CPU/interpret-mode by design (real-TPU timing has its own benches).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS=cpu
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# Kernel equivalence first: the fast, specific signal when iterating on
+# Pallas code; the tier-1 pass below skips these files so nothing runs
+# twice and the union still covers the whole suite.
+KERNEL_SUITE="tests/test_kernels.py tests/test_merged_conv_general.py \
+    tests/test_fastpath.py"
+
+echo "== interpret-mode kernel equivalence (Pallas vs jnp oracles) =="
+python -m pytest -q $KERNEL_SUITE
+
+echo "== tier-1 suite (remainder) =="
+IGNORES=""
+for f in $KERNEL_SUITE; do IGNORES="$IGNORES --ignore=$f"; done
+python -m pytest -x -q $IGNORES "$@"
+
+echo "verify: OK"

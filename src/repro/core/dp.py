@@ -61,6 +61,49 @@ def _collect_span_opts(L: int, table: TableFn):
     return span_opts
 
 
+@dataclasses.dataclass
+class _FlatSpanOpts:
+    """All (i, j, k) candidates as flat arrays, in the scalar solver's visit
+    order: for each end layer ``l``, spans by ascending start ``lp``, then
+    table insertion order.  ``offsets[l] : offsets[l + 1]`` indexes layer
+    ``l``'s candidates; ``kept`` is the one per-candidate Python object
+    (needed only at reconstruction, never in the hot loop).
+    """
+
+    lp: np.ndarray          # int32  (n,) span start
+    k: np.ndarray           # int32  (n,) merged-size coordinate
+    imp: np.ndarray         # float64 (n,) importance I[i,j,k]
+    lat: np.ndarray         # float64 (n,) true latency T[i,j,k]
+    kept: list              # tuple[int, ...] per candidate
+    offsets: np.ndarray     # int64 (L + 2,)
+
+
+def _flatten_span_opts(L: int, table: TableFn) -> _FlatSpanOpts:
+    """One span walk → flat candidate arrays (the only Python-loop pass)."""
+    lp: list[int] = []
+    ks: list[int] = []
+    imp: list[float] = []
+    lat: list[float] = []
+    kept: list = []
+    offsets = np.zeros(L + 2, dtype=np.int64)
+    for l in range(1, L + 1):
+        for i in range(l):
+            for k, (iv, tv, kv) in table(i, l).items():
+                lp.append(i)
+                ks.append(k)
+                imp.append(iv)
+                lat.append(tv)
+                kept.append(kv)
+        offsets[l + 1] = len(lp)
+    return _FlatSpanOpts(
+        lp=np.asarray(lp, dtype=np.int32),
+        k=np.asarray(ks, dtype=np.int32),
+        imp=np.asarray(imp, dtype=np.float64),
+        lat=np.asarray(lat, dtype=np.float64),
+        kept=kept,
+        offsets=offsets)
+
+
 def _build_result(L, T0, P, M, segs_rev, method) -> DPResult:
     segs = list(reversed(segs_rev))
     true_lat = sum(s_lat for _, s_lat in segs)
@@ -90,42 +133,40 @@ def solve_dp(
     if T0 <= 0 or P <= 0:
         raise ValueError("T0 and P must be positive")
     unit = T0 / P
-    span_opts = _collect_span_opts(L, table)
+    flat = _flatten_span_opts(L, table)
+    # Vectorized latency discretization: same floor + epsilon as
+    # _discretize, over every candidate at once.
+    td_all = np.floor(flat.lat / unit + 1e-9).astype(np.int64)
 
     # M[l, t]: best Σ I over the first l layers with budget index t (0..P).
     M = np.full((L + 1, P + 1), NEG, dtype=np.float64)
     M[0, :] = 0.0
-    # choice[l, t]: index into cands_per_l[l] of the winning candidate.
-    choice = np.full((L + 1, P + 1), -1, dtype=np.int32)
-    cands_per_l: list[list[tuple[int, int, int, float, tuple[int, ...], float]]] = \
-        [[] for _ in range(L + 1)]
+    # choice[l, t]: flat candidate index of the winning candidate.
+    choice = np.full((L + 1, P + 1), -1, dtype=np.int64)
     row_reachable = np.zeros(L + 1, dtype=bool)
     row_reachable[0] = True
 
+    lp_all, imp_all, off = flat.lp, flat.imp, flat.offsets
     cand = np.empty(P + 1, dtype=np.float64)
     for l in range(1, L + 1):
-        cands = cands_per_l[l]
-        for lp in range(l):
-            opts = span_opts.get((lp, l))
-            if not opts:
-                continue
-            for k, (imp, lat, kept) in opts.items():
-                td = _discretize(lat, unit)
-                if td > P:
-                    continue
-                cands.append((lp, k, td, lat, kept, imp))
+        lo, hi = off[l], off[l + 1]
         best = M[l]
-        ch = choice[l]
-        for idx, (lp, k, td, lat, kept, imp) in enumerate(cands):
-            if not row_reachable[lp]:
-                continue        # all-NEG row can never win; pure skip
-            # cand[t] = M[lp, t - td] + imp for t >= td, NEG below — the
-            # scalar solver's inner t-loop as one shifted vector add.
-            cand[:td] = NEG
-            np.add(M[lp, :P + 1 - td], imp, out=cand[td:])
-            upd = cand > best                      # strict: first max wins,
-            best[upd] = cand[upd]                  # matching the reference
-            ch[upd] = idx
+        if hi > lo:
+            # feasibility + reachability filtered as one vector op; skipped
+            # candidates could never win (all-NEG rows, off-grid budgets),
+            # so the visit order of the survivors matches the reference.
+            live = np.nonzero((td_all[lo:hi] <= P)
+                              & row_reachable[lp_all[lo:hi]])[0] + lo
+            ch = choice[l]
+            for ci in live:
+                td = td_all[ci]
+                # cand[t] = M[lp, t - td] + imp for t >= td, NEG below — the
+                # scalar solver's inner t-loop as one shifted vector add.
+                cand[:td] = NEG
+                np.add(M[lp_all[ci], :P + 1 - td], imp_all[ci], out=cand[td:])
+                upd = cand > best                  # strict: first max wins,
+                best[upd] = cand[upd]              # matching the reference
+                ch[upd] = ci
         row_reachable[l] = bool(np.max(best) != NEG)
 
     if M[L, P] == NEG:
@@ -135,11 +176,13 @@ def solve_dp(
     segs_rev: list[tuple[Segment, float]] = []
     l, t = L, P
     while l > 0:
-        lp, k, td, lat, kept, _imp = cands_per_l[l][choice[l, t]]
+        ci = choice[l, t]
+        lp, k = int(flat.lp[ci]), int(flat.k[ci])
+        lat, kept = float(flat.lat[ci]), flat.kept[ci]
         orig = (original_k is not None and l - lp == 1
                 and k == original_k(l) and set(kept) == {l})
         segs_rev.append((Segment(i=lp, j=l, k=k, kept=kept, original=orig), lat))
-        l, t = lp, t - td
+        l, t = lp, t - int(td_all[ci])
     return _build_result(L, T0, P, M, segs_rev, method)
 
 

@@ -169,12 +169,20 @@ class SegmentEnumerator:
 
         items: list[tuple[int, int, float]] = []
         forced: list[int] = []
+        # Stride-aware growth (CNN convention): a kept conv after a stride-s
+        # prefix grows the merged kernel by (Ker−1)·s (Eq. 1 with strides),
+        # so the k coordinate stays the *true* merged kernel size on strided
+        # spans.  Strided layers are never prunable (not shape-preserving),
+        # hence the prefix product is deterministic per span.  Hosts without
+        # stride metadata (transformers) see s ≡ 1 — weights unchanged.
+        s_prefix = 1
         for d in interior:
             if d.linearizable:
-                items.append((d.index, d.growth, d.value))
+                items.append((d.index, d.growth * s_prefix, d.value))
                 if not d.prunable:
                     forced.append(d.index)
-            else:
+            s_prefix *= int(d.meta.get("stride", 1)) if d.meta else 1
+            if not d.linearizable:
                 # Non-linearizable layer strictly inside a merged segment: it
                 # must be pruned; if it cannot be pruned the span is invalid.
                 if not d.prunable:

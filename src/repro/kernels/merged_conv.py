@@ -1,26 +1,47 @@
-"""Pallas TPU kernel: merged-segment convolution (VALID, stride 1, NHWC).
+"""Pallas TPU kernel: merged-segment convolution (VALID, stride s, NHWC).
 
 The paper's hot spot: after LayerMerge, a segment executes as ONE conv
-whose kernel has grown (Eq. 1).  TPU adaptation: instead of im2col (which
-materializes the k²-unrolled input in HBM), each grid step keeps one
-*output-row tile* of the image in VMEM and accumulates the k_h·k_w shifted
-GEMMs — (tile_ho·Wo, Cin) @ (Cin, bCout) per tap — on the MXU, so the grown
-kernel costs FLOPs but no extra HBM traffic (that is exactly the trade the
-DP's latency table models).
+whose kernel has grown (Eq. 1) and whose stride is the product of the
+segment's strides.  TPU adaptation: instead of im2col (which materializes
+the k²-unrolled input in HBM), each grid step keeps one *output tile* of
+the image in VMEM and accumulates the k_h·k_w shifted GEMMs —
+(tile_ho·tile_wo, Cin) @ (Cin, bCout) per tap — on the MXU, so the grown
+kernel costs FLOPs but no extra HBM traffic (exactly the trade the DP's
+latency table models).
 
-Grid: ``(batch, ho-tiles, cout-tiles)``.  Each input block carries a
-``k_h − 1``-row halo so neighbouring output tiles need no communication;
-the halo'd row tiles are materialized host-side, which keeps the BlockSpec
-index maps blocked and static at the price of one extra input-sized HBM
-copy per call (the gather rewrites the whole image plus halo rows whenever
-more than one row tile is needed — a zero-copy halo needs manual DMA from
-an HBM-resident input; see ROADMAP).  VMEM per step: input
-``(tile_ho + k_h − 1)·W·Cin``, weights
-``k²·Cin·bCout``, fp32 accumulator ``tile_ho·Wo·bCout`` — bounded by the
-tile chooser regardless of image height, so 224×224-class inputs no longer
-require full-image VMEM residency.  Bias add and the boundary activation
-σ_j run in the kernel epilogue (fp32, before the store), eliminating the
-extra HBM round-trip the unfused epilogue paid.
+Grid: ``(batch, ho-tiles, wo-tiles, cout-tiles)`` with the channel axis
+innermost so one input tile serves every output-channel block.
+
+Zero-copy halos.  The input stays HBM-resident (``memory_space=ANY``); each
+grid step DMAs its halo'd input window straight into VMEM scratch with
+``pltpu.make_async_copy`` over ``pl.ds`` row/col windows::
+
+    step t   (co == 0):  start DMA[t+1] → slot (t+1)%2     (prefetch)
+                         wait  DMA[t]   ← slot t%2
+    step t   (co  > 0):  reuse slot t%2 (already resident)
+
+    HBM x ───DMA──▶ VMEM xs[2, Hi, Wi, Cin]   (double-buffered)
+    HBM w ──spec──▶ VMEM (kh, kw, Cin, bCout)
+                    fp32 acc (tile_ho·tile_wo, bCout) ──▶ out block
+
+The former host-side halo'd-row-tile gather (one extra input-sized HBM
+copy per call whenever more than one row tile was needed) is gone: input
+HBM traffic per call is one read of the image plus the ``k−1`` halo
+rows/cols re-read at tile seams (see :func:`input_traffic_model`).
+
+Strided segments run on the MXU via phase selection: the scratch window
+holds the dense input rows/cols and each tap slices the stride-s phase by
+a reshape-and-index (``(s·t, …) → (t, s, …)[:, 0]``), so the output index
+map stays blocked and static while the MXU contraction sees only the
+decimated elements — no jnp-oracle fallback for stride > 1.
+
+VMEM per step (bounded by :func:`choose_tiles` regardless of image size):
+double-buffered input scratch ``2·(s·tile_ho + k_h − 1)·(s·tile_wo +
+k_w − 1)·Cin``, weight block ``k²·Cin·bCout``, fp32 accumulator + output
+block ``tile_ho·tile_wo·bCout``.  Very wide single-row images (panorama /
+NLP-grid) shrink ``tile_wo`` instead of overflowing VMEM.  Bias add and
+the boundary activation σ_j run in the kernel epilogue (fp32, before the
+store), eliminating the extra HBM round-trip the unfused epilogue paid.
 """
 from __future__ import annotations
 
@@ -28,99 +49,209 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from .ref import apply_activation
 
-# VMEM budget for one halo'd input tile; ~1.5 MiB leaves room for the
-# weight block, fp32 accumulator and double buffering inside ~16 MiB/core.
-_TILE_IN_BYTES = 1.5 * 2 ** 20
+# Full working-set budget for the 2-D planner: double-buffered input
+# scratch + weight block + fp32 accumulator + output block, inside
+# ~16 MiB/core with room for Mosaic's own spills.
+_VMEM_BUDGET = 6 * 2 ** 20
 
 
-def choose_tile_ho(h: int, w: int, cin: int, kh: int, itemsize: int,
-                   budget_bytes: float = _TILE_IN_BYTES) -> int:
-    """Largest output-row tile whose halo'd input block fits the budget.
+def choose_tiles(h: int, w: int, cin: int, kh: int, kw: int, stride: int,
+                 itemsize: int, bcout: int = 128,
+                 budget_bytes: float = _VMEM_BUDGET) -> tuple[int, int]:
+    """2-D ``(tile_ho, tile_wo)`` VMEM planner for the merged conv.
 
-    Prefers multiples of 8 (the fp32 sublane count) and collapses to the
-    full image when it already fits — then the kernel degenerates to the
-    untiled fast path with a single ho-tile.
+    Accounts the whole per-step working set: double-buffered input scratch
+    ``2·(s·tho + k_h − 1)·(s·two + k_w − 1)·Cin·itemsize``, the weight
+    block ``k_h·k_w·Cin·bCout·itemsize`` and the fp32 accumulator plus
+    output block ``tho·two·bCout·(4 + itemsize)``.  Starts from the full
+    output width and grows the row tile; only when a single full-width
+    output row overflows (very wide images) does it shrink ``tile_wo``
+    with ``tile_ho = 1``.  Prefers multiples of 8 on the tiled axis.
     """
-    ho = h - kh + 1
-    row_bytes = max(w * cin * itemsize, 1)
-    tile = int(budget_bytes // row_bytes) - (kh - 1)
-    if tile >= ho:
-        return max(ho, 1)
-    tile = max(tile, 1)
-    if tile > 8:
-        tile -= tile % 8
-    return tile
+    s = max(stride, 1)
+    ho = max((h - kh) // s + 1, 1)
+    wo = max((w - kw) // s + 1, 1)
+    fixed = kh * kw * cin * bcout * itemsize          # weight block
+    acc_b = bcout * (4 + itemsize)                    # per output element
+
+    def round8(t, cap):
+        t = max(min(t, cap), 1)
+        if t < cap and t > 8:
+            t -= t % 8
+        return t
+
+    # Single full-width output row: does it fit?
+    shi1 = s + kh - 1
+    a_w = 2 * shi1 * s * cin * itemsize + acc_b
+    b_w = fixed + 2 * shi1 * (kw - 1) * cin * itemsize
+    if a_w * wo + b_w > budget_bytes:
+        tile_wo = int((budget_bytes - b_w) // a_w)
+        return 1, round8(tile_wo, wo)
+
+    # Full width fits: grow the row tile.
+    swi = s * wo + kw - 1
+    a_h = 2 * s * swi * cin * itemsize + wo * acc_b
+    b_h = fixed + 2 * (kh - 1) * swi * cin * itemsize
+    tile_ho = int((budget_bytes - b_h) // a_h)
+    return round8(tile_ho, ho), wo
 
 
-def _kernel(x_ref, w_ref, b_ref, o_ref, *, kh: int, kw: int,
-            activation: str | None):
-    tho, wo, bcout = o_ref.shape
-    cin = x_ref.shape[-1]
-    acc = jnp.zeros((tho * wo, bcout), jnp.float32)
+def input_traffic_model(h: int, w: int, cin: int, kh: int, kw: int,
+                        stride: int, itemsize: int,
+                        tile_ho: int | None = None,
+                        tile_wo: int | None = None,
+                        bcout: int = 128) -> dict[str, float]:
+    """Per-image input HBM bytes of the DMA kernel vs the PR-1 host gather.
+
+    ``dma_bytes`` is what the zero-copy kernel moves: every halo'd tile
+    window read once straight out of the HBM-resident image (one image
+    read plus the ``k−1`` seam rows/cols).  ``gather_bytes`` is what the
+    deleted host-side gather paid whenever more than one row tile was
+    needed: read the image, write the halo'd row-tile tensor, read it back
+    in the kernel.  ``saved_bytes`` is the reclaimed bandwidth.
+    """
+    s = max(stride, 1)
+    if tile_ho is None or tile_wo is None:
+        a_ho, a_wo = choose_tiles(h, w, cin, kh, kw, s, itemsize, bcout)
+        tile_ho = tile_ho or a_ho
+        tile_wo = tile_wo or a_wo
+    ho = max((h - kh) // s + 1, 1)
+    wo = max((w - kw) // s + 1, 1)
+    tile_ho = max(1, min(tile_ho, ho))
+    tile_wo = max(1, min(tile_wo, wo))
+    n_th, n_tw = -(-ho // tile_ho), -(-wo // tile_wo)
+    tile_hi = s * (tile_ho - 1) + kh
+    tile_wi = s * (tile_wo - 1) + kw
+    image = h * w * cin * itemsize
+    dma = n_th * n_tw * tile_hi * tile_wi * cin * itemsize
+    # PR-1 path: stride-1 only, full-width row tiles; xt was materialized
+    # (and re-read) whenever n_th > 1.
+    xt = n_th * tile_hi * w * cin * itemsize
+    gather = image + 2 * xt if n_th > 1 else xt
+    return {"image_bytes": float(image), "dma_bytes": float(dma),
+            "gather_bytes": float(gather),
+            "saved_bytes": float(gather - dma),
+            "tile_ho": tile_ho, "tile_wo": tile_wo}
+
+
+def _kernel(x_hbm, w_ref, b_ref, o_ref, xs, sem, *, kh: int, kw: int,
+            stride: int, n_th: int, n_tw: int, activation: str | None):
+    tho, two, bcout = o_ref.shape
+    cin = w_ref.shape[2]
+    s = stride
+    tile_hi = s * (tho - 1) + kh
+    tile_wi = s * (two - 1) + kw
+    swi = xs.shape[2]
+    bb, th, tw, co = (pl.program_id(i) for i in range(4))
+    step = (bb * n_th + th) * n_tw + tw
+    n_steps = pl.num_programs(0) * n_th * n_tw
+
+    def dma(step_idx, slot):
+        b2 = step_idx // (n_th * n_tw)
+        r = step_idx % (n_th * n_tw)
+        return pltpu.make_async_copy(
+            x_hbm.at[b2, pl.ds((r // n_tw) * tho * s, tile_hi),
+                     pl.ds((r % n_tw) * two * s, tile_wi), :],
+            xs.at[slot, pl.ds(0, tile_hi), pl.ds(0, tile_wi), :],
+            sem.at[slot])
+
+    @pl.when((step == 0) & (co == 0))
+    def _():                                   # pipeline prologue
+        dma(0, 0).start()
+
+    @pl.when((co == 0) & (step + 1 < n_steps))
+    def _():                                   # prefetch next tile window
+        dma(step + 1, (step + 1) % 2).start()
+
+    @pl.when(co == 0)
+    def _():                                   # await this step's window
+        dma(step, step % 2).wait()
+
+    acc = jnp.zeros((tho * two, bcout), jnp.float32)
     for u in range(kh):
         for v in range(kw):
-            xs = x_ref[u:u + tho, v:v + wo, :].astype(jnp.float32)
-            ws = w_ref[u, v].astype(jnp.float32)          # (Cin, bCout)
-            acc = acc + jnp.dot(xs.reshape(tho * wo, cin), ws,
-                                preferred_element_type=jnp.float32)
-    acc = acc + b_ref[0].astype(jnp.float32)              # (bCout,) broadcast
+            # Phase selection: slice the dense window, then keep phase 0 of
+            # each stride-s group via reshape-and-index (no strided loads;
+            # garbage beyond the DMA'd region lands only in dropped phases).
+            blk = xs[step % 2, pl.ds(u, s * tho)]        # (s·tho, swi, Cin)
+            rows = blk.reshape(tho, s, swi, cin)[:, 0]   # (tho, swi, Cin)
+            xsel = rows[:, v:v + s * two]                # (tho, s·two, Cin)
+            xsel = xsel.reshape(tho, two, s, cin)[:, :, 0]
+            acc = acc + jnp.dot(
+                xsel.reshape(tho * two, cin).astype(jnp.float32),
+                w_ref[u, v].astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    acc = acc + b_ref[0].astype(jnp.float32)             # (bCout,) broadcast
     # fused epilogue: σ_j on the fp32 accumulator, shared with the oracle
     acc = apply_activation(acc, activation)
-    o_ref[...] = acc.reshape(tho, wo, bcout).astype(o_ref.dtype)
+    o_ref[...] = acc.reshape(tho, two, bcout).astype(o_ref.dtype)
 
 
-def merged_conv(x, w, b=None, *, bcout: int = 128, tile_ho: int | None = None,
+def merged_conv(x, w, b=None, *, stride: int = 1, bcout: int = 128,
+                tile_ho: int | None = None, tile_wo: int | None = None,
                 activation: str | None = None, interpret: bool = False):
     """x: (N, H, W, Cin); w: (kh, kw, Cin, Cout) → (N, Ho, Wo, Cout).
 
-    ``tile_ho`` is the output-row tile height (default: chosen to bound the
-    VMEM working set); ``b``/``activation`` fuse the segment epilogue.
+    VALID convolution with ``stride`` on both spatial axes.  ``tile_ho`` /
+    ``tile_wo`` are the output tile dims (default: the 2-D VMEM planner);
+    ``b``/``activation`` fuse the segment epilogue.
     """
     n, h, wdt, cin = x.shape
     kh, kw, _, cout = w.shape
-    ho, wo = h - kh + 1, wdt - kw + 1
+    s = stride
+    assert s >= 1 and h >= kh and wdt >= kw, (x.shape, w.shape, s)
+    ho = (h - kh) // s + 1
+    wo = (wdt - kw) // s + 1
     bcout = min(bcout, cout)
     assert cout % bcout == 0, "pad channels at the ops layer"
-    if tile_ho is None:
-        tile_ho = choose_tile_ho(h, wdt, cin, kh, x.dtype.itemsize)
+    if tile_ho is None or tile_wo is None:
+        a_ho, a_wo = choose_tiles(h, wdt, cin, kh, kw, s, x.dtype.itemsize,
+                                  bcout)
+        tile_ho = a_ho if tile_ho is None else tile_ho
+        tile_wo = a_wo if tile_wo is None else tile_wo
     tile_ho = max(1, min(tile_ho, ho))
-    n_th = -(-ho // tile_ho)
-    ho_p = n_th * tile_ho
-    tile_hi = tile_ho + kh - 1
+    tile_wo = max(1, min(tile_wo, wo))
+    n_th, n_tw = -(-ho // tile_ho), -(-wo // tile_wo)
+    ho_p, wo_p = n_th * tile_ho, n_tw * tile_wo
+    tile_hi = s * (tile_ho - 1) + kh
+    tile_wi = s * (tile_wo - 1) + kw
+    # Scratch is padded so every tap's dense slice stays in bounds; the
+    # DMA fills only the (tile_hi, tile_wi) window, and elements beyond it
+    # are never selected (they fall in dropped stride phases).
+    shi = s * tile_ho + kh - 1
+    swi = s * tile_wo + kw - 1
 
-    # Halo'd row tiles, materialized host-side: tile t covers input rows
-    # [t·tile_ho, t·tile_ho + tile_hi).  Rows past H (only in the ragged
-    # last tile) are zero-padded and the garbage output rows sliced off.
-    need_h = ho_p + kh - 1
-    if need_h > h:
-        x = jnp.pad(x, ((0, 0), (0, need_h - h), (0, 0), (0, 0)))
-    if n_th == 1:
-        xt = x[:, None]
-    else:
-        rows = (np.arange(n_th)[:, None] * tile_ho
-                + np.arange(tile_hi)[None, :]).reshape(-1)
-        xt = x[:, rows].reshape(n, n_th, tile_hi, wdt, cin)
+    # Ragged last tiles: zero-pad the image so every DMA window is full
+    # (static copy sizes); the garbage output rows/cols are sliced off.
+    # Unlike the deleted gather this touches HBM only when ragged.
+    pad_h = max(0, (n_th - 1) * tile_ho * s + tile_hi - h)
+    pad_w = max(0, (n_tw - 1) * tile_wo * s + tile_wi - wdt)
+    if pad_h or pad_w:
+        x = jnp.pad(x, ((0, 0), (0, pad_h), (0, pad_w), (0, 0)))
 
     bias = jnp.zeros((1, cout), x.dtype) if b is None else b.reshape(1, cout)
 
-    grid = (n, n_th, cout // bcout)
+    grid = (n, n_th, n_tw, cout // bcout)
     out = pl.pallas_call(
-        functools.partial(_kernel, kh=kh, kw=kw, activation=activation),
+        functools.partial(_kernel, kh=kh, kw=kw, stride=s, n_th=n_th,
+                          n_tw=n_tw, activation=activation),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((None, None, tile_hi, wdt, cin),
-                         lambda bb, th, co: (bb, th, 0, 0, 0)),
-            pl.BlockSpec((kh, kw, cin, bcout), lambda bb, th, co: (0, 0, 0, co)),
-            pl.BlockSpec((1, bcout), lambda bb, th, co: (0, co)),
+            pl.BlockSpec(memory_space=pltpu.ANY),     # HBM-resident image
+            pl.BlockSpec((kh, kw, cin, bcout),
+                         lambda bb, th, tw, co: (0, 0, 0, co)),
+            pl.BlockSpec((1, bcout), lambda bb, th, tw, co: (0, co)),
         ],
-        out_specs=pl.BlockSpec((None, tile_ho, wo, bcout),
-                               lambda bb, th, co: (bb, th, 0, co)),
-        out_shape=jax.ShapeDtypeStruct((n, ho_p, wo, cout), x.dtype),
+        out_specs=pl.BlockSpec((None, tile_ho, tile_wo, bcout),
+                               lambda bb, th, tw, co: (bb, th, tw, co)),
+        out_shape=jax.ShapeDtypeStruct((n, ho_p, wo_p, cout), x.dtype),
+        scratch_shapes=[pltpu.VMEM((2, shi, swi, cin), x.dtype),
+                        pltpu.SemaphoreType.DMA((2,))],
         interpret=interpret,
-    )(xt, w, bias)
-    return out[:, :ho] if ho_p != ho else out
+    )(x, w, bias)
+    return out[:, :ho, :wo] if (ho_p, wo_p) != (ho, wo) else out

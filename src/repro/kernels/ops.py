@@ -80,26 +80,44 @@ def rmsnorm_op(x, g, *, eps: float = 1e-6, interpret: bool = False):
     return y.reshape(shape)
 
 
-def merged_conv_op(x, w, b=None, *, activation: str | None = None,
-                   tile_ho: int | None = None, bcout: int | None = None,
-                   interpret: bool = False):
-    """Merged-segment conv with fused bias + boundary activation.
+def _channel_tile(cout: int, requested: int | None) -> int:
+    """Lane-friendly output-channel tile: always a multiple of 8.
 
-    ``tile_ho`` (output-row tile) and ``bcout`` (output-channel tile) default
-    to the kernel's VMEM-budget heuristic; pass explicit values to sweep.
+    The old divisor walk (``while cout_p % bc: bc -= 1``) could degrade to
+    lane-hostile tiles like ``bc=1`` on odd channel counts; instead the
+    channel axis is padded *up* to a multiple of the chosen tile (ideally
+    the full 128-lane width), never searched down.  Explicit requests are
+    rounded to [8, 128] — one lane width is the widest useful block.
+    """
+    if requested is not None:
+        return max(8, min(-(-requested // 8) * 8, 128))
+    if cout >= 128:
+        return 128
+    return -(-max(cout, 8) // 8) * 8
+
+
+def merged_conv_op(x, w, b=None, *, stride: int = 1,
+                   activation: str | None = None,
+                   tile_ho: int | None = None, tile_wo: int | None = None,
+                   bcout: int | None = None, interpret: bool = False):
+    """Merged-segment conv (VALID, stride ``s``) with fused bias + boundary
+    activation.
+
+    ``tile_ho``/``tile_wo`` (output tile) and ``bcout`` (output-channel
+    tile) default to the kernel's 2-D VMEM planner; pass explicit values to
+    sweep.  Strided segments run through the Pallas kernel too — no
+    jnp-oracle fallback on TPU.
     """
     if not (_use_pallas() or interpret):
-        y = ref.merged_conv_ref(x, w, b)
+        y = ref.merged_conv_ref(x, w, b, stride=stride)
         return ref.apply_activation(y, activation)
     cout = w.shape[-1]
-    w_p, pc = _pad_to(w, 3, 128 if cout >= 128 else cout)
+    bc = _channel_tile(cout, bcout)
+    w_p, pc = _pad_to(w, 3, bc)
     b_p = None if b is None else jnp.pad(b, (0, pc))
-    cout_p = w_p.shape[-1]
-    bc = min(bcout or 128, cout_p)
-    while cout_p % bc:                  # largest divisor of the padded cout
-        bc -= 1
-    y = merged_conv(x, w_p, b_p, bcout=bc, tile_ho=tile_ho,
-                    activation=activation, interpret=interpret)
+    y = merged_conv(x, w_p, b_p, stride=stride, bcout=bc, tile_ho=tile_ho,
+                    tile_wo=tile_wo, activation=activation,
+                    interpret=interpret)
     if pc:
         y = y[..., :cout]
     return y

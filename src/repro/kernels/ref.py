@@ -26,11 +26,11 @@ def merged_ffn_ref(x, u, v):
     return (x.astype(jnp.float32) + y).astype(x.dtype)
 
 
-def merged_conv_ref(x, w, b=None):
-    """VALID NHWC conv (stride 1) + bias — the merged-segment layer."""
+def merged_conv_ref(x, w, b=None, stride: int = 1):
+    """VALID NHWC conv (stride ``s``) + bias — the merged-segment layer."""
     y = lax.conv_general_dilated(
-        x.astype(jnp.float32), w.astype(jnp.float32), (1, 1), "VALID",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x.astype(jnp.float32), w.astype(jnp.float32), (stride, stride),
+        "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC"))
     if b is not None:
         y = y + b.astype(jnp.float32)
     return y.astype(x.dtype)

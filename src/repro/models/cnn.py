@@ -33,6 +33,7 @@ from jax import lax
 
 from repro.core import merge as M
 from repro.core.plan import CompressionPlan, LayerDesc, Segment, identity_plan
+from repro.kernels import ops as kops
 
 
 # ---------------------------------------------------------------------------
@@ -107,19 +108,21 @@ class ConvNet:
         return descs
 
     def allowed_span(self, i: int, j: int) -> bool:
-        """Span predicate: skip-block consistency + strided restriction +
-        barrier units (pool/upsample/attn) must not sit strictly inside."""
+        """Span predicate: skip-block consistency + barrier units
+        (pool/upsample/attn) must not sit strictly inside.
+
+        Strided interiors are *allowed*: the paper's Appendix A ban (don't
+        merge a strided conv with a following k>1 conv) guarded against a
+        kernel blow-up the old stride-1 Pallas fast path could not execute.
+        The merged-conv kernel now runs strided segments on the MXU and the
+        enumerator's stride-aware growth keeps the k coordinate exact, so
+        the blow-up is a latency trade the DP prices from the table instead
+        of a hard ban.
+        """
         if j - i > 1:
             for l in range(i + 1, j + 1):
-                s = self.spec(l)
-                if s.kind != "conv":
+                if self.spec(l).kind != "conv":
                     return False
-                # paper Appendix A: don't merge a strided conv with a following
-                # k>1 conv (kernel blow-up).  Conservative: any in-span strided
-                # layer may only be followed by k==1 layers within the span.
-                if s.stride > 1 and l < j:
-                    if any(self.spec(m).k > 1 for m in range(l + 1, j + 1)):
-                        return False
         for sk in self.skips:
             inter = max(0, min(j, sk.end) - max(i, sk.start))
             if inter == 0:
@@ -529,7 +532,13 @@ def apply_merged(net: ConvNet, params, units: list[MergedUnit], x):
             hi = Km - 1 - lo
             if Km > 1:
                 x = jnp.pad(x, ((0, 0), (lo, hi), (lo, hi), (0, 0)))
-            x = _conv(x, unit.w, unit.stride, unit.depthwise) + unit.b
+            if unit.depthwise:
+                x = _conv(x, unit.w, unit.stride, True) + unit.b
+            else:
+                # Merged segments execute through the Pallas fast path on
+                # TPU (jnp oracle elsewhere) — strided ones included.
+                x = kops.merged_conv_op(x, unit.w, unit.b,
+                                        stride=unit.stride)
             # a skip-add whose block spans whole segments ends here; blocks
             # with start >= seg.i were Dirac-fused inside merge_segment
             # (proj blocks are never fused)

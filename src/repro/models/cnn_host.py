@@ -10,6 +10,7 @@ import jax.numpy as jnp
 from repro.core.latency import CostBreakdown, conv2d_cost
 from repro.core.plan import CompressionPlan, LayerDesc, Segment
 from repro.core.segments import SegmentEnumerator
+from repro.kernels import ops
 
 from . import cnn
 
@@ -95,7 +96,11 @@ class CNNHost:
         @jax.jit
         def fn(x, wgt, b):
             xp = jnp.pad(x, ((0, 0), (lo, hi), (lo, hi), (0, 0))) if K > 1 else x
-            return cnn._conv(xp, wgt, stride, dw) + b
+            if dw:
+                return cnn._conv(xp, wgt, stride, True) + b
+            # Time the segment exactly as it deploys: through the Pallas
+            # fast path on TPU (strided segments included), oracle off-TPU.
+            return ops.merged_conv_op(xp, wgt, b, stride=stride)
         return lambda: fn(x, wgt, b)
 
     # -- network builders ---------------------------------------------------------

@@ -7,9 +7,10 @@ Seeded ``numpy.random`` randomized equivalence (no hypothesis dependency):
   tie-breaking);
 * both == ``brute_force`` on small instances (Theorem 3.1);
 * Pareto-dominance pruning of the lookup tables preserves the DP optimum;
-* the tiled merged-conv kernel (interpret mode) matches the jnp oracle
-  across odd shapes, ragged halo tiles, and the fused bias+activation
-  epilogue;
+* the tiled merged-conv kernel (interpret mode; since PR 2 the tiles are
+  DMA'd from an HBM-resident input) matches the jnp oracle across odd
+  shapes, ragged halo tiles, and the fused bias+activation epilogue —
+  strided/W-tiled coverage lives in test_merged_conv_general.py;
 * ``solve_knapsack`` returns ``None`` on forced-infeasible instances.
 """
 import jax.numpy as jnp
@@ -21,7 +22,7 @@ from repro.core.dp import (brute_force, solve_dp, solve_dp_reference,
 from repro.core.segments import pareto_prune_options, subset_selection
 from repro.core.tables import Tables, pareto_prune
 from repro.kernels import ops, ref
-from repro.kernels.merged_conv import choose_tile_ho, merged_conv
+from repro.kernels.merged_conv import choose_tiles, merged_conv
 
 
 def make_instance(rng, L, max_k_opts=3, max_lat=10):
@@ -215,6 +216,7 @@ CONV_CASES = [
     (3, 10, 17, 2, 3, 5, 2, 1, None, True),        # tile_ho=1
     (1, 6, 6, 2, 2, 6, 6, None, "relu", True),     # single output row
     (1, 31, 29, 3, 5, 3, 3, 7, "relu", True),      # non-multiple-of-8 tile
+    (1, 6, 41, 3, 4, 3, 3, 2, "relu", True),       # wide image, odd W
 ]
 
 
@@ -257,13 +259,12 @@ def test_merged_conv_bf16_tiled():
                                rtol=2e-2, atol=2e-2)
 
 
-def test_choose_tile_ho_bounds_vmem():
-    # big image: the tile must bound the halo'd input block to the budget
-    tile = choose_tile_ho(224, 224, 64, 7, 4)
-    assert 1 <= tile < 224 - 7 + 1
-    assert (tile + 6) * 224 * 64 * 4 <= 1.5 * 2 ** 20
+def test_choose_tiles_bounds_vmem():
+    # big image: the planner must tile rows (halo'd block within budget)
+    tile, two = choose_tiles(224, 224, 64, 7, 7, 1, 4)
+    assert 1 <= tile < 224 - 7 + 1 and two == 224 - 7 + 1
     # small image: degenerates to a single full-height tile
-    assert choose_tile_ho(12, 12, 16, 3, 4) == 10
+    assert choose_tiles(12, 12, 16, 3, 3, 1, 4) == (10, 10)
 
 
 def test_merged_conv_op_channel_padding_with_fusion():
