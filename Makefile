@@ -4,7 +4,7 @@
 PY := python
 ENV := JAX_PLATFORMS=cpu PYTHONPATH=src
 
-.PHONY: verify test bench bench-dp
+.PHONY: verify test bench bench-dp bench-tables bench-smoke
 
 verify:
 	bash scripts/verify.sh
@@ -17,3 +17,12 @@ bench:
 
 bench-dp:
 	$(ENV) $(PY) -m benchmarks.bench_dp
+
+bench-tables:
+	$(ENV) $(PY) -m benchmarks.bench_tables
+
+# Seconds-scale probe-engine regression gate (also part of `make verify`):
+# asserts batched/sequential parity, bucket accounting, and cache
+# round-trips without the slow sequential wall-clock baseline.
+bench-smoke:
+	$(ENV) $(PY) -m benchmarks.bench_tables --smoke

@@ -27,4 +27,7 @@ IGNORES=""
 for f in $KERNEL_SUITE; do IGNORES="$IGNORES --ignore=$f"; done
 python -m pytest -x -q $IGNORES "$@"
 
+echo "== probe-engine bench smoke (table-build parity + accounting) =="
+python -m benchmarks.bench_tables --smoke > /dev/null
+
 echo "verify: OK"

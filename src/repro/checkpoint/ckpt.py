@@ -36,6 +36,22 @@ def _flatten(tree):
     return leaves, flat[1]
 
 
+def atomic_write_text(path: str, text: str) -> str:
+    """Atomic single-file publish: write ``path + '.tmp'``, then rename.
+
+    The same crash contract as the checkpoint dirs below — a reader never
+    observes a half-written file, and an interrupted write leaves only a
+    ``.tmp`` orphan.  Shared with the lookup-table cache
+    (:mod:`repro.core.table_cache`).
+    """
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+    os.replace(tmp, path)
+    return path
+
+
 def save(ckpt_dir: str, step: int, tree, *, metadata: dict | None = None,
          keep: int = 3):
     """Synchronous atomic save."""

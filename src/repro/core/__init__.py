@@ -7,10 +7,14 @@ from .dp import (solve_dp, solve_dp_reference, solve_knapsack, brute_force,
 from .latency import (AnalyticTPUOracle, WallClockOracle, CostBreakdown,
                       conv2d_cost, matmul_cost, rank_ffn_cost)
 from .importance import (ImportanceSpec, measure_importance,
-                         magnitude_importance, xent_loss, accuracy_perf,
-                         neg_loss_perf, distill_loss)
+                         magnitude_importance, adam_finetune_batched,
+                         xent_loss, accuracy_perf, neg_loss_perf,
+                         distill_loss)
+from .probe_engine import (EngineStats, ProbeCallable, layer_latencies,
+                           measure_latencies, measure_importances)
 from .tables import Tables, build_tables, one_segment_plan
 from .compress import CompressResult, compress, original_latency
+from . import table_cache
 
 __all__ = [
     "CompressionPlan", "LayerDesc", "Segment", "identity_plan",
@@ -21,7 +25,11 @@ __all__ = [
     "AnalyticTPUOracle", "WallClockOracle", "CostBreakdown",
     "conv2d_cost", "matmul_cost", "rank_ffn_cost",
     "ImportanceSpec", "measure_importance", "magnitude_importance",
+    "adam_finetune_batched",
     "xent_loss", "accuracy_perf", "neg_loss_perf", "distill_loss",
+    "EngineStats", "ProbeCallable", "layer_latencies",
+    "measure_latencies", "measure_importances",
     "Tables", "build_tables", "one_segment_plan",
     "CompressResult", "compress", "original_latency",
+    "table_cache",
 ]

@@ -6,13 +6,20 @@
 * ``'layermerge'`` — the paper's joint optimization (activations + layers);
 * ``'depth'``      — Kim et al. 2023 baseline: activations only (C = [L]);
 * ``'layeronly'``  — whole-layer knapsack (Problem 8), no merging.
+
+All per-layer probes (the ``T_orig`` pass and the knapsack's latency
+column) route through :mod:`repro.core.probe_engine`, so they share the
+same shape-signature bucketing as the table build instead of re-timing
+every layer ad hoc.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Callable
 
+from . import probe_engine
 from .dp import DPResult, solve_dp, solve_knapsack
 from .importance import ImportanceSpec, measure_importance
 from .latency import AnalyticTPUOracle, LatencyOracle, WallClockOracle
@@ -33,18 +40,12 @@ class CompressResult:
         return self.original_latency / max(self.compressed_latency, 1e-12)
 
 
-def original_latency(host, latency_oracle=None, params=None) -> float:
+def original_latency(host, latency_oracle=None, params=None, *,
+                     engine: str = "batched") -> float:
     """Σ per-layer latency of the untouched network (the paper's T_orig)."""
     oracle = latency_oracle or AnalyticTPUOracle()
-    total = 0.0
-    for l in range(1, len(host.descs()) + 1):
-        seg = Segment(i=l - 1, j=l, k=host.original_k(l), kept=(l,),
-                      original=True)
-        if isinstance(oracle, WallClockOracle):
-            total += oracle.time_callable(host.segment_callable(seg, params))
-        else:
-            total += oracle.segment_latency(host.segment_cost(seg))
-    return total
+    return sum(probe_engine.layer_latencies(host, oracle, params,
+                                            engine=engine))
 
 
 def compress(
@@ -57,20 +58,24 @@ def compress(
     importance: ImportanceSpec | str = "magnitude",
     base_perf: float | None = None,
     params=None,
+    engine: str = "batched",
+    cache_dir: str | None = None,
 ) -> CompressResult | None:
     """Run LayerMerge (or a baseline) at ``T0 = budget_ratio · T_orig``."""
     oracle = latency_oracle or AnalyticTPUOracle()
-    t_orig = original_latency(host, oracle, params)
+    layer_lats = probe_engine.layer_latencies(host, oracle, params,
+                                              engine=engine)
+    t_orig = sum(layer_lats)
     T0 = budget_ratio * t_orig
     L = len(host.descs())
 
     if method == "layeronly":
         return _layer_only(host, T0, P, oracle, importance, base_perf, params,
-                           t_orig)
+                           t_orig, layer_lats)
 
     tables = build_tables(host, method=method, latency_oracle=oracle,
                           importance=importance, base_perf=base_perf,
-                          params=params)
+                          params=params, engine=engine, cache_dir=cache_dir)
     t0 = time.perf_counter()
     res = solve_dp(L, tables.fn(), T0, P, method=method,
                    original_k=host.original_k)
@@ -83,20 +88,20 @@ def compress(
                           dp_seconds=dp_s)
 
 
-def _layer_only(host, T0, P, oracle, importance, base_perf, params, t_orig):
-    """Problem 8: latency-aware layer pruning (knapsack)."""
+def _layer_only(host, T0, P, oracle, importance, base_perf, params, t_orig,
+                layer_lats):
+    """Problem 8: latency-aware layer pruning (knapsack).
+
+    ``layer_lats`` comes from the caller's probe pass — the same engine
+    walk that produced ``T_orig`` — so each layer is probed exactly once.
+    """
     descs = host.descs()
     L = len(descs)
     imp: dict[int, float] = {}
-    lat: dict[int, float] = {}
+    lat: dict[int, float] = dict(zip(range(1, L + 1), layer_lats))
     forced = tuple(d.index for d in descs if not d.prunable)
+    total = sum(d.value for d in descs) or 1.0
     for l in range(1, L + 1):
-        seg = Segment(i=l - 1, j=l, k=host.original_k(l), kept=(l,),
-                      original=True)
-        if isinstance(oracle, WallClockOracle):
-            lat[l] = oracle.time_callable(host.segment_callable(seg, params))
-        else:
-            lat[l] = oracle.segment_latency(host.segment_cost(seg))
         # I[l] — importance of KEEPING l: exp(perf drop when l is removed).
         if not descs[l - 1].prunable:
             imp[l] = 1.0
@@ -108,8 +113,6 @@ def _layer_only(host, T0, P, oracle, importance, base_perf, params, t_orig):
                                          base_perf or 0.0)
             imp[l] = 1.0 / max(removed, 1e-12)
         else:
-            import math
-            total = sum(d.value for d in descs) or 1.0
             imp[l] = math.exp(descs[l - 1].value / total)
     t0 = time.perf_counter()
     sol = solve_knapsack(L, imp, lat, T0, P, forced=forced)

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import weakref
 from typing import Callable, Sequence
 
 import jax
@@ -38,6 +39,45 @@ class ImportanceSpec:
     steps: int = 8
     lr: float = 1e-3
     normalize_by_base: bool = False   # DDPM trick: divide by base loss
+    cache_token: str | None = None    # stable workload name enabling the
+                                      # on-disk table cache (closures are
+                                      # not content-addressable)
+
+
+# -- per-apply_fn compilation caches -----------------------------------------
+#
+# Every probe builds a fresh replaced network, but the SAME apply_fn is
+# driven many times within one probe (grad per fine-tune step, eval per
+# batch) and across repeated probes on shared networks.  Keyed weakly on
+# apply_fn so caches die with the closure: builders receive a *weak*
+# dereference of apply_fn, because a cached jitted closure that strongly
+# referenced its own cache key would make the WeakKeyDictionary immortal
+# and leak one XLA executable per probe.  Values hold a strong ref to the
+# auxiliary function (loss_fn) so its id() cannot be recycled while cached.
+
+_FN_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _cached(apply_fn, key, build):
+    """``build(get_apply)`` → ``(strong_refs, fn)``; returns cached ``fn``."""
+    try:
+        per = _FN_CACHE.setdefault(apply_fn, {})
+    except TypeError:            # non-weakrefable callable: no caching
+        return build(lambda: apply_fn)[1]
+    hit = per.get(key)
+    if hit is None:
+        ref = weakref.ref(apply_fn)
+        hit = build(ref)
+        per[key] = hit
+    return hit[1]
+
+
+def _cached_grad_fn(apply_fn, loss_fn):
+    """Jitted ``grad`` of the fine-tune loss, cached per (apply_fn, loss)."""
+    return _cached(
+        apply_fn, ("grad", id(loss_fn)),
+        lambda get: (loss_fn,
+                     jax.jit(jax.grad(lambda p, b: loss_fn(get(), p, b)))))
 
 
 def _adam_finetune(apply_fn, params, spec: ImportanceSpec):
@@ -45,7 +85,7 @@ def _adam_finetune(apply_fn, params, spec: ImportanceSpec):
     b1, b2, eps = 0.9, 0.999, 1e-8
     m = jax.tree.map(jnp.zeros_like, params)
     v = jax.tree.map(jnp.zeros_like, params)
-    grad_fn = jax.jit(jax.grad(lambda p, b: spec.loss_fn(apply_fn, p, b)))
+    grad_fn = _cached_grad_fn(apply_fn, spec.loss_fn)
 
     for step in range(spec.steps):
         batch = spec.train_batches[step % len(spec.train_batches)]
@@ -60,16 +100,88 @@ def _adam_finetune(apply_fn, params, spec: ImportanceSpec):
     return params
 
 
-def measure_importance(apply_fn, params, spec: ImportanceSpec,
-                       base_perf: float) -> float:
-    """One table entry: fine-tune the replaced net, return exp(ΔPerf)."""
-    tuned = _adam_finetune(apply_fn, params, spec)
-    perf = spec.perf_fn(apply_fn, tuned, spec.eval_batches)
+def adam_finetune_batched(apply_fn, stacked_params, spec: ImportanceSpec,
+                          grad_mask=None):
+    """Vmapped few-step Adam over a stacked probe axis (probe engine path).
+
+    ``stacked_params`` is one pytree whose leaves carry a leading probe
+    axis; ``apply_fn`` is shared by every lane (the host guarantees the
+    candidates are apply-compatible).  ``grad_mask`` (same structure,
+    stacked 0/1 scalars) freezes leaves that must stay exactly at their
+    candidate value — e.g. the Dirac kernels standing in for pruned convs,
+    whose update would otherwise turn "no layer" into a free extra layer.
+
+    One fine-tune step for ALL lanes is a single vmapped grad + update;
+    with more than one local device the probe axis is additionally
+    pmap-sharded, so the per-entry Adam loops of the sequential path
+    collapse into ``spec.steps`` device-parallel launches per bucket.
+    """
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    grad_fn = jax.grad(lambda p, b: spec.loss_fn(apply_fn, p, b))
+    if grad_mask is None:
+        grad_mask = jax.tree.map(
+            lambda x: jnp.ones((x.shape[0],), x.dtype), stacked_params)
+
+    def step(params, m, v, mask, batch, lr_t):
+        g = grad_fn(params, batch)
+        g = jax.tree.map(lambda gg, mm: gg * mm, g, mask)
+        m = jax.tree.map(lambda mm, gg: b1 * mm + (1 - b1) * gg, m, g)
+        v = jax.tree.map(lambda vv, gg: b2 * vv + (1 - b2) * gg * gg, v, g)
+        params = jax.tree.map(
+            lambda p, mm, vv: p - lr_t * mm / (jnp.sqrt(vv) + eps),
+            params, m, v)
+        return params, m, v
+
+    n = jax.tree.leaves(stacked_params)[0].shape[0]
+    axes = (0, 0, 0, 0, None, None)
+    ndev = jax.local_device_count()
+    shard = ndev > 1 and n > 1
+    if shard:
+        # Shard the probe axis across local devices: pad to a multiple of
+        # the device count (replicating lane 0 — discarded on unpad) and
+        # run the vmapped step under pmap.
+        pad = (-n) % ndev
+        stacked_params, grad_mask = (
+            jax.tree.map(lambda x: jnp.concatenate(
+                [x, jnp.repeat(x[:1], pad, axis=0)]) if pad else x, t)
+            for t in (stacked_params, grad_mask))
+        reshape = lambda t: jax.tree.map(
+            lambda x: x.reshape((ndev, -1) + x.shape[1:]), t)
+        unshape = lambda t: jax.tree.map(
+            lambda x: x.reshape((-1,) + x.shape[2:])[:n], t)
+        stacked_params = reshape(stacked_params)
+        grad_mask = reshape(grad_mask)
+        step_fn = jax.pmap(jax.vmap(step, in_axes=axes), in_axes=axes)
+    else:
+        step_fn = jax.jit(jax.vmap(step, in_axes=axes))
+
+    m = jax.tree.map(jnp.zeros_like, stacked_params)
+    v = jax.tree.map(jnp.zeros_like, stacked_params)
+    for s in range(spec.steps):
+        batch = spec.train_batches[s % len(spec.train_batches)]
+        t = s + 1
+        lr_t = spec.lr * math.sqrt(1 - b2 ** t) / (1 - b1 ** t)
+        stacked_params, m, v = step_fn(stacked_params, m, v, grad_mask,
+                                       batch, lr_t)
+    return unshape(stacked_params) if shard else stacked_params
+
+
+def perf_to_importance(perf: float, base_perf: float,
+                       spec: ImportanceSpec) -> float:
+    """Eq. 4 scoring shared by the scalar and batched probe paths."""
     delta = perf - base_perf
     if spec.normalize_by_base and base_perf != 0:
         delta = delta / abs(base_perf)
     # clamp for numerical sanity (perf deltas are small by construction)
     return float(jnp.exp(jnp.clip(delta, -30.0, 30.0)))
+
+
+def measure_importance(apply_fn, params, spec: ImportanceSpec,
+                       base_perf: float) -> float:
+    """One table entry: fine-tune the replaced net, return exp(ΔPerf)."""
+    tuned = _adam_finetune(apply_fn, params, spec)
+    perf = spec.perf_fn(apply_fn, tuned, spec.eval_batches)
+    return perf_to_importance(perf, base_perf, spec)
 
 
 def magnitude_importance(value_kept: float, value_total: float,
@@ -93,19 +205,26 @@ def xent_loss(apply_fn, params, batch):
 
 
 def accuracy_perf(apply_fn, params, batches):
+    step = _cached(
+        apply_fn, ("acc",),
+        lambda get: (None, jax.jit(lambda p, x, y: jnp.sum(
+            jnp.argmax(get()(p, x), axis=-1) == y))))
     correct = total = 0
     for x, y in batches:
-        pred = jnp.argmax(apply_fn(params, x), axis=-1)
-        correct += float(jnp.sum(pred == y))
+        correct += float(step(params, x, y))
         total += y.shape[0]
     return correct / max(total, 1)
 
 
 def neg_loss_perf(loss_fn):
     def perf(apply_fn, params, batches):
+        step = _cached(
+            apply_fn, ("negloss", id(loss_fn)),
+            lambda get: (loss_fn,
+                         jax.jit(lambda p, b: loss_fn(get(), p, b))))
         tot = 0.0
         for b in batches:
-            tot += float(loss_fn(apply_fn, params, b))
+            tot += float(step(params, b))
         return -tot / max(len(batches), 1)
     return perf
 

@@ -83,14 +83,25 @@ class WallClockOracle(LatencyOracle):
     host-jitter spike (page fault, GC, sibling process) corrupts at most
     one group instead of the whole mean, so table entries stay robust
     while the warmup + timed-calls protocol shape is unchanged.
+
+    Under the batched probe engine (:mod:`repro.core.probe_engine`) this
+    oracle is invoked once per *shape bucket* rather than once per table
+    entry: probes are grouped by shape signature, the representative is
+    pre-compiled on a worker thread while earlier buckets warm up, the
+    timed loops run in a quiet window after the last compile, and the
+    measured latency is attributed to every entry in the bucket.
     """
 
     warmup: int = 5
     iters: int = 20
     groups: int = 5
 
-    def time_callable(self, fn: Callable[[], jax.Array]) -> float:
-        for _ in range(self.warmup):
+    def time_callable(self, fn: Callable[[], jax.Array], *,
+                      warmup: int | None = None) -> float:
+        """Measure ``fn``; ``warmup`` overrides the configured warmup count
+        (the probe engine passes 0 for callables it already warmed while
+        compilation of later buckets was still in flight)."""
+        for _ in range(self.warmup if warmup is None else warmup):
             jax.block_until_ready(fn())
         g = max(1, min(self.groups, self.iters))
         base, extra = divmod(self.iters, g)

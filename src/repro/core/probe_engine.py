@@ -1,0 +1,311 @@
+"""Batched, device-parallel probe engine for ``T[i,j,k]`` / ``I[i,j,k]``.
+
+The paper's dominant offline cost is table construction: every latency
+probe and every fine-tune probe is independent ("embarrassingly parallel",
+§3.2), yet a naive builder walks all ``O(L² K₀)`` entries one at a time —
+one XLA compile + one warmup/timing loop per latency entry and one scalar
+Adam fine-tune per importance entry.  This module replaces that inner loop:
+
+* **Latency bucketing** — a metadata-only pass enumerates all probes and
+  buckets them by *shape signature* (``host.probe_signature(seg)``: for
+  CNNs ``(h, w, cin, cout, K, stride, depthwise, …)``).  Latency depends on
+  the signature only — never on the weight values — so one callable per
+  bucket is compiled and timed and the result is attributed to every entry
+  in the bucket, dropping compiles + timings from ``O(L² K₀)`` to
+  ``O(#shape buckets)``.
+* **Compile/timing overlap** — wall-clock bucket representatives are
+  pre-compiled ahead of time on a single worker thread (a warm jit call;
+  see :func:`_prepare_probe` for why not AOT ``lower().compile()``), so
+  bucket ``b+1`` compiles while bucket ``b`` warms up; the timed loops
+  run in a quiet window after the last compile retires.
+* **Batched importance** — hosts that implement ``importance_batch`` hand
+  the engine one shared ``apply_fn`` plus stacked candidate params (same
+  pytree structure within a span bucket); the few-step Eq. 4 Adam
+  fine-tune then runs **vmapped** over the probe axis (``pmap``-sharded
+  across local devices when more than one is present).  Hosts without a
+  batchable formulation fall back to the sequential per-probe path.
+
+``engine="sequential"`` preserves the original entry-at-a-time walk as the
+certified reference; ``tests/test_probe_engine.py`` asserts the batched
+path is *bit-identical* to it under the analytic oracle and within
+tolerance under :class:`~repro.core.latency.WallClockOracle`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Sequence
+
+import jax
+
+from .importance import (adam_finetune_batched, measure_importance,
+                         perf_to_importance)
+from .latency import LatencyOracle, WallClockOracle
+from .plan import Segment
+
+ENGINES = ("batched", "sequential")
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeCallable:
+    """One batchable latency probe: a jittable ``fn`` plus example ``args``.
+
+    Exposing the function and its arguments separately (instead of a
+    zero-arg closure) is what lets the engine pre-compile the probe on a
+    worker thread (and would equally support AOT
+    ``jax.jit(fn).lower(*args).compile()`` — see :func:`_prepare_probe`
+    for why the warm-call path is used instead).
+    """
+
+    fn: Callable
+    args: tuple
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Build accounting surfaced through :class:`repro.core.tables.Tables`."""
+
+    engine: str = "batched"
+    num_latency_probes: int = 0
+    num_latency_buckets: int = 0
+    num_compiles: int = 0            # XLA compiles issued (wall-clock path)
+    num_timings: int = 0             # warmup/timing loops run
+    num_importance_probes: int = 0
+    num_importance_batches: int = 0  # vmapped fine-tune launches
+    num_importance_sequential: int = 0
+    cache_hit: bool = False
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _signature(host, seg: Segment):
+    """Bucketing key for ``seg``; hosts without ``probe_signature`` get a
+    unique key per entry (no batching win, but the engine still runs)."""
+    sig_fn = getattr(host, "probe_signature", None)
+    if sig_fn is None:
+        return ("_unbucketed", seg.i, seg.j, seg.k, seg.kept)
+    return sig_fn(seg)
+
+
+def _prepare_probe(host, seg: Segment, params):
+    """Build + pre-compile one bucket representative (worker-thread safe).
+
+    Compilation goes through a warm jit call rather than AOT
+    ``fn.lower(*args).compile()``: on current JAX the AOT executable does
+    not share the jit dispatch cache (the first ``fn()`` call would
+    compile a second time) and ``Compiled.__call__`` bypasses the C++
+    dispatch fastpath, inflating sub-millisecond probes by ~2× relative
+    to the sequential reference.  One warm call compiles the same
+    executable once and leaves timing on the exact dispatch path the
+    sequential engine uses.
+    """
+    probe_fn = getattr(host, "segment_probe", None)
+    if probe_fn is None:
+        call = host.segment_callable(seg, params)
+    else:
+        probe = probe_fn(seg, params)
+        call = lambda: probe.fn(*probe.args)
+    jax.block_until_ready(call())
+    return call
+
+
+def measure_latencies(
+    host,
+    segs: Sequence[Segment],
+    oracle: LatencyOracle,
+    params=None,
+    *,
+    engine: str = "batched",
+    stats: EngineStats | None = None,
+    progress: Callable[[str], None] | None = None,
+) -> list[float]:
+    """``T`` value for every segment in ``segs`` (order preserved).
+
+    ``batched``: one oracle evaluation per distinct shape signature —
+    analytic costs are computed once per bucket; wall-clock callables are
+    compiled once per bucket (the next bucket pre-compiling on a worker
+    thread while the current one warms up) and timed once per bucket in a
+    quiet window after the last compile.
+    ``sequential``: the certified reference — one evaluation per entry,
+    byte-for-byte the pre-engine behavior.
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; expected {ENGINES}")
+    stats = stats if stats is not None else EngineStats(engine=engine)
+    stats.num_latency_probes += len(segs)
+    wallclock = isinstance(oracle, WallClockOracle)
+
+    if engine == "sequential":
+        out = []
+        for n, seg in enumerate(segs):
+            if wallclock:
+                out.append(oracle.time_callable(
+                    host.segment_callable(seg, params)))
+                stats.num_compiles += 1
+                stats.num_timings += 1
+                if progress and (n % 10 == 9 or n == len(segs) - 1):
+                    progress(f"latency probe {n + 1}/{len(segs)}")
+            else:
+                out.append(oracle.segment_latency(host.segment_cost(seg)))
+        stats.num_latency_buckets += len(segs)
+        return out
+
+    order: list = []                       # first-appearance bucket order
+    buckets: dict = {}                     # sig -> representative Segment
+    sigs = []
+    for seg in segs:
+        sig = _signature(host, seg)
+        sigs.append(sig)
+        if sig not in buckets:
+            buckets[sig] = seg
+            order.append(sig)
+    stats.num_latency_buckets += len(order)
+
+    per_bucket: dict = {}
+    if not wallclock:
+        for sig in order:
+            per_bucket[sig] = oracle.segment_latency(
+                host.segment_cost(buckets[sig]))
+    else:
+        # Overlap compilation with warmup: a single worker thread lowers
+        # and compiles bucket representatives while the main thread warms
+        # the already-compiled ones.  The *timed* loops only start once
+        # the last compile has retired — warmup calls tolerate the CPU
+        # contention of a concurrent XLA compile, timed calls do not (a
+        # compile running beside the timing loop inflates cheap buckets
+        # by integer factors).
+        warmed = []
+        with ThreadPoolExecutor(max_workers=1) as ex:
+            futures = [(sig, ex.submit(_prepare_probe, host, buckets[sig],
+                                       params)) for sig in order]
+            for bi, (sig, fut) in enumerate(futures):
+                call = fut.result()
+                for _ in range(oracle.warmup):
+                    jax.block_until_ready(call())
+                warmed.append((sig, call))
+                if progress:
+                    progress(f"compiled+warmed bucket {bi + 1}/{len(order)}"
+                             f" ({len(segs)} probes)")
+        for sig, call in warmed:           # quiet window: compiles done
+            per_bucket[sig] = oracle.time_callable(call, warmup=0)
+        stats.num_compiles += len(order)
+        stats.num_timings += len(order)
+    return [per_bucket[sig] for sig in sigs]
+
+
+def layer_latencies(
+    host,
+    oracle: LatencyOracle,
+    params=None,
+    *,
+    engine: str = "batched",
+    stats: EngineStats | None = None,
+) -> list[float]:
+    """Per-layer latency of the untouched network via one engine pass.
+
+    Shared by ``original_latency`` and the layer-only knapsack so each
+    layer is probed exactly once per call instead of once per caller.
+    """
+    segs = [Segment(i=l - 1, j=l, k=host.original_k(l), kept=(l,),
+                    original=True)
+            for l in range(1, len(host.descs()) + 1)]
+    return measure_latencies(host, segs, oracle, params, engine=engine,
+                             stats=stats)
+
+
+# Single-device vmapped fine-tunes win only while probes are dispatch-
+# bound: the shared all-kept graph pays real FLOPs for every Dirac
+# stand-in that a scalar probe would simply skip, so once the per-step
+# workload is compute-bound, batching buys nothing and costs the pruned
+# layers' compute.  Above this many input elements per fine-tune step the
+# engine prefers scalar probes unless local devices can shard the lanes.
+DISPATCH_BOUND_ELEMS = 65536
+
+
+def _batching_pays(spec) -> bool:
+    if jax.local_device_count() > 1:
+        return True                       # pmap shards lanes: parallel win
+    try:
+        first = spec.train_batches[0]
+        elems = sum(getattr(leaf, "size", 0)
+                    for leaf in jax.tree.leaves(first))
+    except Exception:                     # unsized workload: assume tiny
+        return True
+    return elems <= DISPATCH_BOUND_ELEMS
+
+
+def measure_importances(
+    host,
+    segs: Sequence[Segment],
+    spec,
+    base_perf: float,
+    params=None,
+    *,
+    engine: str = "batched",
+    stats: EngineStats | None = None,
+    force_batching: bool | None = None,
+    progress: Callable[[str], None] | None = None,
+) -> list[float]:
+    """Eq. 4 importance for every (non-original) segment in ``segs``.
+
+    ``batched``: segments are grouped by span ``(i, j]`` and handed to
+    ``host.importance_batch`` — if the host can express the whole span
+    bucket as one shared ``apply_fn`` over stacked candidate params, the
+    few-step Adam fine-tune runs vmapped (and pmap-sharded across local
+    devices) over the probe axis; the tuned candidates are then unstacked
+    and scored through the (jitted) ``perf_fn`` path.  Buckets the host
+    declines — and, unless ``force_batching`` overrides the
+    :func:`_batching_pays` heuristic, compute-bound single-device
+    workloads — fall back to the sequential per-probe path.
+    """
+    from .tables import one_segment_plan   # local import: tables imports us
+
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; expected {ENGINES}")
+    stats = stats if stats is not None else EngineStats(engine=engine)
+    stats.num_importance_probes += len(segs)
+    out: list[float | None] = [None] * len(segs)
+
+    def sequential(indices):
+        for n in indices:
+            seg = segs[n]
+            apply_fn, p = host.replaced_apply(
+                one_segment_plan(host, seg), params)
+            out[n] = measure_importance(apply_fn, p, spec, base_perf)
+            stats.num_importance_sequential += 1
+            if progress:
+                progress(f"importance probe ({seg.i},{seg.j}] k={seg.k}")
+
+    batch_fn = getattr(host, "importance_batch", None)
+    use_batches = force_batching if force_batching is not None \
+        else _batching_pays(spec)
+    if engine == "sequential" or batch_fn is None or not use_batches:
+        sequential(range(len(segs)))
+        return out
+
+    groups: dict[tuple[int, int], list[int]] = {}
+    for n, seg in enumerate(segs):
+        groups.setdefault((seg.i, seg.j), []).append(n)
+    for span, indices in groups.items():
+        if len(indices) < 2:
+            # A vmap of one lane only adds overhead over the scalar probe
+            # (and the Dirac stand-ins cost real FLOPs) — not worth it.
+            sequential(indices)
+            continue
+        batch = batch_fn([segs[n] for n in indices], params)
+        if batch is None:
+            sequential(indices)
+            continue
+        apply_fn, stacked, grad_mask = batch
+        tuned = adam_finetune_batched(apply_fn, stacked, spec,
+                                      grad_mask=grad_mask)
+        stats.num_importance_batches += 1
+        for lane, n in enumerate(indices):
+            p_n = jax.tree.map(lambda x: x[lane], tuned)
+            perf = spec.perf_fn(apply_fn, p_n, spec.eval_batches)
+            out[n] = perf_to_importance(perf, base_perf, spec)
+        if progress:
+            progress(f"importance batch ({span[0]},{span[1]}]: "
+                     f"{len(indices)} lanes vmapped")
+    return out

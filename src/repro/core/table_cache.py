@@ -1,0 +1,168 @@
+"""Content-addressed on-disk cache for the ``T``/``I`` lookup tables.
+
+Table construction is the pipeline's dominant offline cost, and its inputs
+are fully content-addressable: the host (network structure + shapes +
+parameter bytes + probe workload), the latency oracle configuration, the
+table method, and the importance mode.  A build keyed by the digest of all
+of those can therefore be reused verbatim — repeated ``compress()`` calls
+at different budgets, benchmark reruns, and sweep restarts become
+incremental instead of rebuilding ``O(L² K₀)`` entries from scratch.
+
+Keys
+----
+``cache_key`` hashes together:
+
+* the **host fingerprint** (``host.fingerprint()`` — structure, boundary
+  shapes, probe workload, parameter digest, and for wall-clock builds the
+  machine identity, since measured latencies do not transfer);
+* the **oracle config** (class name + dataclass fields);
+* the **method** and the **importance token** (``"magnitude"``, or
+  ``ImportanceSpec.cache_token`` — measured-importance specs close over
+  arbitrary callables/data, so they are only cacheable when the caller
+  names the workload explicitly);
+* a format version, so stale layouts miss instead of mis-parse.
+
+Returns ``None`` (caching disabled) whenever any component is not
+content-addressable.  Entries publish atomically via the checkpoint
+package's tmp-then-rename contract, so a crashed build never leaves a
+half-written table behind.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+
+import jax
+import numpy as np
+
+FORMAT_VERSION = 1
+
+
+def pytree_digest(tree) -> str:
+    """sha256 over every leaf's path, dtype, shape, and raw bytes."""
+    h = hashlib.sha256()
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        arr = np.asarray(jax.device_get(leaf))
+        h.update(jax.tree_util.keystr(path).encode())
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
+def machine_token() -> str:
+    """Identity of the timing host — wall-clock tables do not transfer."""
+    import platform
+
+    dev = jax.devices()[0]
+    return "|".join((platform.machine(), jax.default_backend(),
+                     str(getattr(dev, "device_kind", "?"))))
+
+
+def oracle_token(oracle) -> str:
+    cfg = dataclasses.asdict(oracle) if dataclasses.is_dataclass(oracle) \
+        else {}
+    return json.dumps({"cls": type(oracle).__name__, "cfg": cfg},
+                      sort_keys=True)
+
+
+def importance_token(importance) -> str | None:
+    """Stable name of the importance workload, or None (not cacheable).
+
+    For a measured :class:`~repro.core.importance.ImportanceSpec`, the
+    user's ``cache_token`` only needs to name the non-addressable parts
+    (loss/perf closures and their data); the hashable fine-tune
+    hyperparameters are folded in here so changing ``steps``/``lr``/
+    ``normalize_by_base`` under the same token misses instead of serving
+    stale importances."""
+    if isinstance(importance, str):
+        return importance
+    token = getattr(importance, "cache_token", None)
+    if token is None:
+        return None
+    return "|".join((token, f"steps={importance.steps}",
+                     f"lr={importance.lr!r}",
+                     f"norm={importance.normalize_by_base}"))
+
+
+def cache_key(host, oracle, method: str, importance, *,
+              prune: bool = True, base_perf: float | None = None,
+              engine: str = "batched") -> str | None:
+    """Digest of every table-build input, or None when not addressable.
+
+    ``engine`` is deliberately EXCLUDED: batched and sequential builds are
+    certified to agree (tests/test_probe_engine.py), so either may serve a
+    hit for the other.  ``prune`` and ``base_perf`` ARE included — both
+    change the stored table contents.
+    """
+    fp_fn = getattr(host, "fingerprint", None)
+    imp = importance_token(importance)
+    if fp_fn is None or imp is None:
+        return None
+    h = hashlib.sha256()
+    h.update(f"v{FORMAT_VERSION}".encode())
+    h.update(fp_fn().encode())
+    h.update(oracle_token(oracle).encode())
+    h.update(method.encode())
+    h.update(imp.encode())
+    h.update(repr((bool(prune), base_perf)).encode())
+    return h.hexdigest()
+
+
+def _path(cache_dir: str, key: str) -> str:
+    return os.path.join(cache_dir, f"tables_{key}.json")
+
+
+def save(cache_dir: str, key: str, tables) -> str:
+    """Atomically publish a built :class:`~repro.core.tables.Tables`."""
+    from repro.checkpoint.ckpt import atomic_write_text
+
+    payload = {
+        "format": FORMAT_VERSION,
+        "build_seconds_latency": tables.build_seconds_latency,
+        "build_seconds_importance": tables.build_seconds_importance,
+        "num_pruned": tables.num_pruned,
+        "stats": tables.stats.as_dict() if tables.stats else None,
+        "spans": [
+            {"i": i, "j": j,
+             "opts": [{"k": k, "imp": imp, "lat": lat, "kept": list(kept)}
+                      for k, (imp, lat, kept) in sorted(row.items())]}
+            for (i, j), row in sorted(tables.entries.items())
+        ],
+    }
+    return atomic_write_text(_path(cache_dir, key), json.dumps(payload))
+
+
+def load(cache_dir: str, key: str):
+    """Cached :class:`~repro.core.tables.Tables`, or None on a miss."""
+    from .probe_engine import EngineStats
+    from .tables import Tables
+
+    path = _path(cache_dir, key)
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError):   # torn/corrupt entry: miss
+        return None
+    if payload.get("format") != FORMAT_VERSION:
+        return None
+    entries = {
+        (sp["i"], sp["j"]): {
+            o["k"]: (o["imp"], o["lat"], tuple(o["kept"]))
+            for o in sp["opts"]}
+        for sp in payload["spans"]
+    }
+    stats = EngineStats(**payload["stats"]) if payload.get("stats") \
+        else EngineStats()
+    stats.cache_hit = True
+    return Tables(entries=entries,
+                  build_seconds_latency=payload["build_seconds_latency"],
+                  build_seconds_importance=payload[
+                      "build_seconds_importance"],
+                  num_pruned=payload["num_pruned"],
+                  stats=stats)

@@ -10,9 +10,22 @@ the generic machinery.  Hosts implement:
 * ``replaced_apply(plan)`` → (apply_fn, params) of the pruned-unmerged net
 * ``original_k(l)``        → k-coordinate of the untouched layer l
 
-Construction cost is ``O(L² K₀)`` entries (paper's bound); each importance
-entry is independent — embarrassingly parallel in the paper; here they run
-sequentially but against tiny fine-tune workloads.
+and optionally the batched-probe protocol consumed by
+:mod:`repro.core.probe_engine`:
+
+* ``probe_signature(seg)`` → hashable shape signature (latency bucketing)
+* ``segment_probe(seg, params)`` → ProbeCallable (AOT pre-lowering)
+* ``importance_batch(segs, params)`` → (apply_fn, stacked_params, grad_mask)
+* ``fingerprint()``        → content digest (on-disk table cache)
+
+Construction cost is ``O(L² K₀)`` entries (paper's bound); each entry is
+independent — embarrassingly parallel in the paper.  With
+``engine="batched"`` (default) the probe engine exploits that: latency
+probes collapse to one compile + one timing per distinct shape signature,
+and importance probes run as vmapped (device-sharded) fine-tune batches.
+``engine="sequential"`` keeps the certified one-entry-at-a-time reference
+walk.  ``cache_dir`` adds a content-addressed on-disk cache
+(:mod:`repro.core.table_cache`) so repeated builds are incremental.
 """
 from __future__ import annotations
 
@@ -20,6 +33,7 @@ import dataclasses
 import time
 from typing import Callable, Mapping
 
+from . import probe_engine, table_cache
 from .dp import TableFn
 from .importance import ImportanceSpec, measure_importance, magnitude_importance
 from .latency import AnalyticTPUOracle, LatencyOracle, WallClockOracle
@@ -35,6 +49,7 @@ class Tables:
     build_seconds_latency: float = 0.0
     build_seconds_importance: float = 0.0
     num_pruned: int = 0              # options dropped by Pareto dominance
+    stats: probe_engine.EngineStats | None = None   # probe-engine accounting
 
     @property
     def num_entries(self) -> int:
@@ -72,59 +87,94 @@ def build_tables(
     params=None,
     progress: Callable[[str], None] | None = None,
     prune: bool = True,
+    engine: str = "batched",
+    cache_dir: str | None = None,
 ) -> Tables:
     """Construct both lookup tables for ``host`` (Algorithm 2, lines 1-8).
 
-    Latency and importance are filled in a single pass over the enumerated
-    spans (one Segment build and one options walk per span instead of two);
-    per-table build times are still accounted separately.  With ``prune``
-    (default), options Pareto-dominated within their span are dropped before
-    the tables reach the DP — provably optimum-preserving.
+    A metadata-only pass enumerates every ``(i, j, k)`` probe first; the
+    probe engine then fills the latency column (bucketed by shape
+    signature under ``engine="batched"``, entry-at-a-time under
+    ``"sequential"``) and the importance column (vmapped span batches
+    where the host supports them).  With ``prune`` (default), options
+    Pareto-dominated within their span are dropped before the tables
+    reach the DP — provably optimum-preserving.  With ``cache_dir``, a
+    content-addressed hit skips the build entirely.
     """
     oracle = latency_oracle or AnalyticTPUOracle()
-    enum = host.enumerator(method)
-    entries: dict = {}
-    t_lat = t_imp = 0.0
-    total_value = sum(d.value for d in enum.descs)
 
+    key = None
+    if cache_dir is not None:
+        key = table_cache.cache_key(host, oracle, method, importance,
+                                    prune=prune, base_perf=base_perf,
+                                    engine=engine)
+        if key is not None:
+            cached = table_cache.load(cache_dir, key)
+            if cached is not None:
+                if progress:
+                    progress(f"tables: cache hit ({cached.num_entries} "
+                             "entries)")
+                return cached
+
+    enum = host.enumerator(method)
+    total_value = sum(d.value for d in enum.descs)
+    stats = probe_engine.EngineStats(engine=engine)
+
+    # Pass 1 — metadata only: enumerate every (i, j, k) probe.
+    probes: list[tuple[int, int, int, float, tuple[int, ...], Segment]] = []
     for i, j, opts in enum.all_spans():
-        row = {}
         for k, (val, kept) in opts.items():
             seg = Segment(i=i, j=j, k=k, kept=kept,
                           original=(j - i == 1 and k == host.original_k(j)
                                     and set(kept) == set(seg_layers(i, j))))
-            t0 = time.perf_counter()
-            if isinstance(oracle, WallClockOracle):
-                fn = host.segment_callable(seg, params)
-                lat = oracle.time_callable(fn)
-            else:
-                lat = oracle.segment_latency(host.segment_cost(seg))
-            t_lat += time.perf_counter() - t0
+            probes.append((i, j, k, val, kept, seg))
 
-            t0 = time.perf_counter()
-            if seg.original:
-                imp = 1.0                      # exp(0): untouched layer
-            elif importance == "magnitude":
-                imp = magnitude_importance(val, max(total_value, 1e-9),
+    # Pass 2 — latency column through the probe engine.
+    t0 = time.perf_counter()
+    lats = probe_engine.measure_latencies(
+        host, [p[5] for p in probes], oracle, params, engine=engine,
+        stats=stats, progress=progress)
+    t_lat = time.perf_counter() - t0
+
+    # Pass 3 — importance column (analytic entries inline, measured
+    # entries through the engine's batched fine-tune).
+    t0 = time.perf_counter()
+    imps: list[float | None] = [None] * len(probes)
+    measured: list[int] = []
+    for n, (i, j, k, val, kept, seg) in enumerate(probes):
+        if seg.original:
+            imps[n] = 1.0                  # exp(0): untouched layer
+        elif importance == "magnitude":
+            imps[n] = magnitude_importance(val, max(total_value, 1e-9),
                                            len(seg.pruned))
-            else:
-                apply_fn, p = host.replaced_apply(
-                    one_segment_plan(host, seg), params)
-                imp = measure_importance(apply_fn, p, importance,
-                                         base_perf or 0.0)
-            t_imp += time.perf_counter() - t0
-            row[k] = (imp, lat, kept)
-        if row:
-            entries[(i, j)] = row
-        if progress:
+        else:
+            measured.append(n)
+    if measured:
+        vals = probe_engine.measure_importances(
+            host, [probes[n][5] for n in measured], importance,
+            base_perf or 0.0, params, engine=engine, stats=stats,
+            progress=progress)
+        for n, v in zip(measured, vals):
+            imps[n] = v
+    t_imp = time.perf_counter() - t0
+
+    entries: dict = {}
+    for (i, j, k, val, kept, seg), lat, imp in zip(probes, lats, imps):
+        entries.setdefault((i, j), {})[k] = (imp, lat, kept)
+    if progress:
+        for (i, j), row in entries.items():
             progress(f"table span ({i},{j}]: {len(row)} entries")
 
     dropped = 0
     if prune:
         entries, dropped = pareto_prune(entries)
 
-    return Tables(entries=entries, build_seconds_latency=t_lat,
-                  build_seconds_importance=t_imp, num_pruned=dropped)
+    tables = Tables(entries=entries, build_seconds_latency=t_lat,
+                    build_seconds_importance=t_imp, num_pruned=dropped,
+                    stats=stats)
+    if key is not None:
+        table_cache.save(cache_dir, key, tables)
+    return tables
 
 
 def seg_layers(i: int, j: int) -> tuple[int, ...]:

@@ -1,18 +1,47 @@
-"""Host adapter: plan-aware CNNs → the generic LayerMerge core."""
+"""Host adapter: plan-aware CNNs → the generic LayerMerge core.
+
+Implements the full batched-probe protocol of
+:mod:`repro.core.probe_engine`: shape signatures for latency bucketing,
+AOT-lowerable probe callables, Dirac-masked span batches for vmapped
+importance fine-tunes, and a content fingerprint for the table cache.
+"""
 from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import table_cache
 from repro.core.latency import CostBreakdown, conv2d_cost
 from repro.core.plan import CompressionPlan, LayerDesc, Segment
+from repro.core.probe_engine import ProbeCallable
 from repro.core.segments import SegmentEnumerator
 from repro.kernels import ops
 
 from . import cnn
+
+
+def _dirac_like(w: jax.Array, depthwise: bool) -> jax.Array:
+    """Identity stand-in for a pruned conv, at the conv's OWN kernel shape.
+
+    A ``k×k`` kernel that is a centred delta (times the channel identity)
+    computes *exactly* the input center-crop — every off-center tap
+    multiplies by 0.0 and the center tap by 1.0, so the output is bitwise
+    the input.  Substituting it for a pruned conv inside an all-kept span
+    graph reproduces the true replaced network (which pads less and skips
+    the layer) while keeping one shared trace for every kept-set of the
+    span — the structural trick behind the vmapped importance batch.
+    Requires odd ``k`` (centred delta) — the host's eligibility check.
+    """
+    kh, kw, cin, cout = w.shape
+    c0, c1 = (kh - 1) // 2, (kw - 1) // 2
+    if depthwise:
+        return jnp.zeros_like(w).at[c0, c1, 0, :].set(1.0)
+    return jnp.zeros_like(w).at[c0, c1].set(jnp.eye(cin, cout,
+                                                    dtype=w.dtype))
 
 
 @dataclasses.dataclass
@@ -66,29 +95,54 @@ class CNNHost:
         return conv2d_cost(h, w, cin, cout, K, stride=S, depthwise=bool(dw),
                            dtype_bytes=self.dtype_bytes, batch=self.batch)
 
-    def segment_callable(self, seg: Segment, params=None):
-        """Zero-arg jitted merged-segment forward for wall-clock timing."""
+    def probe_signature(self, seg: Segment):
+        """Shape signature bucketing this segment's latency probe.
+
+        Captures every input of both ``segment_cost`` and the wall-clock
+        callable's trace — input shape, output channels, merged geometry
+        ``(K, S)``, depthwise-ness, batch, and dtype width — so any two
+        segments with equal signatures are latency-identical by
+        construction and one measurement serves the whole bucket.
+        """
+        h, w, cin = self._shapes[seg.i]
+        _, _, cout = self._shapes[seg.j]
+        s_last = self.net.spec(seg.j)
+        if s_last.kind != "conv":
+            return (s_last.kind, h, w, cin, s_last.k, s_last.stride,
+                    self.batch, self.dtype_bytes)
+        K, S = cnn.segment_geometry(self.net, seg)
+        kept = set(seg.kept)
+        dw = all(self.net.spec(l).depthwise for l in seg.layers
+                 if l in kept and self.net.spec(l).kind == "conv") and kept
+        return ("conv", h, w, cin, cout, K, S, bool(dw), self.batch,
+                self.dtype_bytes)
+
+    def segment_probe(self, seg: Segment, params=None) -> ProbeCallable:
+        """Jitted merged-segment forward as (fn, args) — AOT-lowerable."""
         params = params or self.params
         h, w, cin = self._shapes[seg.i]
         x = jnp.zeros((self.batch, h, w, cin), jnp.float32)
         s_last = self.net.spec(seg.j)
         if s_last.kind != "conv":
-            p = params["layers"][seg.j - 1]
-
-            @jax.jit
-            def barrier_fn(x):
-                if s_last.kind == "attn":
-                    return cnn._tiny_self_attention(x, p)
-                if s_last.kind == "pool":
+            if s_last.kind == "attn":
+                return ProbeCallable(jax.jit(cnn._tiny_self_attention),
+                                     (x, params["layers"][seg.j - 1]))
+            if s_last.kind == "pool":
+                @jax.jit
+                def pool_fn(x):
                     return jax.lax.reduce_window(
                         x, 0.0, jax.lax.add, (1, s_last.k, s_last.k, 1),
                         (1, s_last.stride, s_last.stride, 1),
                         "SAME") / (s_last.k * s_last.k)
+                return ProbeCallable(pool_fn, (x,))
+
+            @jax.jit
+            def up_fn(x):
                 n, hh, ww, c = x.shape
                 return jax.image.resize(
                     x, (n, hh * s_last.stride, ww * s_last.stride, c),
                     "nearest")
-            return lambda: barrier_fn(x)
+            return ProbeCallable(up_fn, (x,))
         wgt, b, stride, dw = cnn.merge_segment(self.net, params["layers"], seg)
         K = wgt.shape[0]
         lo, hi = (K - 1) // 2, (K - 1) - (K - 1) // 2
@@ -101,7 +155,75 @@ class CNNHost:
             # Time the segment exactly as it deploys: through the Pallas
             # fast path on TPU (strided segments included), oracle off-TPU.
             return ops.merged_conv_op(xp, wgt, b, stride=stride)
-        return lambda: fn(x, wgt, b)
+        return ProbeCallable(fn, (x, wgt, b))
+
+    def segment_callable(self, seg: Segment, params=None):
+        """Zero-arg jitted merged-segment forward for wall-clock timing."""
+        probe = self.segment_probe(seg, params)
+        return lambda: probe.fn(*probe.args)
+
+    # -- batched importance probes ---------------------------------------------
+    def importance_batch(self, segs: list[Segment], params=None):
+        """One shared apply + stacked candidates for a span's Eq. 4 probes.
+
+        Every probe of span ``(i, j]`` is expressed on ONE graph — the
+        all-kept replaced network — by substituting a centred Dirac kernel
+        (an exact identity, see :func:`_dirac_like`) for each pruned conv
+        and zeroing its bias.  The candidates then differ only in leaf
+        VALUES, so the engine can stack them and vmap the fine-tune.  The
+        returned ``grad_mask`` freezes the Dirac leaves: updating them
+        would turn "no layer" into a free extra conv and change Eq. 4's
+        semantics.  Returns None (sequential fallback) when the span holds
+        non-conv units, normed convs (BN/GN folding changes the fine-tune
+        parametrization), or even kernels (no centred delta).
+        """
+        from repro.core.tables import one_segment_plan
+
+        params = params or self.params
+        seg0 = segs[0]
+        span = tuple(range(seg0.i + 1, seg0.j + 1))
+        for l in span:
+            s = self.net.spec(l)
+            if s.kind != "conv" or s.norm is not None or s.k % 2 == 0:
+                return None
+        probe = Segment(i=seg0.i, j=seg0.j, k=0, kept=span)
+        K_all, _ = cnn.segment_geometry(self.net, probe)
+        probe = Segment(i=seg0.i, j=seg0.j, k=K_all, kept=span)
+        apply_fn, _ = self.replaced_apply(one_segment_plan(self, probe),
+                                          params)
+        ones = jax.tree.map(lambda x: jnp.ones((), x.dtype), params)
+        cands, masks = [], []
+        for seg in segs:
+            kept = set(seg.kept)
+            layers = list(params["layers"])
+            mlayers = list(ones["layers"])
+            for l in span:
+                if l in kept:
+                    continue
+                s = self.net.spec(l)
+                p, mp = dict(layers[l - 1]), dict(mlayers[l - 1])
+                p["w"] = _dirac_like(p["w"], s.depthwise)
+                mp["w"] = jnp.zeros((), p["w"].dtype)
+                if "b" in p:
+                    p["b"] = jnp.zeros_like(p["b"])
+                    mp["b"] = jnp.zeros((), p["b"].dtype)
+                layers[l - 1], mlayers[l - 1] = p, mp
+            cands.append({**params, "layers": layers})
+            masks.append({**ones, "layers": mlayers})
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *cands)
+        grad_mask = jax.tree.map(lambda *xs: jnp.stack(xs), *masks)
+        return apply_fn, stacked, grad_mask
+
+    def fingerprint(self) -> str:
+        """Content digest for the on-disk table cache: network structure,
+        probe workload, parameter bytes, and machine identity (wall-clock
+        latencies do not transfer across hosts)."""
+        h = hashlib.sha256()
+        h.update(repr((self.net, self.batch, self.dtype_bytes,
+                       self.max_span)).encode())
+        h.update(table_cache.pytree_digest(self.params).encode())
+        h.update(table_cache.machine_token().encode())
+        return h.hexdigest()
 
     # -- network builders ---------------------------------------------------------
     def replaced_apply(self, plan: CompressionPlan, params=None):

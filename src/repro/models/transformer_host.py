@@ -17,13 +17,16 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import table_cache
 from repro.core import merge as M
 from repro.core.latency import CostBreakdown, matmul_cost, rank_ffn_cost
 from repro.core.plan import CompressionPlan, LayerDesc, Segment
+from repro.core.probe_engine import ProbeCallable
 from repro.core.segments import SegmentEnumerator
 
 from . import transformer as T
@@ -141,8 +144,23 @@ class TransformerHost:
                                             env.dtype_bytes)
         return cost
 
-    def segment_callable(self, seg: Segment, params=None):
-        """Jitted merged-segment forward for the wall-clock oracle."""
+    def probe_signature(self, seg: Segment):
+        """Latency-bucketing signature: boundary kind + effective rank.
+
+        Both ``segment_cost`` and the timed unit chain depend on the
+        segment only through the boundary block's kind and the merged
+        residual rank (``min(k, d_model)``; 0 when nothing is merged) —
+        weight values never enter, so one probe serves the whole bucket.
+        """
+        interior_kept = [l for l in seg.kept if l != seg.j]
+        rank = min(seg.k, self.cfg.d_model) \
+            if (interior_kept or seg.j - seg.i > 1) else 0
+        return ("tseg", self.kinds[seg.j - 1], rank, self.env.batch,
+                self.env.seq, self.env.chips, self.env.dtype_bytes,
+                self.cfg.d_model)
+
+    def segment_probe(self, seg: Segment, params=None) -> ProbeCallable:
+        """Jitted merged-segment forward as (fn, args) — AOT-lowerable."""
         params = params or self.params
         units = self._segment_units(seg, params)
         x = jnp.zeros((max(self.env.batch, 1), max(self.env.seq, 8),
@@ -151,7 +169,21 @@ class TransformerHost:
         @jax.jit
         def fn(x):
             return _apply_units(self.cfg, units, x)
-        return lambda: fn(x)
+        return ProbeCallable(fn, (x,))
+
+    def segment_callable(self, seg: Segment, params=None):
+        """Zero-arg jitted merged-segment forward for wall-clock timing."""
+        probe = self.segment_probe(seg, params)
+        return lambda: probe.fn(*probe.args)
+
+    def fingerprint(self) -> str:
+        """Content digest for the on-disk table cache (see CNNHost)."""
+        h = hashlib.sha256()
+        h.update(repr((self.cfg, dataclasses.astuple(self.env),
+                       self.max_span, self.kinds)).encode())
+        h.update(table_cache.pytree_digest(self.params).encode())
+        h.update(table_cache.machine_token().encode())
+        return h.hexdigest()
 
     # -- unit construction -----------------------------------------------------
     def _linear_factors(self, sub):
