@@ -4,7 +4,7 @@
 PY := python
 ENV := JAX_PLATFORMS=cpu PYTHONPATH=src
 
-.PHONY: verify test bench bench-dp bench-tables bench-smoke
+.PHONY: verify test bench bench-dp bench-tables bench-serve bench-smoke
 
 verify:
 	bash scripts/verify.sh
@@ -21,8 +21,12 @@ bench-dp:
 bench-tables:
 	$(ENV) $(PY) -m benchmarks.bench_tables
 
-# Seconds-scale probe-engine regression gate (also part of `make verify`):
-# asserts batched/sequential parity, bucket accounting, and cache
-# round-trips without the slow sequential wall-clock baseline.
+bench-serve:
+	$(ENV) $(PY) -m benchmarks.bench_serve
+
+# Seconds-scale regression gates (also part of `make verify`): probe-
+# engine parity/accounting + serving-path artifact round-trip and
+# KV-cache decode parity, without the slow timing baselines.
 bench-smoke:
 	$(ENV) $(PY) -m benchmarks.bench_tables --smoke
+	$(ENV) $(PY) -m benchmarks.bench_serve --smoke

@@ -90,7 +90,7 @@ def conv_tile_sweep(rng, *, ks=(5,), strides=(1, 2),
     """
     import jax
     import jax.numpy as jnp
-    from repro.kernels import ops, ref
+    from repro import kernels
     from repro.kernels.merged_conv import choose_tiles, input_traffic_model
 
     def timed_us(fn, n=10):
@@ -108,16 +108,16 @@ def conv_tile_sweep(rng, *, ks=(5,), strides=(1, 2),
             wt = jnp.asarray(rng.standard_normal((k, k, cin, cout)) * 0.1,
                              jnp.float32)
             b = jnp.asarray(rng.standard_normal(cout), jnp.float32)
-            oracle = ref.apply_activation(
-                ref.merged_conv_ref(x, wt, b, stride=stride), "relu")
-            f = jax.jit(lambda x=x, wt=wt, b=b, s=stride: ref.merged_conv_ref(
+            oracle = kernels.apply_activation(
+                kernels.merged_conv_ref(x, wt, b, stride=stride), "relu")
+            f = jax.jit(lambda x=x, wt=wt, b=b, s=stride: kernels.merged_conv_ref(
                 x, wt, b, stride=s))
             oracle_us = timed_us(f)
             a_ho, a_wo = choose_tiles(hw, hw, cin, k, k, stride, 4,
                                       bcout=cout)
             for tile_ho, tile_wo in tiles:
                 t0 = time.perf_counter()
-                y = ops.merged_conv_op(x, wt, b, stride=stride,
+                y = kernels.merged_conv_op(x, wt, b, stride=stride,
                                        activation="relu", tile_ho=tile_ho,
                                        tile_wo=tile_wo, interpret=True)
                 dt = time.perf_counter() - t0

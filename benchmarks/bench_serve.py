@@ -1,0 +1,145 @@
+"""Serving-path benchmark — compressed vs original prefill/decode tok/s.
+
+Exercises the artifact-backed serve path end-to-end: compress a small LM
+(analytic oracle + magnitude importance — deterministic, seconds-scale),
+publish a merged-model artifact, reload it, and decode through the
+shared unit-graph executor with a KV cache, side by side with the
+uncompressed ``make_serve_step`` stack.  Writes
+``results/BENCH_serve.json`` with prefill/decode throughput for both
+paths plus the DP-predicted speedup (the measured ratio on a CPU build
+host is reported, not asserted — the latency oracle targets the v5e).
+
+  PYTHONPATH=src python -m benchmarks.bench_serve [--smoke] [--out PATH]
+
+``--smoke`` (wired into ``make verify`` via scripts/verify.sh) runs the
+correctness gates in seconds: artifact round-trip + fingerprint
+stability, compressed decode ≡ compressed prefill (KV-cache parity),
+and a genuinely shallower unit chain — so serving-path regressions fail
+``make verify`` even where timing is meaningless.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+import jax                                              # noqa: E402
+import jax.numpy as jnp                                 # noqa: E402
+import numpy as np                                      # noqa: E402
+
+from repro import runtime                               # noqa: E402
+from repro.runtime import serve_loop                    # noqa: E402
+from repro.configs import get_config                    # noqa: E402
+from repro.core import compress                         # noqa: E402
+from repro.models import transformer as T               # noqa: E402
+from repro.models.transformer_host import (CostEnv,     # noqa: E402
+                                           TransformerHost)
+from repro.train.step import make_serve_step            # noqa: E402
+
+
+def make_model(smoke: bool):
+    base = get_config("smollm-135m").reduced()
+    if smoke:
+        cfg = dataclasses.replace(base, num_layers=4)
+    else:
+        cfg = dataclasses.replace(base, num_layers=8, d_model=128,
+                                  num_heads=4, num_kv_heads=2, head_dim=32,
+                                  d_ff=512, vocab_size=512)
+    params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast correctness pass (CI)")
+    ap.add_argument("--budget-ratio", type=float, default=0.55)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=None)
+    ap.add_argument("--tokens", type=int, default=None)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), os.pardir, "results",
+        "BENCH_serve.json"))
+    args = ap.parse_args(argv)
+    P = args.prompt_len or (8 if args.smoke else 32)
+    N = args.tokens or (8 if args.smoke else 64)
+
+    cfg, params = make_model(args.smoke)
+    host = TransformerHost(cfg, params,
+                           env=CostEnv(batch=args.batch, seq=P + N))
+    res = compress(host, budget_ratio=args.budget_ratio, P=300)
+    assert res is not None, "bench budget must be feasible"
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "bench_lm.npz")
+        fp = res.save(path)
+        assert res.save(os.path.join(d, "again.npz")) == fp, \
+            "artifact fingerprint must be content-stable"
+        art = runtime.load(path)
+        assert art.fingerprint == fp and art.plan == res.plan
+
+    B = args.batch
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
+                                cfg.vocab_size)
+
+    # original stack
+    step_o = jax.jit(make_serve_step(cfg))
+    cache_o = T.init_cache(cfg, B, P + N)
+    pre_o, dec_o, _, _ = serve_loop(step_o, params, cache_o, prompt, N)
+
+    # compressed (artifact-backed executor)
+    step_c, gp = art.make_serve_step()
+    step_c = jax.jit(step_c)
+    cache_c = art.init_cache(B, P + N)
+    pre_c, dec_c, _, _ = serve_loop(step_c, gp, cache_c, prompt, N)
+
+    # KV-cache parity gate: prefill-by-decode ≡ parallel prefill
+    batch = {"tokens": prompt,
+             "positions": jnp.broadcast_to(jnp.arange(P)[None], (B, P))}
+    y_par = art.apply(batch)
+    cache_v = art.init_cache(B, P)
+    lv = None
+    for t in range(P):
+        lv, cache_v = step_c(gp, cache_v, {"tokens": prompt[:, t:t + 1]})
+    delta = float(jnp.abs(y_par[:, -1] - lv[:, 0]).max())
+    scale = float(jnp.abs(y_par[:, -1]).max()) + 1e-9
+    assert delta / scale < 2e-4, f"decode/prefill diverged: {delta}"
+
+    n_orig = len(T.sublayer_kinds(cfg))
+    n_units = len(art.graph.units)
+    assert n_units < n_orig, "compressed chain must be shallower"
+
+    report = {
+        "instance": {"layers": cfg.num_layers, "d_model": cfg.d_model,
+                     "batch": B, "prompt": P, "tokens": N,
+                     "budget_ratio": args.budget_ratio,
+                     "smoke": args.smoke},
+        "artifact": {"fingerprint": fp[:16],
+                     "units": runtime.ir.count_units(art.graph),
+                     "sublayers_original": n_orig,
+                     "units_compressed": n_units,
+                     "oracle": art.meta.get("oracle")},
+        "original": {"prefill_s": pre_o, "decode_s": dec_o,
+                     "decode_tok_s": (N - 1) * B / max(dec_o, 1e-9)},
+        "compressed": {"prefill_s": pre_c, "decode_s": dec_c,
+                       "decode_tok_s": (N - 1) * B / max(dec_c, 1e-9)},
+        "measured_decode_speedup": dec_o / max(dec_c, 1e-9),
+        "predicted_speedup_v5e": res.speedup,
+        "kv_parity_rel_delta": delta / scale,
+    }
+    if not args.smoke:
+        out = os.path.abspath(args.out)
+        os.makedirs(os.path.dirname(out), exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {out}")
+    print(json.dumps(report, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -31,7 +31,7 @@ def bench_kernels():
     interpret-mode max|Δ| vs oracle (TPU wall-time needs real hardware)."""
     import jax
     import jax.numpy as jnp
-    from repro.kernels import ops, ref
+    from repro import kernels
 
     rows = []
     key = jax.random.PRNGKey(0)
@@ -41,41 +41,41 @@ def bench_kernels():
     x = jax.random.normal(ks[0], (1024, 512))
     u = jax.random.normal(ks[1], (512, 256)) * 0.05
     v = jax.random.normal(ks[2], (256, 512)) * 0.05
-    f = jax.jit(lambda: ref.merged_ffn_ref(x, u, v))
-    err = float(jnp.abs(ops.merged_ffn_op(x, u, v, interpret=True)
-                        - ref.merged_ffn_ref(x, u, v)).max())
+    f = jax.jit(lambda: kernels.merged_ffn_ref(x, u, v))
+    err = float(jnp.abs(kernels.merged_ffn_op(x, u, v, interpret=True)
+                        - kernels.merged_ffn_ref(x, u, v)).max())
     rows.append(("kernel,merged_ffn_1024x512_r256", timeit(f),
                  f"interpret_maxdiff={err:.2e}"))
 
     q = jax.random.normal(ks[0], (2, 256, 4, 64))
     kk = jax.random.normal(ks[1], (2, 256, 4, 64))
     vv = jax.random.normal(ks[2], (2, 256, 4, 64))
-    f = jax.jit(lambda: ref.flash_attention_ref(q, kk, vv))
-    err = float(jnp.abs(ops.flash_attention_op(q, kk, vv, True, True)
-                        - ref.flash_attention_ref(q, kk, vv)).max())
+    f = jax.jit(lambda: kernels.flash_attention_ref(q, kk, vv))
+    err = float(jnp.abs(kernels.flash_attention_op(q, kk, vv, True, True)
+                        - kernels.flash_attention_ref(q, kk, vv)).max())
     rows.append(("kernel,flash_attn_b2s256h4d64", timeit(f),
                  f"interpret_maxdiff={err:.2e}"))
 
     a = jax.random.uniform(ks[0], (4, 512, 256), minval=0.5, maxval=0.99)
     b = jax.random.normal(ks[1], (4, 512, 256)) * 0.1
-    f = jax.jit(lambda: ref.rglru_scan_ref(a, b))
-    err = float(jnp.abs(ops.rglru_scan_op(a, b, interpret=True)
-                        - ref.rglru_scan_ref(a, b)).max())
+    f = jax.jit(lambda: kernels.rglru_scan_ref(a, b))
+    err = float(jnp.abs(kernels.rglru_scan_op(a, b, interpret=True)
+                        - kernels.rglru_scan_ref(a, b)).max())
     rows.append(("kernel,rglru_scan_b4s512c256", timeit(f),
                  f"interpret_maxdiff={err:.2e}"))
 
     g = jax.random.normal(ks[3], (512,)) * 0.1
-    f = jax.jit(lambda: ref.rmsnorm_ref(x, g))
-    err = float(jnp.abs(ops.rmsnorm_op(x, g, interpret=True)
-                        - ref.rmsnorm_ref(x, g)).max())
+    f = jax.jit(lambda: kernels.rmsnorm_ref(x, g))
+    err = float(jnp.abs(kernels.rmsnorm_op(x, g, interpret=True)
+                        - kernels.rmsnorm_ref(x, g)).max())
     rows.append(("kernel,rmsnorm_1024x512", timeit(f),
                  f"interpret_maxdiff={err:.2e}"))
 
     xc = jax.random.normal(ks[0], (8, 20, 20, 32))
     wc = jax.random.normal(ks[1], (5, 5, 32, 32)) * 0.1
-    f = jax.jit(lambda: ref.merged_conv_ref(xc, wc))
-    err = float(jnp.abs(ops.merged_conv_op(xc, wc, interpret=True)
-                        - ref.merged_conv_ref(xc, wc)).max())
+    f = jax.jit(lambda: kernels.merged_conv_ref(xc, wc))
+    err = float(jnp.abs(kernels.merged_conv_op(xc, wc, interpret=True)
+                        - kernels.merged_conv_ref(xc, wc)).max())
     rows.append(("kernel,merged_conv_k5_c32", timeit(f),
                  f"interpret_maxdiff={err:.2e}"))
     return rows

@@ -48,6 +48,7 @@ def main():
 
     host = TransformerHost(cfg, params, env=CostEnv(batch=16, seq=64))
     ispec = dataclasses.replace(spec, steps=8, lr=1e-3)
+    export = None
     print(f"{'method':12s} {'budget':>6s} {'speedup':>8s} {'eval loss':>10s}")
     for method in ("layermerge", "depth", "layeronly"):
         for ratio in (0.8, 0.6, 0.45):
@@ -61,6 +62,30 @@ def main():
             tuned = _adam_finetune(ra, params, ft)
             ev = -neg_loss_perf(loss_fn)(ra, tuned, batches[6:])
             print(f"{method:12s} {ratio:6.2f} {res.speedup:8.2f} {ev:10.3f}")
+            if method == "layermerge" and ratio == 0.6:
+                export = (res, tuned)
+
+    # export the fine-tuned LayerMerge@0.6 plan as a portable artifact and
+    # verify the reloaded executor reproduces the merged forward exactly
+    import os
+    import tempfile
+
+    from repro import runtime
+
+    if export is None:
+        return
+    res, tuned = export
+    res.params = tuned
+    ma, _ = host.merged_apply(res.plan, tuned)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "smollm_mini.npz")
+        fp = res.save(path)
+        art = runtime.load(path)
+        y_live = ma(tuned, batches[-1])
+        y_art = art.apply(batches[-1])
+        assert float(jnp.abs(y_live - y_art).max()) < 1e-5
+        print(f"artifact: fingerprint {fp[:16]}, reload exact "
+              f"({os.path.getsize(path)/1024:.1f} KiB)")
 
 
 if __name__ == "__main__":

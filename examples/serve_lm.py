@@ -4,17 +4,27 @@ Demonstrates the serve path the decode_32k / long_500k dry-run cells lower:
 build a cache from a prompt batch (teacher-forced prefill), then run the
 jit'd one-token serve_step in a decode loop with greedy sampling.
 
+With ``--artifact`` the example serves a LayerMerge-COMPRESSED model:
+it loads a portable merged-model artifact (written by
+``python -m repro.compress`` or ``CompressResult.save``), decodes through
+the shared unit-graph executor (KV-cache aware — merged low-rank
+segments carry no decode state at all), and reports compressed-vs-
+original throughput side by side.
+
 Run:  PYTHONPATH=src python examples/serve_lm.py [--tokens 32] [--batch 4]
+      PYTHONPATH=src python -m repro.compress --arch smollm-135m \
+          --budget-ratio 0.55 --out lm.npz
+      PYTHONPATH=src python examples/serve_lm.py --artifact lm.npz
 """
 import argparse
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import transformer as T
+from repro.runtime import serve_loop
 from repro.train.step import make_serve_step
 
 
@@ -24,43 +34,64 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--artifact", default=None,
+                    help="merged-model artifact (.npz); serves the "
+                         "compressed model and compares throughput")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="original-model init seed (overridden by the "
+                         "artifact's recorded source seed)")
     args = ap.parse_args()
 
-    cfg = dataclasses.replace(
-        get_config(args.arch).reduced(), num_layers=4, d_model=128,
-        num_heads=4, num_kv_heads=2, head_dim=32, d_ff=256, vocab_size=512)
-    params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+    art = None
+    if args.artifact:
+        from repro import runtime
+
+        art = runtime.load(args.artifact)
+        if art.graph.family != "transformer":
+            raise SystemExit("[serve_lm] --artifact must hold a "
+                             "transformer-family graph")
+        cfg = art.graph.meta["config"]
+        seed = art.meta.get("source", {}).get("seed", args.seed)
+        print(f"[serve_lm] artifact {args.artifact} "
+              f"(fingerprint {art.fingerprint[:16]}, "
+              f"oracle {art.meta.get('oracle')})")
+    else:
+        cfg = dataclasses.replace(
+            get_config(args.arch).reduced(), num_layers=4, d_model=128,
+            num_heads=4, num_kv_heads=2, head_dim=32, d_ff=256,
+            vocab_size=512)
+        seed = args.seed
+    params, _ = T.init_model(cfg, jax.random.PRNGKey(seed))
     B, P = args.batch, args.prompt_len
     total = P + args.tokens
     prompt = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
                                 cfg.vocab_size)
 
-    # prefill: feed the prompt token by token through the jit'd serve step
-    # (production prefill is the prefill_32k dry-run cell; for the example a
-    # decode-loop warm-up keeps one compiled program)
+    # original model: prefill the prompt token by token through the jit'd
+    # serve step (production prefill is the prefill_32k dry-run cell; for
+    # the example a decode-loop warm-up keeps one compiled program)
     serve = jax.jit(make_serve_step(cfg))
     cache = T.init_cache(cfg, B, total)
-    logits = None
-    t0 = time.perf_counter()
-    for t in range(P):
-        logits, cache = serve(params, cache, {"tokens": prompt[:, t:t + 1]})
-    prefill_s = time.perf_counter() - t0
-
-    # greedy decode
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-    out = [tok]
-    t0 = time.perf_counter()
-    for _ in range(args.tokens - 1):
-        logits, cache = serve(params, cache, {"tokens": tok})
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        out.append(tok)
-    jax.block_until_ready(tok)
-    decode_s = time.perf_counter() - t0
-    seqs = jnp.concatenate(out, axis=1)
+    prefill_s, decode_s, _, seqs = serve_loop(serve, params, cache, prompt,
+                                              args.tokens)
     tps = (args.tokens - 1) * B / decode_s
     print(f"[serve_lm] batch={B} prompt={P} generated={args.tokens}")
-    print(f"[serve_lm] prefill {prefill_s*1e3:.1f} ms, decode "
+    print(f"[serve_lm] original   prefill {prefill_s*1e3:.1f} ms, decode "
           f"{decode_s*1e3:.1f} ms ({tps:.0f} tok/s on this host)")
+
+    if art is not None:
+        step, cparams = art.make_serve_step()
+        step = jax.jit(step)
+        ccache = art.init_cache(B, total)
+        c_prefill_s, c_decode_s, _, cseqs = serve_loop(
+            step, cparams, ccache, prompt, args.tokens)
+        ctps = (args.tokens - 1) * B / c_decode_s
+        print(f"[serve_lm] compressed prefill {c_prefill_s*1e3:.1f} ms, "
+              f"decode {c_decode_s*1e3:.1f} ms ({ctps:.0f} tok/s)")
+        print(f"[serve_lm] decode speedup {decode_s / c_decode_s:.2f}x "
+              f"(DP-predicted {art.meta.get('predicted_speedup', '?')}x)")
+        print(f"[serve_lm] compressed continuation ids: "
+              f"{cseqs[0, :12].tolist()}")
     print(f"[serve_lm] sample continuation ids: {seqs[0, :12].tolist()}")
 
 

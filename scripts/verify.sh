@@ -30,4 +30,7 @@ python -m pytest -x -q $IGNORES "$@"
 echo "== probe-engine bench smoke (table-build parity + accounting) =="
 python -m benchmarks.bench_tables --smoke > /dev/null
 
+echo "== serve bench smoke (artifact round-trip + KV-cache parity) =="
+python -m benchmarks.bench_serve --smoke > /dev/null
+
 echo "verify: OK"

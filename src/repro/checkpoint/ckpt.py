@@ -15,6 +15,7 @@ Fault-tolerance contract exercised by tests/test_ft.py:
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import re
@@ -27,13 +28,21 @@ import numpy as np
 
 
 def _flatten(tree):
-    flat = jax.tree_util.tree_flatten_with_path(tree)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     leaves = {}
-    for path, leaf in flat[0]:
+    for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)
         leaves[key] = np.asarray(jax.device_get(leaf))
-    return leaves, flat[1]
+    return leaves, treedef
+
+
+def flatten_leaves(tree) -> dict:
+    """Key-path-flattened host arrays (``a/b/0/c`` keys).  THE key-path
+    scheme for on-disk pytrees — shared with the merged-model artifacts
+    (:mod:`repro.runtime.artifact`), so checkpoints and artifacts never
+    diverge in layout."""
+    return _flatten(tree)[0]
 
 
 def atomic_write_text(path: str, text: str) -> str:
@@ -49,6 +58,29 @@ def atomic_write_text(path: str, text: str) -> str:
     with open(tmp, "w") as f:
         f.write(text)
     os.replace(tmp, path)
+    return path
+
+
+@contextlib.contextmanager
+def atomic_writer(path: str):
+    """Binary sibling of :func:`atomic_write_text`: yields a file object
+    open on ``path + '.tmp'``; on clean exit the data is flushed +
+    fsync'd and renamed over ``path``, so a reader observes the old file
+    or the new one — never a torn write, even across power loss.  Shared
+    with the merged-model artifacts (:mod:`repro.runtime.artifact`)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        yield f
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def atomic_write_bytes(path: str, data: bytes) -> str:
+    """Atomic single-shot binary publish (see :func:`atomic_writer`)."""
+    with atomic_writer(path) as f:
+        f.write(data)
     return path
 
 

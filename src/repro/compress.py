@@ -1,0 +1,125 @@
+"""One-command compression + artifact export.
+
+Runs the full pipeline (tables → DP → merge) on a named architecture and
+publishes a portable merged-model artifact — no example-script surgery:
+
+  PYTHONPATH=src python -m repro.compress --arch tiny_resnet \
+      --budget-ratio 0.6 --out artifact.npz
+
+  PYTHONPATH=src python -m repro.compress --arch smollm-135m \
+      --budget-ratio 0.55 --out lm.npz
+  PYTHONPATH=src python examples/serve_lm.py --artifact lm.npz
+
+CNN archs come from :mod:`repro.models.zoo`; transformer archs resolve
+through :func:`repro.configs.get_config` (reduced to the CPU-sized toy
+variant unless ``--full``).  Parameters are seed-initialized — the CLI
+demonstrates the plan→artifact path; a production run would restore
+pre-trained params from a checkpoint before compressing.  The artifact
+records the source (arch, seed, reduced) so consumers such as
+``serve_lm --artifact`` can rebuild the matching original network for
+side-by-side throughput numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+CNN_ARCHS = {
+    "tiny_resnet": lambda zoo: zoo.tiny_resnet(
+        num_classes=4, in_hw=16, width=8, blocks=(2, 2)),
+    "tiny_mobilenet": lambda zoo: zoo.tiny_mobilenet(
+        num_classes=4, in_hw=16, width=8),
+    "tiny_unet": lambda zoo: zoo.tiny_unet(in_hw=16, base=8),
+    "resnet34": lambda zoo: zoo.resnet34(),
+    "mobilenetv2": lambda zoo: zoo.mobilenetv2(),
+    "ddpm_unet": lambda zoo: zoo.ddpm_unet(),
+}
+
+
+def build_host(arch: str, *, seed: int = 0, batch: int = 8, seq: int = 128,
+               full: bool = False, max_span: int | None = None):
+    """(host, source-dict) for a named CNN-zoo or transformer arch."""
+    import jax
+
+    key = jax.random.PRNGKey(seed)
+    source = {"arch": arch, "seed": seed}
+    if arch in CNN_ARCHS:
+        from repro.models import cnn, cnn_host, zoo
+
+        net = CNN_ARCHS[arch](zoo)
+        params = cnn.init_params(net, key)
+        host = cnn_host.CNNHost(net, params, batch=batch, max_span=max_span)
+        source["family"] = "cnn"
+        return host, source
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.models.transformer_host import CostEnv, TransformerHost
+
+    cfg = get_config(arch)
+    if not full:
+        cfg = cfg.reduced()
+    params, _ = T.init_model(cfg, key)
+    host = TransformerHost(cfg, params,
+                           env=CostEnv(batch=batch, seq=seq),
+                           max_span=max_span)
+    source.update(family="transformer", reduced=not full)
+    return host, source
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.compress",
+        description="LayerMerge compression → merged-model artifact")
+    ap.add_argument("--arch", required=True,
+                    help=f"CNN zoo ({', '.join(CNN_ARCHS)}) or a "
+                         "transformer config id (e.g. smollm-135m)")
+    ap.add_argument("--budget-ratio", type=float, default=0.6)
+    ap.add_argument("--method", default="layermerge",
+                    choices=("layermerge", "depth", "layeronly"))
+    ap.add_argument("--oracle", default="analytic",
+                    choices=("analytic", "wallclock"))
+    ap.add_argument("--P", type=int, default=200,
+                    help="latency discretization steps (Algorithm 1)")
+    ap.add_argument("--out", required=True, help="artifact path (.npz)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128,
+                    help="sequence length for the transformer cost env")
+    ap.add_argument("--max-span", type=int, default=None)
+    ap.add_argument("--full", action="store_true",
+                    help="transformer: full config, not .reduced()")
+    ap.add_argument("--cache-dir", default=None,
+                    help="lookup-table cache directory (optional)")
+    args = ap.parse_args(argv)
+
+    from repro.core import WallClockOracle, compress
+
+    host, source = build_host(args.arch, seed=args.seed, batch=args.batch,
+                              seq=args.seq, full=args.full,
+                              max_span=args.max_span)
+    oracle = WallClockOracle() if args.oracle == "wallclock" else None
+    res = compress(host, budget_ratio=args.budget_ratio, P=args.P,
+                   method=args.method, latency_oracle=oracle,
+                   importance="magnitude", cache_dir=args.cache_dir)
+    if res is None:
+        raise SystemExit(
+            f"[repro.compress] infeasible: no plan fits "
+            f"budget_ratio={args.budget_ratio} for {args.arch}")
+    fp = res.save(args.out, extra_meta={"source": source})
+    plan = res.plan
+    print(json.dumps({
+        "arch": args.arch,
+        "method": args.method,
+        "budget_ratio": args.budget_ratio,
+        "layers": plan.num_layers,
+        "kept_layers": len(plan.C),
+        "segments": len(plan.segments),
+        "predicted_speedup": round(res.speedup, 3),
+        "artifact": args.out,
+        "fingerprint": fp[:16],
+    }, indent=2))
+
+
+if __name__ == "__main__":
+    main()

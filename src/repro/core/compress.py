@@ -11,6 +11,13 @@ All per-layer probes (the ``T_orig`` pass and the knapsack's latency
 column) route through :mod:`repro.core.probe_engine`, so they share the
 same shape-signature bucketing as the table build instead of re-timing
 every layer ad hoc.
+
+The merge step itself lives in the runtime layer: results are
+artifact-backed (``CompressResult.save(path)`` lowers the plan via
+``host.lower_plan`` and publishes a portable merged-model artifact that
+``repro.runtime.load`` reopens anywhere — serving, benchmarks,
+fine-tuning).  ``python -m repro.compress`` wraps the whole pipeline in
+one command.
 """
 from __future__ import annotations
 
@@ -27,6 +34,13 @@ from .plan import CompressionPlan, Segment
 from .tables import Tables, build_tables, one_segment_plan
 
 
+def _resolve_oracle(latency_oracle) -> LatencyOracle:
+    """THE oracle-default resolution point — resolved once per pipeline
+    run and threaded through :class:`CompressResult`, so the artifact can
+    record which oracle certified its latency numbers."""
+    return latency_oracle or AnalyticTPUOracle()
+
+
 @dataclasses.dataclass
 class CompressResult:
     plan: CompressionPlan
@@ -34,16 +48,43 @@ class CompressResult:
     original_latency: float
     compressed_latency: float
     dp_seconds: float
+    oracle: LatencyOracle | None = None   # the resolved latency oracle
+    host: object = None                   # the host that planned (for lowering)
+    params: object = None                 # params the plan was built against
 
     @property
     def speedup(self) -> float:
         return self.original_latency / max(self.compressed_latency, 1e-12)
 
+    # -- artifact export -------------------------------------------------------
+    def lower(self):
+        """Lower the plan to the shared unit IR (merged, deployable form)."""
+        return self.host.lower_plan(self.plan, self.params)
+
+    def save(self, path: str, extra_meta: dict | None = None) -> str:
+        """Publish a portable merged-model artifact (see
+        :mod:`repro.runtime.artifact`).  Records the plan, the merged
+        unit graph + weights, the certifying oracle, and the measured
+        latency numbers.  Returns the artifact's content fingerprint."""
+        from repro import runtime
+        from . import table_cache
+
+        meta = {
+            "oracle": (table_cache.oracle_token(self.oracle)
+                       if self.oracle is not None else None),
+            "original_latency": self.original_latency,
+            "compressed_latency": self.compressed_latency,
+            "predicted_speedup": self.speedup,
+            "method": self.plan.method,
+        }
+        meta.update(extra_meta or {})
+        return runtime.save(path, self.lower(), plan=self.plan, meta=meta)
+
 
 def original_latency(host, latency_oracle=None, params=None, *,
                      engine: str = "batched") -> float:
     """Σ per-layer latency of the untouched network (the paper's T_orig)."""
-    oracle = latency_oracle or AnalyticTPUOracle()
+    oracle = _resolve_oracle(latency_oracle)
     return sum(probe_engine.layer_latencies(host, oracle, params,
                                             engine=engine))
 
@@ -61,8 +102,13 @@ def compress(
     engine: str = "batched",
     cache_dir: str | None = None,
 ) -> CompressResult | None:
-    """Run LayerMerge (or a baseline) at ``T0 = budget_ratio · T_orig``."""
-    oracle = latency_oracle or AnalyticTPUOracle()
+    """Run LayerMerge (or a baseline) at ``T0 = budget_ratio · T_orig``.
+
+    The result is artifact-backed: it carries the host, params, and the
+    resolved oracle, so ``result.save(path)`` publishes a portable
+    merged-model artifact without re-deriving any of them.
+    """
+    oracle = _resolve_oracle(latency_oracle)
     layer_lats = probe_engine.layer_latencies(host, oracle, params,
                                               engine=engine)
     t_orig = sum(layer_lats)
@@ -85,7 +131,8 @@ def compress(
     return CompressResult(plan=res.plan, tables=tables,
                           original_latency=t_orig,
                           compressed_latency=res.latency,
-                          dp_seconds=dp_s)
+                          dp_seconds=dp_s, oracle=oracle, host=host,
+                          params=params)
 
 
 def _layer_only(host, T0, P, oracle, importance, base_perf, params, t_orig,
@@ -130,4 +177,5 @@ def _layer_only(host, T0, P, oracle, importance, base_perf, params, t_orig,
     plan = CompressionPlan(num_layers=L, segments=segs, objective=obj,
                            latency=true_lat, budget=T0, method="layeronly")
     return CompressResult(plan=plan, tables=None, original_latency=t_orig,
-                          compressed_latency=true_lat, dp_seconds=dp_s)
+                          compressed_latency=true_lat, dp_seconds=dp_s,
+                          oracle=oracle, host=host, params=params)

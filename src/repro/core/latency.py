@@ -44,6 +44,12 @@ class CostBreakdown:
                              self.hbm_bytes + other.hbm_bytes,
                              self.ici_bytes + other.ici_bytes)
 
+    def __mul__(self, scale: float) -> "CostBreakdown":
+        return CostBreakdown(self.flops * scale, self.hbm_bytes * scale,
+                             self.ici_bytes * scale)
+
+    __rmul__ = __mul__
+
 
 ZERO_COST = CostBreakdown(0.0, 0.0, 0.0)
 

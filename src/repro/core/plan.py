@@ -14,6 +14,12 @@ activation-boundary set ``A*``, the kept layer set ``C*`` and the merged-size
 ``k`` is the merged-size coordinate of the lookup tables: merged *kernel
 size* on the CNN instantiation, merged *rank* on the transformer
 instantiation (see DESIGN.md §2.1).
+
+A plan is pure data: hosts lower it to an executable
+:class:`repro.runtime.ir.UnitGraph` via ``host.lower_plan(plan,
+params)``, and its JSON form travels inside merged-model artifacts
+(:mod:`repro.runtime.artifact`) so a deployment can verify exactly which
+``(A*, C*, k*)`` solution it is running.
 """
 from __future__ import annotations
 

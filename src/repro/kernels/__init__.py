@@ -1,3 +1,23 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Public kernel entry points — the ONE import surface for callers.
+
+Models, the runtime executor, tests, and benchmarks import from
+``repro.kernels`` directly (``from repro import kernels; kernels.
+merged_conv_op(...)``) instead of deep-importing ``kernels.ops`` /
+``kernels.ref`` module paths.  Each ``*_op`` dispatches to the Pallas
+kernel on TPU and to the matching ``*_ref`` jnp oracle elsewhere; the
+oracles are exported too — they are the semantic ground truth the
+equivalence suites compare against.
+"""
+from . import ops, ref
+from .ops import (channel_tile, flash_attention_op, force_backend,
+                  merged_conv_op, merged_ffn_op, rglru_scan_op, rmsnorm_op)
+from .ref import (apply_activation, flash_attention_ref, merged_conv_ref,
+                  merged_ffn_ref, rglru_scan_ref, rmsnorm_ref)
+
+__all__ = [
+    "ops", "ref",
+    "channel_tile", "flash_attention_op", "force_backend",
+    "merged_conv_op", "merged_ffn_op", "rglru_scan_op", "rmsnorm_op",
+    "apply_activation", "flash_attention_ref", "merged_conv_ref",
+    "merged_ffn_ref", "rglru_scan_ref", "rmsnorm_ref",
+]

@@ -80,7 +80,7 @@ def rmsnorm_op(x, g, *, eps: float = 1e-6, interpret: bool = False):
     return y.reshape(shape)
 
 
-def _channel_tile(cout: int, requested: int | None) -> int:
+def channel_tile(cout: int, requested: int | None) -> int:
     """Lane-friendly output-channel tile: always a multiple of 8.
 
     The old divisor walk (``while cout_p % bc: bc -= 1``) could degrade to
@@ -112,7 +112,7 @@ def merged_conv_op(x, w, b=None, *, stride: int = 1,
         y = ref.merged_conv_ref(x, w, b, stride=stride)
         return ref.apply_activation(y, activation)
     cout = w.shape[-1]
-    bc = _channel_tile(cout, bcout)
+    bc = channel_tile(cout, bcout)
     w_p, pc = _pad_to(w, 3, bc)
     b_p = None if b is None else jnp.pad(b, (0, pc))
     y = merged_conv(x, w_p, b_p, stride=stride, bcout=bc, tile_ho=tile_ho,

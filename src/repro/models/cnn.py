@@ -8,14 +8,16 @@ annotations.  The same definition can be *applied* three ways:
   activations outside ``A`` are dropped, convs outside ``C`` become the
   identity, padding is re-ordered to the front of every merged group
   (paper Appendix A), GroupNorms are moved to group ends;
-* merged              — ``merge_network(net, params, plan)`` folds every
-  segment into a single convolution (Eq. 1 composition, BN folding,
-  skip-add Dirac fusion) and ``apply_merged`` runs it.
+* merged              — ``CNNHost.lower_plan(plan, params)`` folds every
+  segment into a single convolution (Eq. 1 composition via
+  :func:`merge_segment`: BN folding, skip-add Dirac fusion) and lowers
+  the result to a :class:`repro.runtime.ir.UnitGraph` that the shared
+  executor (:mod:`repro.runtime.executor`) runs.
 
-``apply_replaced(plan)`` and ``apply_merged(merge_network(plan))`` are
-*exactly equal* (same function, same floats up to accumulation order) —
-asserted by ``tests/test_merge.py``; this equality is the cornerstone of the
-paper's method.
+``apply_replaced(plan)`` and the executed merged graph are *exactly
+equal* (same function, same floats up to accumulation order) — asserted
+by ``tests/test_merge.py`` and ``tests/test_runtime.py``; this equality
+is the cornerstone of the paper's method.
 
 Skip blocks may carry a projection shortcut (ResNet downsample blocks);
 those blocks cannot be Dirac-fused, so spans may only sit *inside* them.
@@ -33,7 +35,6 @@ from jax import lax
 
 from repro.core import merge as M
 from repro.core.plan import CompressionPlan, LayerDesc, Segment, identity_plan
-from repro.kernels import ops as kops
 
 
 # ---------------------------------------------------------------------------
@@ -431,22 +432,9 @@ def _apply_head(net: ConvNet, params, x):
 # ---------------------------------------------------------------------------
 # Merge (Algorithm 2 final step)
 # ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class MergedUnit:
-    """One executable unit of the merged network."""
-
-    kind: str                     # 'conv' | 'pool' | 'upsample' | 'attn'
-    seg: Segment
-    w: jax.Array | None = None
-    b: jax.Array | None = None
-    stride: int = 1
-    depthwise: bool = False
-    gn: dict | None = None
-    gn_groups: int = 8
-    act: str = "none"
-    params_ref: dict | None = None   # for attn passthrough
-
+# A merged network is no longer applied here: ``CNNHost.lower_plan``
+# lowers a plan into the shared unit IR (repro.runtime.ir) using
+# :func:`merge_segment` below, and repro.runtime.executor runs it.
 
 def merge_segment(net: ConvNet, layers_params, seg: Segment):
     """Fold one segment into a single conv: returns (w, b, stride, dw)."""
@@ -490,87 +478,3 @@ def merge_segment(net: ConvNet, layers_params, seg: Segment):
         return acc
 
     return chain(seg.i, seg.j)
-
-
-def merge_network(net: ConvNet, params, plan: CompressionPlan
-                  ) -> list[MergedUnit]:
-    units: list[MergedUnit] = []
-    layers = params["layers"]
-    for seg in plan.segments:
-        s_last = net.spec(seg.j)
-        if s_last.kind != "conv":
-            assert seg.j - seg.i == 1, "barrier units are singleton segments"
-            units.append(MergedUnit(kind=s_last.kind, seg=seg,
-                                    stride=s_last.stride,
-                                    params_ref=layers[seg.j - 1],
-                                    act=s_last.act))
-            continue
-        w, b, stride, dw = merge_segment(net, layers, seg)
-        gn, gn_groups = _segment_gn(net, layers, seg)
-        act = s_last.act
-        if net.act_after_merge and not seg.original and act == "none":
-            act = "relu6"
-        units.append(MergedUnit(kind="conv", seg=seg, w=w, b=b, stride=stride,
-                                depthwise=dw, gn=gn, gn_groups=gn_groups,
-                                act=act))
-    return units
-
-
-def apply_merged(net: ConvNet, params, units: list[MergedUnit], x):
-    saved: dict[int, jax.Array] = {}
-    need_save = {sk.start for sk in net.skips}
-    add_end = {sk.end: (sk.start, i) for i, sk in enumerate(net.skips)
-               if sk.kind == "add"}
-    cat_end = {sk.end: sk.start for sk in net.skips if sk.kind == "concat"}
-    if 0 in need_save:
-        saved[0] = x
-    for unit in units:
-        seg = unit.seg
-        if unit.kind == "conv":
-            Km = unit.w.shape[0]
-            lo = (Km - 1) // 2
-            hi = Km - 1 - lo
-            if Km > 1:
-                x = jnp.pad(x, ((0, 0), (lo, hi), (lo, hi), (0, 0)))
-            if unit.depthwise:
-                x = _conv(x, unit.w, unit.stride, True) + unit.b
-            else:
-                # Merged segments execute through the Pallas fast path on
-                # TPU (jnp oracle elsewhere) — strided ones included.
-                x = kops.merged_conv_op(x, unit.w, unit.b,
-                                        stride=unit.stride)
-            # a skip-add whose block spans whole segments ends here; blocks
-            # with start >= seg.i were Dirac-fused inside merge_segment
-            # (proj blocks are never fused)
-            if seg.j in add_end:
-                src, ski = add_end[seg.j]
-                if src < seg.i or net.skips[ski].proj:
-                    base = saved[src]
-                    if net.skips[ski].proj:
-                        base = _apply_proj(base, params["skips"][ski],
-                                           _skip_stride(net, net.skips[ski]))
-                    x = x + base
-            if seg.j in cat_end:
-                x = jnp.concatenate([x, saved[cat_end[seg.j]]], axis=-1)
-            if unit.gn is not None:
-                x = _gn(x, unit.gn, unit.gn_groups)
-            if seg.j < net.L:
-                x = _act(x, unit.act)
-        elif unit.kind == "pool":
-            s = net.spec(seg.j)
-            x = lax.reduce_window(x, 0.0, lax.add, (1, s.k, s.k, 1),
-                                  (1, s.stride, s.stride, 1),
-                                  "SAME") / (s.k * s.k)
-            if seg.j in cat_end:
-                x = jnp.concatenate([x, saved[cat_end[seg.j]]], axis=-1)
-        elif unit.kind == "upsample":
-            n, h, w_, c = x.shape
-            x = jax.image.resize(
-                x, (n, h * unit.stride, w_ * unit.stride, c), "nearest")
-            if seg.j in cat_end:
-                x = jnp.concatenate([x, saved[cat_end[seg.j]]], axis=-1)
-        elif unit.kind == "attn":
-            x = _tiny_self_attention(x, unit.params_ref)
-        if seg.j in need_save:
-            saved[seg.j] = x
-    return _apply_head(net, params, x)

@@ -14,12 +14,13 @@ import hashlib
 import jax
 import jax.numpy as jnp
 
+from repro import kernels
 from repro.core import table_cache
 from repro.core.latency import CostBreakdown, conv2d_cost
 from repro.core.plan import CompressionPlan, LayerDesc, Segment
 from repro.core.probe_engine import ProbeCallable
 from repro.core.segments import SegmentEnumerator
-from repro.kernels import ops
+from repro.runtime import executor, ir
 
 from . import cnn
 
@@ -154,7 +155,7 @@ class CNNHost:
                 return cnn._conv(xp, wgt, stride, True) + b
             # Time the segment exactly as it deploys: through the Pallas
             # fast path on TPU (strided segments included), oracle off-TPU.
-            return ops.merged_conv_op(xp, wgt, b, stride=stride)
+            return kernels.merged_conv_op(xp, wgt, b, stride=stride)
         return ProbeCallable(fn, (x, wgt, b))
 
     def segment_callable(self, seg: Segment, params=None):
@@ -225,7 +226,76 @@ class CNNHost:
         h.update(table_cache.machine_token().encode())
         return h.hexdigest()
 
-    # -- network builders ---------------------------------------------------------
+    # -- plan lowering / network builders -----------------------------------------
+    def lower_plan(self, plan: CompressionPlan, params=None) -> ir.UnitGraph:
+        """Lower a plan to the shared unit IR (Algorithm 2 final step).
+
+        Folds every conv segment into one merged convolution
+        (:func:`repro.models.cnn.merge_segment`: Eq. 1 composition, BN
+        folding, skip-add Dirac fusion) and emits typed unit records with
+        explicit skip/concat wiring, group-norm and boundary-activation
+        epilogues — the executable, serializable form of the plan.
+        """
+        params = params or self.params
+        net = self.net
+        layers = params["layers"]
+        need_save = {sk.start for sk in net.skips}
+        add_end = {sk.end: (sk.start, i) for i, sk in enumerate(net.skips)
+                   if sk.kind == "add"}
+        cat_end = {sk.end: sk.start for sk in net.skips
+                   if sk.kind == "concat"}
+        units = []
+        for seg in plan.segments:
+            s_last = net.spec(seg.j)
+            save_at = seg.j if seg.j in need_save else None
+            if s_last.kind != "conv":
+                assert seg.j - seg.i == 1, "barriers are singleton segments"
+                if s_last.kind == "pool":
+                    units.append(ir.PoolUnit(
+                        k=s_last.k, stride=s_last.stride,
+                        concat_from=cat_end.get(seg.j), save_at=save_at))
+                elif s_last.kind == "upsample":
+                    units.append(ir.UpsampleUnit(
+                        factor=s_last.stride,
+                        concat_from=cat_end.get(seg.j), save_at=save_at))
+                else:
+                    units.append(ir.AttnUnit(
+                        save_at=save_at, params=dict(layers[seg.j - 1])))
+                continue
+            w, b, stride, dw = cnn.merge_segment(net, layers, seg)
+            gn, gn_groups = cnn._segment_gn(net, layers, seg)
+            act = s_last.act
+            if net.act_after_merge and not seg.original and act == "none":
+                act = "relu6"
+            if seg.j >= net.L:
+                act = "none"          # σ_L is the identity (paper §2)
+            uparams = {"w": w, "b": b}
+            add_from = None
+            proj_stride = 1
+            if seg.j in add_end:
+                # skip-adds whose block starts inside the segment were
+                # Dirac-fused by merge_segment (proj blocks never fuse)
+                src, ski = add_end[seg.j]
+                sk = net.skips[ski]
+                if src < seg.i or sk.proj:
+                    add_from = src
+                    if sk.proj:
+                        uparams["proj"] = dict(params["skips"][ski])
+                        proj_stride = cnn._skip_stride(net, sk)
+            if gn is not None:
+                uparams["gn"] = dict(gn)
+            units.append(ir.ConvUnit(
+                stride=stride, depthwise=dw, act=act, gn_groups=gn_groups,
+                proj_stride=proj_stride, add_from=add_from,
+                concat_from=cat_end.get(seg.j), save_at=save_at,
+                params=uparams))
+        gparams = {}
+        if net.head == "classifier":
+            gparams["head"] = dict(params["head"])
+        return ir.UnitGraph(family="cnn", units=tuple(units), params=gparams,
+                            meta={"save_input": 0 in need_save,
+                                  "head": net.head})
+
     def replaced_apply(self, plan: CompressionPlan, params=None):
         params = params or self.params
 
@@ -234,9 +304,14 @@ class CNNHost:
         return apply_fn, params
 
     def merged_apply(self, plan: CompressionPlan, params=None):
+        """Merged forward through the shared runtime executor.
+
+        ``apply_fn(p, x)`` re-lowers from ``p`` on every call (traced
+        once under jit), so fine-tuned parameters flow straight into the
+        merged weights exactly like the legacy closure did.
+        """
         params = params or self.params
-        units = cnn.merge_network(self.net, params, plan)
 
         def apply_fn(p, x):
-            return cnn.apply_merged(self.net, p, units, x)
+            return executor.execute(self.lower_plan(plan, p), x)
         return apply_fn, params

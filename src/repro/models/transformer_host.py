@@ -10,8 +10,10 @@ the stack.  Block capability model per DESIGN §2.3:
   pre-norm scale into W_up and (for GLU) keeps the value path.
 * attention / MoE / RG-LRU / mLSTM / sLSTM — prunable, NOT linearizable.
 
-Merged segments execute as one fused rank-k residual layer
-(kernels/merged_ffn.py on TPU).
+Merged segments execute as one fused rank-k residual layer (the Pallas
+``merged_ffn`` kernel on TPU).  Plans lower to the shared unit IR via
+``lower_plan`` and run through :mod:`repro.runtime.executor` — the same
+path ``examples/serve_lm.py --artifact`` serves.
 """
 from __future__ import annotations
 
@@ -28,6 +30,7 @@ from repro.core.latency import CostBreakdown, matmul_cost, rank_ffn_cost
 from repro.core.plan import CompressionPlan, LayerDesc, Segment
 from repro.core.probe_engine import ProbeCallable
 from repro.core.segments import SegmentEnumerator
+from repro.runtime import executor, ir
 
 from . import transformer as T
 
@@ -168,7 +171,7 @@ class TransformerHost:
 
         @jax.jit
         def fn(x):
-            return _apply_units(self.cfg, units, x)
+            return executor.run_units(self.cfg, units, x)
         return ProbeCallable(fn, (x,))
 
     def segment_callable(self, seg: Segment, params=None):
@@ -193,12 +196,16 @@ class TransformerHost:
         v = sub["p"]["w_down"]
         return u, v
 
+    def _sublayer_unit(self, sub) -> ir.SublayerUnit:
+        return ir.SublayerUnit(sub_kind=sub["kind"],
+                               params={"norm": sub["norm"], "p": sub["p"]})
+
     def _segment_units(self, seg: Segment, params, merged: bool = True):
-        units = []
+        """Lower one segment to IR units: the merged (or unmerged) rank
+        maps of its kept linearizable interior + the kept boundary block."""
+        units: list = []
         kept = set(seg.kept)
         subs = T.sublayer_params(self.cfg, params) + [None]
-        interior = [l for l in seg.layers if l != seg.j or
-                    self.kinds[seg.j - 1] == HEAD_KIND]
         boundary = None if self.kinds[seg.j - 1] == HEAD_KIND else seg.j
         factors = []
         for l in seg.layers:
@@ -210,41 +217,59 @@ class TransformerHost:
             if merged:
                 u, v = M.merge_linear_residual_chain(factors)
                 u, v = M.truncate_rank(u, v, self.cfg.d_model)
-                units.append(("merged", (u, v)))
+                units.append(ir.LowRankUnit(params={"u": u, "v": v}))
             else:
-                for u, v in factors:
-                    units.append(("merged", (u, v)))   # unmerged rank maps
+                for u, v in factors:                   # unmerged rank maps
+                    units.append(ir.LowRankUnit(params={"u": u, "v": v}))
         if boundary is not None and boundary in kept:
-            units.append(("orig", subs[boundary - 1]))
+            units.append(self._sublayer_unit(subs[boundary - 1]))
         return units
 
     def build_units(self, plan: CompressionPlan, params, merged: bool = True):
-        units = []
+        units: list = []
         for seg in plan.segments:
             if seg.original:
-                units.append(("orig",
-                              T.sublayer_params(self.cfg, params)[seg.j - 1]
-                              if self.kinds[seg.j - 1] != HEAD_KIND else
-                              ("skip",)))
+                if self.kinds[seg.j - 1] != HEAD_KIND:
+                    units.append(self._sublayer_unit(
+                        T.sublayer_params(self.cfg, params)[seg.j - 1]))
                 continue
             units.extend(self._segment_units(seg, params, merged=merged))
-        return [u for u in units if u != ("orig", ("skip",))]
+        return units
 
-    # -- network builders --------------------------------------------------------
+    # -- plan lowering / network builders ------------------------------------------
+    def lower_plan(self, plan: CompressionPlan, params=None,
+                   merged: bool = True) -> ir.UnitGraph:
+        """Lower a plan to the shared unit IR, with frontend/head attached.
+
+        ``merged=False`` keeps each kept FFN as its own rank map (the
+        *replaced* network of Algorithm 2 — what fine-tuning trains);
+        ``merged=True`` composes them per segment (the deployed form).
+        """
+        params = params or self.params
+        cfg = self.cfg
+        units = tuple(self.build_units(plan, params, merged=merged))
+        gparams = {"final_norm": params["final_norm"]}
+        if cfg.frontend == "tokens":
+            gparams["embed"] = params["embed"]
+        if not cfg.tie_embeddings or cfg.frontend != "tokens":
+            gparams["unembed"] = params["unembed"]
+        return ir.UnitGraph(family="transformer", units=units,
+                            params=gparams, meta={"config": cfg})
+
     def replaced_apply(self, plan: CompressionPlan, params=None):
         params = params or self.params
 
         def apply_fn(p, batch):
-            units = self.build_units(plan, p, merged=False)
-            return T.forward_compressed(self.cfg, p, units, batch)
+            return executor.execute(
+                self.lower_plan(plan, p, merged=False), batch)
         return apply_fn, params
 
     def merged_apply(self, plan: CompressionPlan, params=None):
         params = params or self.params
 
         def apply_fn(p, batch):
-            units = self.build_units(plan, p, merged=True)
-            return T.forward_compressed(self.cfg, p, units, batch)
+            return executor.execute(
+                self.lower_plan(plan, p, merged=True), batch)
         return apply_fn, params
 
 
@@ -386,24 +411,3 @@ def forward_compressed_spec(cfg, units_spec, params, batch):
     return T.forward_compressed(cfg, params, units, batch)
 
 
-def _apply_units(cfg, units, x):
-    """Standalone unit chain for segment timing (no embed/unembed)."""
-    from . import layers as L
-    from . import moe as MOE
-    for unit in units:
-        if unit[0] == "merged":
-            u, v = unit[1]
-            x = L.merged_ffn(u, v, x)
-        else:
-            sub = unit[1]
-            h = L.rms_norm(x, sub["norm"], cfg.norm_eps)
-            kind = sub["kind"]
-            positions = jnp.arange(x.shape[1])[None, :]
-            if kind == "moe":
-                t = MOE.moe_ffn(sub["p"], h, cfg)
-            elif kind == "ffn":
-                t = L.ffn(sub["p"], h, cfg.ffn_kind)
-            else:
-                t = T._temporal_apply(cfg, kind, sub["p"], h, positions, None)
-            x = x + t
-    return x

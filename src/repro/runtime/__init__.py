@@ -1,0 +1,38 @@
+"""``repro.runtime`` — plan execution as a subsystem, not a host detail.
+
+The compression pipeline (tables → DP → replace → fine-tune → merge)
+produces a *plan*; this package owns everything that happens after the
+plan is frozen:
+
+* :mod:`repro.runtime.ir` — a backend-neutral **unit IR**: typed records
+  for merged-conv / depthwise-conv / low-rank-residual / attention /
+  pool / upsample / sublayer units with explicit strides, activation
+  epilogues, and skip wiring.  Both hosts lower plans into the same IR
+  (``host.lower_plan(plan, params) → UnitGraph``), replacing the former
+  per-host ``cnn.MergedUnit`` list and ``transformer_host`` tuple units.
+* :mod:`repro.runtime.executor` — one shared interpreter over a
+  ``UnitGraph`` that routes every unit through the public kernel entry
+  points (:mod:`repro.kernels`: Pallas on TPU, jnp oracles elsewhere),
+  including a KV-cache-aware decode path for serving transformers.
+* :mod:`repro.runtime.artifact` — a portable **merged-model artifact**
+  (``.npz``: plan JSON + unit-graph spec + merged weights) with atomic
+  publish and a content fingerprint, so compression runs once and every
+  consumer (serving, benchmarks, fine-tuning) loads the same certified
+  object: ``CompressResult.save(path)`` / ``runtime.load(path)``.
+"""
+from .artifact import (ArtifactError, CompressedArtifact, fingerprint, load,
+                       save)
+from .executor import (execute, init_cache, decode_step, jit_apply,
+                       make_serve_step, run_units)
+from .ir import (AttnUnit, ConvUnit, LowRankUnit, PoolUnit, SublayerUnit,
+                 UnitGraph, UpsampleUnit, bind_params, graph_params)
+from .serving import serve_loop
+
+__all__ = [
+    "ArtifactError", "CompressedArtifact", "fingerprint", "load", "save",
+    "execute", "init_cache", "decode_step", "jit_apply", "make_serve_step",
+    "run_units",
+    "AttnUnit", "ConvUnit", "LowRankUnit", "PoolUnit", "SublayerUnit",
+    "UnitGraph", "UpsampleUnit", "bind_params", "graph_params",
+    "serve_loop",
+]

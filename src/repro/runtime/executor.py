@@ -1,0 +1,241 @@
+"""Shared UnitGraph interpreter — ONE execution path for every merged net.
+
+Replaces the two per-host apply loops (``cnn.apply_merged`` over
+``MergedUnit`` lists and ``transformer_host._apply_units`` /
+``T.forward_compressed`` over tuple units): both hosts lower plans to
+:class:`repro.runtime.ir.UnitGraph` and this module runs them.  Every
+unit routes through the public kernel entry points in
+:mod:`repro.kernels` — Pallas ``merged_conv`` / ``merged_ffn`` on TPU,
+the jnp oracles elsewhere — so the serving path exercises exactly the
+kernels the latency tables timed.
+
+Entry points:
+
+* :func:`execute` — full forward (CNN image / transformer prefill).
+* :func:`run_units` — a bare unit chain, no embed/head (segment probes).
+* :func:`init_cache` / :func:`decode_step` / :func:`make_serve_step` —
+  KV-cache-aware one-token decode for serving compressed transformers.
+* :func:`jit_apply` — jitted ``fn(params, inputs)`` with the graph's
+  arrays exposed as a pytree (fine-tuning / sharding consumers).
+
+The unit loop is a python loop: compressed networks are shallow by
+construction (that is the point of the paper), so trace cost is small
+and every unit keeps its own fused kernel launch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import kernels
+from repro.models import cnn as _cnn
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import transformer as T
+from repro.models import xlstm as XL
+
+from . import ir
+
+
+def execute(graph: ir.UnitGraph, inputs, params=None):
+    """Run a UnitGraph: NHWC image batch (cnn) or token batch (transformer).
+
+    ``params`` optionally rebinds the graph's arrays (see
+    :func:`repro.runtime.ir.graph_params`) — the pure-function form used
+    under jit and by fine-tuning consumers.
+    """
+    if params is not None:
+        graph = ir.bind_params(graph, params)
+    if graph.family == "cnn":
+        return _execute_cnn(graph, inputs)
+    if graph.family == "transformer":
+        return _execute_transformer(graph, inputs)
+    raise ValueError(f"unknown graph family {graph.family!r}")
+
+
+def jit_apply(graph: ir.UnitGraph):
+    """(jitted ``fn(params, inputs)``, params pytree) for a graph."""
+    params = ir.graph_params(graph)
+    fn = jax.jit(lambda p, x: execute(graph, x, params=p))
+    return fn, params
+
+
+# ---------------------------------------------------------------------------
+# CNN family
+# ---------------------------------------------------------------------------
+
+def _execute_cnn(graph: ir.UnitGraph, x):
+    saved: dict[int, jax.Array] = {}
+    if graph.meta.get("save_input"):
+        saved[0] = x
+    for u in graph.units:
+        if u.kind == "conv":
+            w, b = u.params["w"], u.params["b"]
+            K = w.shape[0]
+            lo = (K - 1) // 2
+            hi = K - 1 - lo
+            if K > 1:
+                x = jnp.pad(x, ((0, 0), (lo, hi), (lo, hi), (0, 0)))
+            if u.depthwise:
+                x = _cnn._conv(x, w, u.stride, True) + b
+            else:
+                x = kernels.merged_conv_op(x, w, b, stride=u.stride)
+            if u.add_from is not None:
+                base = saved[u.add_from]
+                if "proj" in u.params:
+                    pr = u.params["proj"]
+                    base = _cnn._conv(base, pr["w"], u.proj_stride, False,
+                                      padding="SAME") + pr["b"]
+                x = x + base
+            if u.concat_from is not None:
+                x = jnp.concatenate([x, saved[u.concat_from]], axis=-1)
+            if "gn" in u.params:
+                x = _cnn._gn(x, u.params["gn"], u.gn_groups)
+            x = _cnn._act(x, u.act)
+        elif u.kind == "pool":
+            x = jax.lax.reduce_window(
+                x, 0.0, jax.lax.add, (1, u.k, u.k, 1),
+                (1, u.stride, u.stride, 1), "SAME") / (u.k * u.k)
+            if u.concat_from is not None:
+                x = jnp.concatenate([x, saved[u.concat_from]], axis=-1)
+        elif u.kind == "upsample":
+            n, h, w_, c = x.shape
+            x = jax.image.resize(
+                x, (n, h * u.factor, w_ * u.factor, c), "nearest")
+            if u.concat_from is not None:
+                x = jnp.concatenate([x, saved[u.concat_from]], axis=-1)
+        elif u.kind == "attn":
+            x = _cnn._tiny_self_attention(x, u.params)
+        else:
+            raise ValueError(f"unit kind {u.kind!r} in cnn graph")
+        if u.save_at is not None:
+            saved[u.save_at] = x
+    if graph.meta.get("head") == "classifier":
+        head = graph.params["head"]
+        x = x.mean(axis=(1, 2))
+        x = x @ head["w"] + head["b"]
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Transformer family
+# ---------------------------------------------------------------------------
+
+def _apply_unit(cfg, u, x, positions, mrope):
+    """One prefill/probe unit: lowrank residual or kept sublayer."""
+    if u.kind == "lowrank":
+        return kernels.merged_ffn_op(x, u.params["u"], u.params["v"])
+    if u.kind != "sublayer":
+        raise ValueError(f"unit kind {u.kind!r} in transformer graph")
+    sub = u.params
+    h = L.rms_norm(x, sub["norm"], cfg.norm_eps)
+    kind = u.sub_kind
+    if kind == "moe":
+        t = MOE.moe_ffn(sub["p"], h, cfg, capacity_factor=cfg.capacity_factor)
+    elif kind == "ffn":
+        t = L.ffn(sub["p"], h, cfg.ffn_kind)
+    else:
+        t = T._temporal_apply(cfg, kind, sub["p"], h, positions, mrope)
+    return x + t
+
+
+def run_units(cfg, units, x, positions=None):
+    """Bare unit chain, no embed/unembed — the segment-probe forward."""
+    if positions is None:
+        positions = jnp.arange(x.shape[1])[None, :]
+    for u in units:
+        x = _apply_unit(cfg, u, x, positions, None)
+    return x
+
+
+def _execute_transformer(graph: ir.UnitGraph, batch):
+    cfg = graph.meta["config"]
+    gp = graph.params
+    x = T._embed_in(cfg, gp, batch)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.arange(x.shape[1])[None, :]
+    mrope = batch.get("mrope_positions")
+    for u in graph.units:
+        x = _apply_unit(cfg, u, x, positions, mrope)
+    x = L.rms_norm(x, gp["final_norm"], cfg.norm_eps)
+    return T._unembed(cfg, gp, x)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode (serving)
+# ---------------------------------------------------------------------------
+
+def init_cache(graph: ir.UnitGraph, batch_size: int, seq_len: int):
+    """Per-unit decode state: KV cache for attention sublayers, recurrent
+    state for rglru/mlstm/slstm, ``{}`` for stateless units."""
+    cfg = graph.meta["config"]
+    dtype = jnp.dtype(cfg.dtype)
+    caches = []
+    for u in graph.units:
+        if u.kind == "sublayer" and u.sub_kind in ir.TEMPORAL_KINDS:
+            if u.sub_kind in ("attn", "attn_local"):
+                window = cfg.local_window if u.sub_kind == "attn_local" else 0
+                caches.append(L.init_cache(cfg, batch_size, seq_len, dtype,
+                                           window=window))
+            elif u.sub_kind == "rglru":
+                caches.append(RG.init_rglru_state(cfg, batch_size, dtype))
+            elif u.sub_kind == "mlstm":
+                caches.append(XL.init_mlstm_state(cfg, batch_size))
+            else:
+                caches.append(XL.init_slstm_state(cfg, batch_size))
+        else:
+            caches.append({})
+    return caches
+
+
+def decode_step(graph: ir.UnitGraph, cache, batch):
+    """One-token decode through the compressed unit chain.
+
+    ``batch``: {'tokens': (B, 1)} (or 'embeds').  Returns (logits,
+    new_cache).  Low-rank units are position-independent residual maps,
+    so they apply to the single-token activation directly — the merged
+    segments cost O(1) state, one of the serving wins of depth
+    compression.
+    """
+    cfg = graph.meta["config"]
+    gp = graph.params
+    x = T._embed_in(cfg, gp, batch)
+    mrope = batch.get("mrope_positions")
+    new_cache = []
+    for u, c in zip(graph.units, cache):
+        if u.kind == "sublayer" and u.sub_kind in ir.TEMPORAL_KINDS:
+            sub = u.params
+            h = L.rms_norm(x, sub["norm"], cfg.norm_eps)
+            kind = u.sub_kind
+            if kind in ("attn", "attn_local"):
+                window = cfg.local_window if kind == "attn_local" else 0
+                t, c = L.attention_decode(sub["p"], h, cfg, c, window=window,
+                                          mrope_positions=mrope)
+            elif kind == "rglru":
+                t, c = RG.rglru_decode(sub["p"], h, cfg, c)
+            elif kind == "mlstm":
+                t, c = XL.mlstm_decode(sub["p"], h, cfg, c)
+            else:
+                t, c = XL.slstm_decode(sub["p"], h, cfg, c)
+            x = x + t
+        else:
+            x = _apply_unit(cfg, u, x, None, mrope)
+        new_cache.append(c)
+    x = L.rms_norm(x, gp["final_norm"], cfg.norm_eps)
+    return T._unembed(cfg, gp, x), new_cache
+
+
+def make_serve_step(graph: ir.UnitGraph):
+    """(``step(params, cache, batch) → (logits, cache)``, params pytree).
+
+    The jittable one-token serve step for a compressed transformer —
+    the artifact-backed analogue of
+    :func:`repro.train.step.make_serve_step`.
+    """
+    params = ir.graph_params(graph)
+
+    def step(p, cache, batch):
+        return decode_step(ir.bind_params(graph, p), cache, batch)
+    return step, params

@@ -1,0 +1,203 @@
+"""Backend-neutral unit IR for merged (compressed) networks.
+
+A :class:`UnitGraph` is the executable form of a compression plan: an
+ordered chain of typed *units*, each a record of STATIC configuration
+(strides, kernel geometry, activation epilogue, skip wiring) plus a
+``params`` pytree of arrays (merged weights).  Hosts lower plans into
+this IR (``host.lower_plan(plan, params) → UnitGraph``); the shared
+interpreter in :mod:`repro.runtime.executor` runs it; the artifact layer
+in :mod:`repro.runtime.artifact` serializes it.
+
+Design rules:
+
+* Static fields are plain JSON-able Python values — they round-trip
+  through the artifact spec unchanged.  Arrays live only in ``params``.
+* Units never reference host objects (``ConvNet``, ``ArchConfig``
+  instances, parameter dicts of the *uncompressed* network): everything
+  the executor needs is in the unit record or ``UnitGraph.meta``.
+* Skip/branch wiring is expressed through boundary ids: a unit may
+  ``save_at`` a boundary and later units may ``add_from`` /
+  ``concat_from`` it — the executor keeps the saved-activation table.
+
+CNN unit semantics (epilogue order matches the merged forward that the
+merge-equality tests certify): conv → skip-add → concat → group-norm →
+boundary activation → save.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+@dataclasses.dataclass
+class ConvUnit:
+    """One merged conv segment: VALID conv at the merged kernel size.
+
+    ``params``: ``w`` (Kh,Kw,Cin|1,Cout), ``b`` (Cout,), optional
+    ``gn`` {gamma, beta} (group-norm moved to the segment end, paper
+    Appendix A) and optional ``proj`` {w, b} (1×1 projection shortcut of
+    a skip-add ending at this unit's boundary).
+    """
+
+    kind = "conv"
+    stride: int = 1
+    depthwise: bool = False
+    act: str = "none"               # boundary activation σ_j ('none' at σ_L)
+    gn_groups: int = 8
+    proj_stride: int = 1
+    add_from: int | None = None     # skip-add source boundary id
+    concat_from: int | None = None  # U-Net concat source boundary id
+    save_at: int | None = None      # boundary id to save the output under
+    params: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class PoolUnit:
+    """Average-pool barrier unit (parameter-free)."""
+
+    kind = "pool"
+    k: int = 2
+    stride: int = 2
+    concat_from: int | None = None
+    save_at: int | None = None
+    params: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class UpsampleUnit:
+    """Nearest-neighbour upsample barrier unit (parameter-free)."""
+
+    kind = "upsample"
+    factor: int = 2
+    concat_from: int | None = None
+    save_at: int | None = None
+    params: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class AttnUnit:
+    """Single-head spatial self-attention barrier (DDPM middle block).
+
+    ``params``: ``wq``, ``wk``, ``wv``, ``wo`` — passed through unmerged
+    (attention is never linearizable).
+    """
+
+    kind = "attn"
+    save_at: int | None = None
+    params: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class LowRankUnit:
+    """Rank-``r`` residual map ``x + (x·U)·V`` — a merged FFN segment.
+
+    ``params``: ``u`` (D,r), ``v`` (r,D).  Runs through the Pallas
+    ``merged_ffn`` kernel on TPU.
+    """
+
+    kind = "lowrank"
+    params: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class SublayerUnit:
+    """One kept transformer sublayer: pre-norm → block → residual add.
+
+    ``sub_kind``: 'attn' | 'attn_local' | 'ffn' | 'moe' | 'rglru' |
+    'mlstm' | 'slstm'.  ``params``: {'norm': rmsnorm scale, 'p': the
+    block's parameter pytree}.  Temporal kinds carry decode state (KV
+    cache / recurrent state) in the executor's serve path.
+    """
+
+    kind = "sublayer"
+    sub_kind: str = "ffn"
+    params: dict = dataclasses.field(default_factory=dict)
+
+
+UNIT_TYPES = {
+    "conv": ConvUnit,
+    "pool": PoolUnit,
+    "upsample": UpsampleUnit,
+    "attn": AttnUnit,
+    "lowrank": LowRankUnit,
+    "sublayer": SublayerUnit,
+}
+
+#: temporal sublayer kinds that carry decode state in the serve path
+TEMPORAL_KINDS = ("attn", "attn_local", "rglru", "mlstm", "slstm")
+
+
+@dataclasses.dataclass
+class UnitGraph:
+    """Executable form of a plan: ordered units + graph-level params.
+
+    ``family``: 'cnn' | 'transformer' — selects the executor loop.
+
+    ``params`` (graph-level, outside any unit):
+      cnn          — optional ``head`` {w, b} (classifier);
+      transformer  — optional ``embed``, ``final_norm``, optional
+                     ``unembed``.
+
+    ``meta`` (static):
+      cnn          — ``save_input`` (bool: boundary 0 feeds a skip),
+                     ``head`` ('classifier' | 'none');
+      transformer  — ``config`` (the :class:`ArchConfig`; serialized as
+                     a plain dict in the artifact spec).
+    """
+
+    family: str
+    units: tuple
+    params: dict = dataclasses.field(default_factory=dict)
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# Static spec <-> unit records (artifact serialization support)
+# ---------------------------------------------------------------------------
+
+def unit_static(unit) -> dict:
+    """JSON-able static record of one unit (everything but ``params``)."""
+    out = {"kind": unit.kind}
+    for f in dataclasses.fields(unit):
+        if f.name == "params":
+            continue
+        out[f.name] = getattr(unit, f.name)
+    return out
+
+
+def unit_from_static(static: dict, params: dict):
+    cls = UNIT_TYPES[static["kind"]]
+    kwargs = {k: v for k, v in static.items() if k != "kind"}
+    return cls(params=params, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Params as a pytree (jit / fine-tune / checkpoint support)
+# ---------------------------------------------------------------------------
+
+def graph_params(graph: UnitGraph) -> dict:
+    """The graph's arrays as one pytree: {'units': [...], 'globals': {...}}."""
+    return {"units": [u.params for u in graph.units],
+            "globals": graph.params}
+
+
+def bind_params(graph: UnitGraph, params: dict) -> UnitGraph:
+    """A structurally-identical graph with its arrays replaced.
+
+    ``params`` must match :func:`graph_params` of the same graph — this
+    is how the executor exposes a pure ``fn(params, x)`` signature while
+    unit records stay the single source of static truth.
+    """
+    units = tuple(dataclasses.replace(u, params=p)
+                  for u, p in zip(graph.units, params["units"]))
+    return UnitGraph(family=graph.family, units=units,
+                     params=params["globals"], meta=graph.meta)
+
+
+def count_units(graph: UnitGraph) -> dict[str, int]:
+    """Unit census (for benchmarks / reports): kind → count."""
+    out: dict[str, int] = {}
+    for u in graph.units:
+        key = u.kind if u.kind != "sublayer" else f"sublayer:{u.sub_kind}"
+        out[key] = out.get(key, 0) + 1
+    return out

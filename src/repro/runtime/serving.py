@@ -1,0 +1,41 @@
+"""Serve-loop driver: teacher-forced prefill + greedy KV-cache decode.
+
+ONE timing loop for every consumer of a one-token serve step — the
+original stack (:func:`repro.train.step.make_serve_step`) and the
+artifact-backed compressed executor (:func:`repro.runtime.executor.
+make_serve_step`) — so ``examples/serve_lm.py`` and
+``benchmarks/bench_serve.py`` measure exactly the same protocol.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def serve_loop(step, params, cache, prompt, tokens: int):
+    """Drive ``step(params, cache, batch) → (logits, cache)``.
+
+    Feeds ``prompt`` token by token (prefill), then greedily decodes
+    ``tokens`` ids.  Returns ``(prefill_s, decode_s, logits, seqs)`` —
+    wall-clock seconds for each phase, the final logits, and the
+    ``(B, tokens)`` generated ids.
+    """
+    logits = None
+    t0 = time.perf_counter()
+    for t in range(prompt.shape[1]):
+        logits, cache = step(params, cache, {"tokens": prompt[:, t:t + 1]})
+    jax.block_until_ready(logits)
+    prefill_s = time.perf_counter() - t0
+
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    out = [tok]
+    t0 = time.perf_counter()
+    for _ in range(tokens - 1):
+        logits, cache = step(params, cache, {"tokens": tok})
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        out.append(tok)
+    jax.block_until_ready(tok)
+    decode_s = time.perf_counter() - t0
+    return prefill_s, decode_s, logits, jnp.concatenate(out, axis=1)

@@ -98,6 +98,23 @@ def make_serve_step(cfg):
     return serve_step
 
 
+def make_compressed_forward(graph):
+    """``forward_fn(params, batch)`` over a lowered unit graph.
+
+    The artifact-backed fine-tuning consumer: pass to
+    :func:`make_train_step` as ``forward_fn`` with ``params =
+    repro.runtime.graph_params(graph)`` (and the matching AdamW state) to
+    continue training a compressed model loaded from an artifact —
+    compression runs once, training resumes from the same certified
+    object serving uses.
+    """
+    from repro.runtime import execute
+
+    def forward_fn(params, batch):
+        return execute(graph, batch, params=params)
+    return forward_fn
+
+
 def make_prefill_step(cfg):
     def prefill_step(params, batch):
         return T.forward(cfg, params, batch)

@@ -21,7 +21,7 @@ from repro.core.dp import (brute_force, solve_dp, solve_dp_reference,
                            solve_knapsack)
 from repro.core.segments import pareto_prune_options, subset_selection
 from repro.core.tables import Tables, pareto_prune
-from repro.kernels import ops, ref
+from repro import kernels
 from repro.kernels.merged_conv import choose_tiles, merged_conv
 
 
@@ -228,9 +228,9 @@ def test_tiled_merged_conv_matches_oracle(n, h, w, cin, cout, kh, kw,
     wt = jnp.asarray(rng.standard_normal((kh, kw, cin, cout)) * 0.1,
                      jnp.float32)
     b = jnp.asarray(rng.standard_normal(cout), jnp.float32) if bias else None
-    y = ops.merged_conv_op(x, wt, b, activation=act, tile_ho=tile_ho,
+    y = kernels.merged_conv_op(x, wt, b, activation=act, tile_ho=tile_ho,
                            interpret=True)
-    yr = ref.apply_activation(ref.merged_conv_ref(x, wt, b), act)
+    yr = kernels.apply_activation(kernels.merged_conv_ref(x, wt, b), act)
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
                                rtol=2e-5, atol=2e-5)
 
@@ -253,7 +253,7 @@ def test_merged_conv_bf16_tiled():
     x = jnp.asarray(rng.standard_normal((1, 14, 14, 8)), jnp.bfloat16)
     w = jnp.asarray(rng.standard_normal((5, 5, 8, 16)) * 0.1, jnp.bfloat16)
     y = merged_conv(x, w, bcout=16, tile_ho=3, interpret=True)
-    yr = ref.merged_conv_ref(x, w)
+    yr = kernels.merged_conv_ref(x, w)
     np.testing.assert_allclose(np.asarray(y, np.float32),
                                np.asarray(yr, np.float32),
                                rtol=2e-2, atol=2e-2)
@@ -273,7 +273,7 @@ def test_merged_conv_op_channel_padding_with_fusion():
     x = jnp.asarray(rng.standard_normal((1, 10, 10, 3)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((3, 3, 3, 130)) * 0.1, jnp.float32)
     b = jnp.asarray(rng.standard_normal(130), jnp.float32)
-    y = ops.merged_conv_op(x, w, b, activation="relu", interpret=True)
-    yr = ref.apply_activation(ref.merged_conv_ref(x, w, b), "relu")
+    y = kernels.merged_conv_op(x, w, b, activation="relu", interpret=True)
+    yr = kernels.apply_activation(kernels.merged_conv_ref(x, w, b), "relu")
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
                                rtol=2e-5, atol=2e-5)

@@ -1,7 +1,7 @@
 """Pallas kernel validation: every kernel, swept over shapes and dtypes,
-against the ref.py pure-jnp oracle, in interpret mode on CPU.
+against the kernels/ref.py pure-jnp oracle, in interpret mode on CPU.
 
-Property tests (hypothesis) fuzz odd shapes through the ops.py padding
+Property tests (hypothesis) fuzz odd shapes through the kernels/ops.py padding
 layer; fixed parametrized sweeps cover the tile-aligned fast paths.
 """
 import jax
@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 from _hyp import given, settings, st
 
-from repro.kernels import ops, ref
+from repro import kernels
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.merged_conv import merged_conv
 from repro.kernels.merged_ffn import merged_ffn
@@ -41,7 +41,7 @@ def test_merged_ffn_kernel(dtype, m, d, r, bm, bn, bk, bd):
     u = _rand(ks[1], (d, r), dtype, 0.05)
     v = _rand(ks[2], (r, d), dtype, 0.05)
     y = merged_ffn(x, u, v, bm=bm, bn=bn, bk=bk, bd=bd, interpret=True)
-    yr = ref.merged_ffn_ref(x, u, v)
+    yr = kernels.merged_ffn_ref(x, u, v)
     np.testing.assert_allclose(np.asarray(y, np.float32),
                                np.asarray(yr, np.float32), **TOL[dtype])
 
@@ -50,13 +50,13 @@ def test_merged_ffn_kernel(dtype, m, d, r, bm, bn, bk, bd):
        r=st.integers(1, 160))
 @settings(max_examples=8, deadline=None)
 def test_merged_ffn_op_padding(m, d, r):
-    """ops.py pads ragged shapes correctly (property test)."""
+    """kernels/ops.py pads ragged shapes correctly (property test)."""
     ks = jax.random.split(jax.random.PRNGKey(m * 7 + r), 3)
     x = _rand(ks[0], (m, d), jnp.float32, 0.5)
     u = _rand(ks[1], (d, r), jnp.float32, 0.05)
     v = _rand(ks[2], (r, d), jnp.float32, 0.05)
-    y = ops.merged_ffn_op(x, u, v, interpret=True)
-    np.testing.assert_allclose(y, ref.merged_ffn_ref(x, u, v),
+    y = kernels.merged_ffn_op(x, u, v, interpret=True)
+    np.testing.assert_allclose(y, kernels.merged_ffn_ref(x, u, v),
                                rtol=2e-5, atol=2e-5)
 
 
@@ -74,7 +74,7 @@ def test_flash_attention_kernel(dtype, causal, bh, s, d, bq):
     k = _rand(ks[1], (bh, s, d), dtype)
     v = _rand(ks[2], (bh, s, d), dtype)
     o = flash_attention(q, k, v, causal=causal, bq=bq, bk=bq, interpret=True)
-    oref = ref.flash_attention_ref(q[:, :, None], k[:, :, None],
+    oref = kernels.flash_attention_ref(q[:, :, None], k[:, :, None],
                                    v[:, :, None], causal=causal)[:, :, 0]
     np.testing.assert_allclose(np.asarray(o, np.float32),
                                np.asarray(oref, np.float32), **TOL[dtype])
@@ -88,10 +88,10 @@ def test_flash_attention_op_grad():
     v = _rand(ks[2], (1, 64, 2, 32), jnp.float32)
 
     def f_op(q, k, v):
-        return jnp.sum(ops.flash_attention_op(q, k, v, True, True) ** 2)
+        return jnp.sum(kernels.flash_attention_op(q, k, v, True, True) ** 2)
 
     def f_ref(q, k, v):
-        return jnp.sum(ref.flash_attention_ref(q, k, v, causal=True) ** 2)
+        return jnp.sum(kernels.flash_attention_ref(q, k, v, causal=True) ** 2)
     g_op = jax.grad(f_op, argnums=(0, 1, 2))(q, k, v)
     g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
     for a, b in zip(g_op, g_ref):
@@ -110,7 +110,7 @@ def test_rglru_scan_kernel(b, s, c, bc, bt):
     a = jax.random.uniform(ks[0], (b, s, c), minval=0.4, maxval=0.999)
     x = jax.random.normal(ks[1], (b, s, c)) * 0.2
     h = rglru_scan(a, x, bc=bc, bt=bt, interpret=True)
-    np.testing.assert_allclose(h, ref.rglru_scan_ref(a, x),
+    np.testing.assert_allclose(h, kernels.rglru_scan_ref(a, x),
                                rtol=1e-5, atol=1e-5)
 
 
@@ -120,8 +120,8 @@ def test_rglru_op_padding(s, c):
     ks = jax.random.split(jax.random.PRNGKey(s * 3 + c), 2)
     a = jax.random.uniform(ks[0], (2, s, c), minval=0.4, maxval=0.99)
     x = jax.random.normal(ks[1], (2, s, c)) * 0.2
-    h = ops.rglru_scan_op(a, x, interpret=True)
-    np.testing.assert_allclose(h, ref.rglru_scan_ref(a, x),
+    h = kernels.rglru_scan_op(a, x, interpret=True)
+    np.testing.assert_allclose(h, kernels.rglru_scan_ref(a, x),
                                rtol=1e-5, atol=1e-5)
 
 
@@ -138,7 +138,7 @@ def test_rmsnorm_kernel(dtype, m, d, bm):
     g = _rand(ks[1], (d,), dtype, 0.1)
     y = rmsnorm(x, g, bm=bm, interpret=True)
     np.testing.assert_allclose(np.asarray(y, np.float32),
-                               np.asarray(ref.rmsnorm_ref(x, g), np.float32),
+                               np.asarray(kernels.rmsnorm_ref(x, g), np.float32),
                                **TOL[dtype])
 
 
@@ -156,7 +156,7 @@ def test_merged_conv_kernel(dtype, k, cin, cout, hw):
     x = _rand(ks[0], (2, hw, hw, cin), dtype)
     w = _rand(ks[1], (k, k, cin, cout), dtype, 0.1)
     y = merged_conv(x, w, bcout=min(cout, 128), interpret=True)
-    yr = ref.merged_conv_ref(x, w)
+    yr = kernels.merged_conv_ref(x, w)
     np.testing.assert_allclose(np.asarray(y, np.float32),
                                np.asarray(yr, np.float32), **TOL[dtype])
 
@@ -169,7 +169,7 @@ def test_merged_conv_matches_eq1_composition():
     x = jax.random.normal(ks[0], (1, 12, 12, 8))
     w1 = jax.random.normal(ks[1], (3, 3, 8, 8)) * 0.2
     w2 = jax.random.normal(ks[2], (3, 3, 8, 8)) * 0.2
-    chain = ref.merged_conv_ref(ref.merged_conv_ref(x, w1), w2)
+    chain = kernels.merged_conv_ref(kernels.merged_conv_ref(x, w1), w2)
     wm, _ = M.merge_conv_pair(w1, w2)
     y = merged_conv(x, wm, bcout=8, interpret=True)
     np.testing.assert_allclose(y, chain, rtol=1e-4, atol=1e-4)

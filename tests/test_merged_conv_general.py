@@ -20,7 +20,7 @@ import numpy as np
 import pytest
 from _hyp import given, settings, st
 
-from repro.kernels import ops, ref
+from repro import kernels
 from repro.kernels.merged_conv import (_VMEM_BUDGET, choose_tiles,
                                        input_traffic_model, merged_conv)
 
@@ -29,7 +29,7 @@ TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
 
 
 def _oracle(x, w, b, stride, act=None):
-    return ref.apply_activation(ref.merged_conv_ref(x, w, b, stride=stride),
+    return kernels.apply_activation(kernels.merged_conv_ref(x, w, b, stride=stride),
                                 act)
 
 
@@ -44,7 +44,7 @@ def test_strided_merged_conv_matrix(stride, k):
     x = jnp.asarray(rng.standard_normal((2, 15, 13, 4)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((k, k, 4, 6)) * 0.1, jnp.float32)
     b = jnp.asarray(rng.standard_normal(6), jnp.float32)
-    y = ops.merged_conv_op(x, w, b, stride=stride, activation="relu",
+    y = kernels.merged_conv_op(x, w, b, stride=stride, activation="relu",
                            interpret=True)
     yr = _oracle(x, w, b, stride, "relu")
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
@@ -58,8 +58,8 @@ def test_strided_no_oracle_fallback(stride):
     rng = np.random.default_rng(7 + stride)
     x = jnp.asarray(rng.standard_normal((1, 12, 12, 3)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((3, 3, 3, 5)) * 0.1, jnp.float32)
-    with ops.force_backend("pallas"):
-        y = ops.merged_conv_op(x, w, stride=stride, interpret=True)
+    with kernels.force_backend("pallas"):
+        y = kernels.merged_conv_op(x, w, stride=stride, interpret=True)
     np.testing.assert_allclose(np.asarray(y),
                                np.asarray(_oracle(x, w, None, stride)),
                                rtol=2e-5, atol=2e-5)
@@ -83,7 +83,7 @@ def test_merged_conv_property(stride, kh, kw, tile_ho, tile_wo, h, w, bf16):
     x = jnp.asarray(rng.standard_normal((1, h, w, 3)), dtype)
     wt = jnp.asarray(rng.standard_normal((kh, kw, 3, 5)) * 0.1, dtype)
     b = jnp.asarray(rng.standard_normal(5), dtype)
-    y = ops.merged_conv_op(x, wt, b, stride=stride, tile_ho=tile_ho,
+    y = kernels.merged_conv_op(x, wt, b, stride=stride, tile_ho=tile_ho,
                            tile_wo=tile_wo, activation="relu6",
                            interpret=True)
     yr = _oracle(x, wt, b, stride, "relu6")
@@ -151,14 +151,14 @@ def test_channel_tile_is_multiple_of_8():
     # the old divisor walk degraded to bc=1 on primes; now every choice is
     # a multiple of 8 and the channel axis is padded up instead.
     for cout in (1, 7, 13, 97, 100, 127, 128, 130, 257):
-        bc = ops._channel_tile(cout, None)
+        bc = kernels.channel_tile(cout, None)
         assert bc % 8 == 0
         assert bc <= 128
-    assert ops._channel_tile(130, None) == 128
-    assert ops._channel_tile(24, None) == 24
+    assert kernels.channel_tile(130, None) == 128
+    assert kernels.channel_tile(24, None) == 24
     # explicit lane-hostile requests are rounded up, never searched down
-    assert ops._channel_tile(100, 7) == 8
-    assert ops._channel_tile(100, 48) == 48
+    assert kernels.channel_tile(100, 7) == 8
+    assert kernels.channel_tile(100, 48) == 48
 
 
 @pytest.mark.parametrize("cout", [7, 13, 100, 130])
@@ -167,7 +167,7 @@ def test_odd_channel_counts_correct(cout):
     x = jnp.asarray(rng.standard_normal((1, 10, 10, 3)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((3, 3, 3, cout)) * 0.1, jnp.float32)
     b = jnp.asarray(rng.standard_normal(cout), jnp.float32)
-    y = ops.merged_conv_op(x, w, b, stride=2, activation="relu",
+    y = kernels.merged_conv_op(x, w, b, stride=2, activation="relu",
                            interpret=True)
     np.testing.assert_allclose(np.asarray(y),
                                np.asarray(_oracle(x, w, b, 2, "relu")),
