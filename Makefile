@@ -25,8 +25,11 @@ bench-serve:
 	$(ENV) $(PY) -m benchmarks.bench_serve
 
 # Seconds-scale regression gates (also part of `make verify`): probe-
-# engine parity/accounting + serving-path artifact round-trip and
-# KV-cache decode parity, without the slow timing baselines.
+# engine parity/accounting + serving-path artifact round-trip, KV-cache
+# decode parity, and the sharded executor ≡ single-device gate on 8
+# forced host devices — without the slow timing baselines.
 bench-smoke:
 	$(ENV) $(PY) -m benchmarks.bench_tables --smoke
 	$(ENV) $(PY) -m benchmarks.bench_serve --smoke
+	$(ENV) XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		$(PY) -m benchmarks.bench_serve --smoke --mesh --model-par 2

@@ -2,20 +2,33 @@
 
 Exercises the artifact-backed serve path end-to-end: compress a small LM
 (analytic oracle + magnitude importance — deterministic, seconds-scale),
-publish a merged-model artifact, reload it, and decode through the
-shared unit-graph executor with a KV cache, side by side with the
-uncompressed ``make_serve_step`` stack.  Writes
-``results/BENCH_serve.json`` with prefill/decode throughput for both
-paths plus the DP-predicted speedup (the measured ratio on a CPU build
-host is reported, not asserted — the latency oracle targets the v5e).
+publish a merged-model artifact, reload it, and serve it through the
+jitted protocol of :mod:`repro.runtime.serving` side by side with the
+uncompressed ``make_serve_step`` stack.  Three protocols are timed for
+both stacks:
 
-  PYTHONPATH=src python -m benchmarks.bench_serve [--smoke] [--out PATH]
+* the PR-4 per-token Python loop (one XLA dispatch per position) — the
+  dispatch-bound reference;
+* the jitted chunked-prefill + ``lax.scan`` decode loop;
+* the fixed-slot batched scheduler (``serve_requests``) over many
+  concurrent ragged prompts, batched vs served one prompt at a time.
+
+Writes ``results/BENCH_serve.json`` with throughput for every protocol
+plus ``mesh_info`` when ``--mesh`` shards the run over the host devices
+(``data × model`` logical mesh; run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to get N>1 on
+CPU).
+
+  PYTHONPATH=src python -m benchmarks.bench_serve [--smoke] [--mesh]
+      [--model-par K] [--out PATH]
 
 ``--smoke`` (wired into ``make verify`` via scripts/verify.sh) runs the
 correctness gates in seconds: artifact round-trip + fingerprint
 stability, compressed decode ≡ compressed prefill (KV-cache parity),
-and a genuinely shallower unit chain — so serving-path regressions fail
-``make verify`` even where timing is meaningless.
+scan-loop ≡ per-token-loop token ids, a genuinely shallower unit chain
+— and with ``--mesh`` additionally sharded-executor ≡ single-device
+logits — so serving-path regressions fail ``make verify`` even where
+timing is meaningless.
 """
 from __future__ import annotations
 
@@ -33,12 +46,15 @@ import jax.numpy as jnp                                 # noqa: E402
 import numpy as np                                      # noqa: E402
 
 from repro import runtime                               # noqa: E402
-from repro.runtime import serve_loop                    # noqa: E402
+from repro.runtime import serving                       # noqa: E402
 from repro.configs import get_config                    # noqa: E402
 from repro.core import compress                         # noqa: E402
+from repro.launch.mesh import make_host_mesh, mesh_info  # noqa: E402
 from repro.models import transformer as T               # noqa: E402
 from repro.models.transformer_host import (CostEnv,     # noqa: E402
                                            TransformerHost)
+from repro.sharding.rules import (make_unit_rules,      # noqa: E402
+                                  use_rules)
 from repro.train.step import make_serve_step            # noqa: E402
 
 
@@ -54,20 +70,97 @@ def make_model(smoke: bool):
     return cfg, params
 
 
+def _stack_report(step, params, make_cache, prompt, N, rules):
+    """Per-token vs jitted-scan decode for one serve stack.
+
+    The per-token leg jits the step (the true PR-4 protocol: ONE XLA
+    dispatch per token) so ``jit_loop_speedup`` measures what the
+    chunked/scan loop buys over dispatch overhead, not over eager mode.
+    """
+    B, P = prompt.shape
+    jstep = jax.jit(step)
+    # warm the (B, 1) program so pertoken_prefill_s is steady-state like
+    # the scan loop's warmed prefill_s (the decode columns never include
+    # compile time — the program is shared); trace under the same rules
+    # the timed loop uses, since jit caches by shape, not ambient context
+    with use_rules(rules):
+        jax.block_until_ready(
+            jstep(params, make_cache(B, P + N), {"tokens": prompt[:, :1]})[0])
+    pre_pt, dec_pt, _, seq_pt = serving.serve_loop_pertoken(
+        jstep, params, make_cache(B, P + N), prompt, N, rules=rules)
+    pre_j, dec_j, _, seq_j = serving.serve_loop(
+        step, params, make_cache(B, P + N), prompt, N, rules=rules)
+    if rules is None:
+        # under a mesh the two programs shard reductions differently and
+        # can flip greedy argmax ties on a random-init toy (same caveat
+        # as the batched leg); the sharded run is gated at logits level
+        assert np.array_equal(np.asarray(seq_pt), np.asarray(seq_j)), \
+            "jitted scan loop must reproduce the per-token loop's ids"
+    return {
+        "prefill_s": pre_j, "decode_s": dec_j,
+        "decode_tok_s": serving.decode_tok_s(N - 1, B, dec_j),
+        "pertoken_prefill_s": pre_pt, "pertoken_decode_s": dec_pt,
+        "decode_tok_s_pertoken": serving.decode_tok_s(N - 1, B, dec_pt),
+        "jit_loop_speedup": dec_pt / max(dec_j, 1e-9),
+    }
+
+
+def _batched_report(step, params, make_cache, cfg, N, slots, n_prompts,
+                    rules):
+    """Fixed-slot scheduler over ragged prompts, batched vs one-at-a-time."""
+    mat, lens = serving.pad_prompts(
+        serving.ragged_prompts(7, n_prompts, 4, 16, cfg.vocab_size))
+    gen_b, sec_b = serving.serve_requests(
+        step, params, make_cache, mat, lens, tokens=N, slots=slots,
+        rules=rules)
+    gen_1, sec_1 = serving.serve_requests(
+        step, params, make_cache, mat, lens, tokens=N, slots=1, rules=rules)
+    if rules is None:
+        # Under a mesh the slots=1 round runs replicated (batch 1 does not
+        # divide 'data') while the full batch shards — the reordered float
+        # reductions flip greedy ties on a random-init toy, so exact id
+        # equality is only a gate on the unsharded protocol; the sharded
+        # run is certified at the logits level (allclose gates below).
+        assert np.array_equal(np.asarray(gen_b), np.asarray(gen_1)), \
+            "slot batching must not change greedy generations"
+    return {
+        "prompts": n_prompts, "slots": slots, "tokens": N,
+        "batched_s": sec_b,
+        "batched_tok_s": serving.decode_tok_s(N, n_prompts, sec_b),
+        "single_slot_s": sec_1,
+        "single_slot_tok_s": serving.decode_tok_s(N, n_prompts, sec_1),
+        "batch_speedup": sec_1 / max(sec_b, 1e-9),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="fast correctness pass (CI)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard over the host devices (data × model mesh)")
+    ap.add_argument("--model-par", type=int, default=1,
+                    help="tensor-parallel split of the host mesh")
     ap.add_argument("--budget-ratio", type=float, default=0.55)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=None)
     ap.add_argument("--tokens", type=int, default=None)
+    ap.add_argument("--prompts", type=int, default=None,
+                    help="ragged prompts for the batched-scheduler leg")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), os.pardir, "results",
         "BENCH_serve.json"))
     args = ap.parse_args(argv)
     P = args.prompt_len or (8 if args.smoke else 32)
     N = args.tokens or (8 if args.smoke else 64)
+    R = args.prompts or (6 if args.smoke else 16)
+
+    rules = None
+    minfo = None
+    if args.mesh:
+        mesh = make_host_mesh(model=args.model_par)
+        rules = make_unit_rules(mesh)
+        minfo = mesh_info(mesh)
 
     cfg, params = make_model(args.smoke)
     host = TransformerHost(cfg, params,
@@ -80,35 +173,47 @@ def main(argv=None):
         fp = res.save(path)
         assert res.save(os.path.join(d, "again.npz")) == fp, \
             "artifact fingerprint must be content-stable"
-        art = runtime.load(path)
+        art = runtime.load(path, rules=rules)
         assert art.fingerprint == fp and art.plan == res.plan
+        # an UNSHARDED load of the same artifact: the single-device
+        # reference the --mesh gate compares against
+        art_1d = runtime.load(path) if rules is not None else art
 
     B = args.batch
-    prompt = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
-                                cfg.vocab_size)
+    prompt = serving.random_prompts(1, B, P, cfg.vocab_size)
 
     # original stack
-    step_o = jax.jit(make_serve_step(cfg))
-    cache_o = T.init_cache(cfg, B, P + N)
-    pre_o, dec_o, _, _ = serve_loop(step_o, params, cache_o, prompt, N)
+    step_o = make_serve_step(cfg)
+    orig = _stack_report(step_o, params,
+                         lambda b, s: T.init_cache(cfg, b, s), prompt, N,
+                         rules)
 
-    # compressed (artifact-backed executor)
-    step_c, gp = art.make_serve_step()
-    step_c = jax.jit(step_c)
-    cache_c = art.init_cache(B, P + N)
-    pre_c, dec_c, _, _ = serve_loop(step_c, gp, cache_c, prompt, N)
+    # compressed (artifact-backed, mesh-aware executor)
+    ex = art.executor(rules)
+    step_c, gp = ex.serve_step()
+    comp = _stack_report(step_c, gp, ex.init_cache, prompt, N, rules)
 
-    # KV-cache parity gate: prefill-by-decode ≡ parallel prefill
+    # batched scheduler (compressed stack — the serving product path)
+    batched = _batched_report(step_c, gp, ex.init_cache, cfg, N, B, R,
+                              rules)
+
+    # KV-cache parity gate: decode through the whole prompt ≡ parallel
+    # prefill at the last position (under the mesh when --mesh)
     batch = {"tokens": prompt,
              "positions": jnp.broadcast_to(jnp.arange(P)[None], (B, P))}
-    y_par = art.apply(batch)
-    cache_v = art.init_cache(B, P)
-    lv = None
-    for t in range(P):
-        lv, cache_v = step_c(gp, cache_v, {"tokens": prompt[:, t:t + 1]})
-    delta = float(jnp.abs(y_par[:, -1] - lv[:, 0]).max())
+    y_par = ex.apply(batch)
+    _, _, lv, _ = serving.serve_loop(step_c, gp, ex.init_cache(B, P), prompt,
+                                     1, rules=rules)
+    delta = float(jnp.abs(y_par[:, -1] - lv).max())
     scale = float(jnp.abs(y_par[:, -1]).max()) + 1e-9
     assert delta / scale < 2e-4, f"decode/prefill diverged: {delta}"
+
+    if rules is not None:
+        # sharded ≡ single-device logits (the mesh smoke gate); art_1d
+        # was loaded WITHOUT rules so its params really are unsharded
+        y_single = runtime.execute(art_1d.graph, batch)
+        sdelta = float(jnp.abs(y_par - y_single).max()) / scale
+        assert sdelta < 2e-4, f"sharded executor diverged: {sdelta}"
 
     n_orig = len(T.sublayer_kinds(cfg))
     n_units = len(art.graph.units)
@@ -119,16 +224,18 @@ def main(argv=None):
                      "batch": B, "prompt": P, "tokens": N,
                      "budget_ratio": args.budget_ratio,
                      "smoke": args.smoke},
+        "mesh_info": minfo,
         "artifact": {"fingerprint": fp[:16],
                      "units": runtime.ir.count_units(art.graph),
                      "sublayers_original": n_orig,
                      "units_compressed": n_units,
                      "oracle": art.meta.get("oracle")},
-        "original": {"prefill_s": pre_o, "decode_s": dec_o,
-                     "decode_tok_s": (N - 1) * B / max(dec_o, 1e-9)},
-        "compressed": {"prefill_s": pre_c, "decode_s": dec_c,
-                       "decode_tok_s": (N - 1) * B / max(dec_c, 1e-9)},
-        "measured_decode_speedup": dec_o / max(dec_c, 1e-9),
+        "original": orig,
+        "compressed": comp,
+        "batched": batched,
+        "measured_decode_speedup":
+            orig["decode_s"] / max(comp["decode_s"], 1e-9),
+        "jit_loop_speedup_compressed": comp["jit_loop_speedup"],
         "predicted_speedup_v5e": res.speedup,
         "kv_parity_rel_delta": delta / scale,
     }

@@ -33,4 +33,8 @@ python -m benchmarks.bench_tables --smoke > /dev/null
 echo "== serve bench smoke (artifact round-trip + KV-cache parity) =="
 python -m benchmarks.bench_serve --smoke > /dev/null
 
+echo "== serve bench smoke, sharded (forced host devices, data x model) =="
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m benchmarks.bench_serve --smoke --mesh --model-par 2 > /dev/null
+
 echo "verify: OK"

@@ -22,11 +22,17 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh():
-    """Whatever devices exist on this host, as a 1×N ('data','model') mesh
-    with everything on 'model'=1 — used by CPU examples and tests."""
+def make_host_mesh(*, model: int = 1):
+    """Whatever devices exist on this host, as a ('data','model') mesh.
+
+    ``model`` splits off a tensor-parallel axis (must divide the device
+    count); the default keeps everything data-parallel — used by CPU
+    examples, forced-host-device tests, and the sharded serve smoke.
+    """
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"))
+    if model < 1 or n % model != 0:
+        raise ValueError(f"model={model} does not divide {n} devices")
+    return jax.make_mesh((n // model, model), ("data", "model"))
 
 
 def mesh_info(mesh) -> dict:

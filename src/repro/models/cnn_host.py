@@ -292,9 +292,9 @@ class CNNHost:
         gparams = {}
         if net.head == "classifier":
             gparams["head"] = dict(params["head"])
-        return ir.UnitGraph(family="cnn", units=tuple(units), params=gparams,
-                            meta={"save_input": 0 in need_save,
-                                  "head": net.head})
+        return ir.annotate_axes(ir.UnitGraph(
+            family="cnn", units=tuple(units), params=gparams,
+            meta={"save_input": 0 in need_save, "head": net.head}))
 
     def replaced_apply(self, plan: CompressionPlan, params=None):
         params = params or self.params

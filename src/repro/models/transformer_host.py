@@ -253,8 +253,9 @@ class TransformerHost:
             gparams["embed"] = params["embed"]
         if not cfg.tie_embeddings or cfg.frontend != "tokens":
             gparams["unembed"] = params["unembed"]
-        return ir.UnitGraph(family="transformer", units=units,
-                            params=gparams, meta={"config": cfg})
+        return ir.annotate_axes(ir.UnitGraph(
+            family="transformer", units=units, params=gparams,
+            meta={"config": cfg}))
 
     def replaced_apply(self, plan: CompressionPlan, params=None):
         params = params or self.params

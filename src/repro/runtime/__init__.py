@@ -19,20 +19,46 @@ plan is frozen:
   publish and a content fingerprint, so compression runs once and every
   consumer (serving, benchmarks, fine-tuning) loads the same certified
   object: ``CompressResult.save(path)`` / ``runtime.load(path)``.
+* :mod:`repro.runtime.serving` — the jitted serve protocol: chunked
+  prefill + ``lax.scan`` greedy decode (:func:`serve_loop`) and a
+  fixed-slot batched request scheduler (:func:`serve_requests`) that
+  runs ragged prompt batches through ONE fused prefill+decode scan.
+
+**The logical-axis contract.**  Artifacts carry their sharding as data:
+every unit record (and the graph) ships an ``axes`` map {param keypath →
+logical axis names} written by the host at lowering time
+(:func:`repro.runtime.ir.annotate_axes`) — 'ffn'/'heads'/'vocab'/'rank'
+for transformer units, 'conv_in'/'conv_out' for merged-conv units,
+'embed'/'vocab' at graph level.  A consumer resolves the names through a
+:class:`repro.sharding.rules.ShardingRules` to place weights
+(``runtime.load(path, rules=...)`` device_puts each array straight to
+its ``NamedSharding``), and :class:`GraphExecutor` jits prefill/decode
+under the mesh with the matching activation and KV-cache ('kv_seq')
+constraints.  No rules — or a one-device mesh — runs the identical code
+fully replicated; v1 artifacts load with empty annotations and behave
+the same way.
 """
 from .artifact import (ArtifactError, CompressedArtifact, fingerprint, load,
                        save)
-from .executor import (execute, init_cache, decode_step, jit_apply,
+from .executor import (GraphExecutor, cache_shardings, execute,
+                       graph_shardings, init_cache, decode_step, jit_apply,
                        make_serve_step, run_units)
 from .ir import (AttnUnit, ConvUnit, LowRankUnit, PoolUnit, SublayerUnit,
-                 UnitGraph, UpsampleUnit, bind_params, graph_params)
-from .serving import serve_loop
+                 UnitGraph, UpsampleUnit, annotate_axes, bind_params,
+                 graph_axes, graph_params)
+from .serving import (decode_tok_s, generate_fused, greedy_token,
+                      pad_prompts, ragged_prompts, random_prompts,
+                      serve_loop, serve_loop_pertoken, serve_requests)
 
 __all__ = [
     "ArtifactError", "CompressedArtifact", "fingerprint", "load", "save",
-    "execute", "init_cache", "decode_step", "jit_apply", "make_serve_step",
+    "GraphExecutor", "cache_shardings", "execute", "graph_shardings",
+    "init_cache", "decode_step", "jit_apply", "make_serve_step",
     "run_units",
     "AttnUnit", "ConvUnit", "LowRankUnit", "PoolUnit", "SublayerUnit",
-    "UnitGraph", "UpsampleUnit", "bind_params", "graph_params",
-    "serve_loop",
+    "UnitGraph", "UpsampleUnit", "annotate_axes", "bind_params",
+    "graph_axes", "graph_params",
+    "decode_tok_s", "generate_fused", "greedy_token", "pad_prompts",
+    "ragged_prompts", "random_prompts", "serve_loop", "serve_loop_pertoken",
+    "serve_requests",
 ]

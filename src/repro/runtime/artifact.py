@@ -20,6 +20,14 @@ Publish is atomic (write ``path + '.tmp'``, then rename — the
 checkpoint/table-cache crash contract), and :func:`load` re-verifies the
 fingerprint, so a reader never observes a torn or bit-rotted artifact as
 valid: corruption raises :class:`ArtifactError` instead of mis-parsing.
+
+Format v2 adds the sharding contract: each unit static carries its
+``axes`` record and the spec carries ``global_axes`` (logical axis names
+per param keypath, see :mod:`repro.runtime.ir`).  ``load(path, rules=)``
+resolves those names through a :class:`ShardingRules` and ``device_put``s
+every array STRAIGHT to its ``NamedSharding`` — no replicated host-side
+copy is materialized on the devices first.  v1 artifacts (no
+annotations) still load, as fully replicated graphs.
 """
 from __future__ import annotations
 
@@ -35,7 +43,8 @@ import numpy as np
 
 from . import ir
 
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2
+SUPPORTED_FORMATS = (1, 2)
 
 
 class ArtifactError(RuntimeError):
@@ -101,6 +110,7 @@ def _payload(graph: ir.UnitGraph, plan=None, meta: dict | None = None):
         "format": FORMAT_VERSION,
         "family": graph.family,
         "graph_meta": _meta_to_spec(graph.meta),
+        "global_axes": graph.axes,
         "meta": meta or {},
         "plan": json.loads(plan.to_json()) if plan is not None else None,
         "units": [ir.unit_static(u) for u in graph.units],
@@ -161,6 +171,12 @@ class CompressedArtifact:
         from . import executor
         return executor.init_cache(self.graph, batch_size, seq_len)
 
+    def executor(self, rules=None):
+        """Mesh-aware jitted executor (see :class:`GraphExecutor`);
+        pass the same ``rules`` the artifact was loaded with."""
+        from . import executor
+        return executor.GraphExecutor(self.graph, rules)
+
 
 def save(path: str, graph: ir.UnitGraph, plan=None,
          meta: dict | None = None) -> str:
@@ -179,9 +195,24 @@ def save(path: str, graph: ir.UnitGraph, plan=None,
     return fp
 
 
-def load(path: str) -> CompressedArtifact:
+def _key_axes(spec: dict, key: str):
+    """Recorded logical names of one array key ('u<i>/…' or 'g/…')."""
+    if key.startswith("g/"):
+        return spec.get("global_axes", {}).get(key[2:])
+    idx, sub = key.split("/", 1)
+    return spec["units"][int(idx[1:])].get("axes", {}).get(sub)
+
+
+def load(path: str, rules=None) -> CompressedArtifact:
     """Load + verify an artifact; raises :class:`ArtifactError` when the
-    file is missing, torn, corrupt, or from an unknown format version."""
+    file is missing, torn, corrupt, or from an unknown format version.
+
+    With ``rules`` (a :class:`ShardingRules` over a live mesh), every
+    array is ``device_put`` DIRECTLY to the ``NamedSharding`` its
+    recorded logical axes resolve to — each device receives only its
+    shard, instead of a replicated host copy being committed first.
+    v1 artifacts carry no annotations and load fully replicated.
+    """
     if not os.path.exists(path):
         raise ArtifactError(f"no artifact at {path}")
     try:
@@ -194,19 +225,24 @@ def load(path: str) -> CompressedArtifact:
         stored_fp = data.pop("__fingerprint__").item()
     except (KeyError, json.JSONDecodeError, ValueError) as e:
         raise ArtifactError(f"artifact {path} has no valid spec: {e}") from e
-    if spec.get("format") != FORMAT_VERSION:
+    if spec.get("format") not in SUPPORTED_FORMATS:
         raise ArtifactError(
-            f"artifact {path} format {spec.get('format')!r} != "
-            f"{FORMAT_VERSION}")
+            f"artifact {path} format {spec.get('format')!r} not in "
+            f"{SUPPORTED_FORMATS}")
     if _digest(spec, data) != stored_fp:
         raise ArtifactError(
             f"artifact {path} failed fingerprint verification "
             "(corrupt weights or tampered spec)")
 
+    sharded = rules is not None and rules.mesh is not None
     unit_arrays: list[dict] = [{} for _ in spec["units"]]
     global_arrays: dict = {}
     for key, arr in data.items():
-        val = jax.numpy.asarray(arr)
+        if sharded:
+            names = tuple(_key_axes(spec, key) or ())
+            val = jax.device_put(arr, rules.named(names, arr.shape))
+        else:
+            val = jax.numpy.asarray(arr)
         if key.startswith("g/"):
             global_arrays[key[2:]] = val
         else:
@@ -217,7 +253,8 @@ def load(path: str) -> CompressedArtifact:
         for static, flat in zip(spec["units"], unit_arrays))
     graph = ir.UnitGraph(family=spec["family"], units=units,
                          params=_unflatten(global_arrays),
-                         meta=_meta_from_spec(spec["graph_meta"]))
+                         meta=_meta_from_spec(spec["graph_meta"]),
+                         axes=spec.get("global_axes", {}))
     plan = None
     if spec.get("plan") is not None:
         from repro.core.plan import CompressionPlan

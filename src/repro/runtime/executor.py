@@ -17,6 +17,14 @@ Entry points:
   KV-cache-aware one-token decode for serving compressed transformers.
 * :func:`jit_apply` — jitted ``fn(params, inputs)`` with the graph's
   arrays exposed as a pytree (fine-tuning / sharding consumers).
+* :class:`GraphExecutor` — the mesh-aware serving entry point: resolves
+  the graph's logical-axis annotations (:mod:`repro.runtime.ir`) through
+  a :class:`ShardingRules` into ``NamedSharding``s, places params and
+  caches, and jits prefill/decode once under the mesh.  ``rules=None``
+  (or a one-device mesh) is the SAME code path — every
+  ``logical_constraint`` is a no-op without ambient rules — so the
+  single-host executor is just the trivial mesh, not a second
+  interpreter.
 
 The unit loop is a python loop: compressed networks are shallow by
 construction (that is the point of the paper), so trace cost is small
@@ -34,6 +42,8 @@ from repro.models import moe as MOE
 from repro.models import rglru as RG
 from repro.models import transformer as T
 from repro.models import xlstm as XL
+from repro.sharding.rules import (logical_constraint,
+                                  param_shardings_with_shapes, use_rules)
 
 from . import ir
 
@@ -65,8 +75,14 @@ def jit_apply(graph: ir.UnitGraph):
 # CNN family
 # ---------------------------------------------------------------------------
 
+#: NHWC activation layout of the CNN unit loop: batch data-parallel,
+#: channels on the model axis (the merged-conv analogue of 'act_ffn')
+_CNN_ACT = ("batch", None, None, "act_channels")
+
+
 def _execute_cnn(graph: ir.UnitGraph, x):
     saved: dict[int, jax.Array] = {}
+    x = logical_constraint(x, _CNN_ACT)
     if graph.meta.get("save_input"):
         saved[0] = x
     for u in graph.units:
@@ -109,6 +125,7 @@ def _execute_cnn(graph: ir.UnitGraph, x):
             x = _cnn._tiny_self_attention(x, u.params)
         else:
             raise ValueError(f"unit kind {u.kind!r} in cnn graph")
+        x = logical_constraint(x, _CNN_ACT)
         if u.save_at is not None:
             saved[u.save_at] = x
     if graph.meta.get("head") == "classifier":
@@ -125,7 +142,9 @@ def _execute_cnn(graph: ir.UnitGraph, x):
 def _apply_unit(cfg, u, x, positions, mrope):
     """One prefill/probe unit: lowrank residual or kept sublayer."""
     if u.kind == "lowrank":
-        return kernels.merged_ffn_op(x, u.params["u"], u.params["v"])
+        return logical_constraint(
+            kernels.merged_ffn_op(x, u.params["u"], u.params["v"]),
+            ("batch", "seq", "act_embed"))
     if u.kind != "sublayer":
         raise ValueError(f"unit kind {u.kind!r} in transformer graph")
     sub = u.params
@@ -137,7 +156,7 @@ def _apply_unit(cfg, u, x, positions, mrope):
         t = L.ffn(sub["p"], h, cfg.ffn_kind)
     else:
         t = T._temporal_apply(cfg, kind, sub["p"], h, positions, mrope)
-    return x + t
+    return logical_constraint(x + t, ("batch", "seq", "act_embed"))
 
 
 def run_units(cfg, units, x, positions=None):
@@ -166,6 +185,37 @@ def _execute_transformer(graph: ir.UnitGraph, batch):
 # ---------------------------------------------------------------------------
 # KV-cache decode (serving)
 # ---------------------------------------------------------------------------
+
+def _state_axes(u) -> dict:
+    """Logical axes of one unit's decode state ('kv_seq' decode layout)."""
+    if u.kind == "sublayer" and u.sub_kind in ir.TEMPORAL_KINDS:
+        if u.sub_kind in ("attn", "attn_local"):
+            return dict(L.CACHE_AXES)
+        if u.sub_kind == "rglru":
+            return dict(RG.RGLRU_STATE_AXES)
+        if u.sub_kind == "mlstm":
+            return dict(XL.MLSTM_STATE_AXES)
+        return dict(XL.SLSTM_STATE_AXES)
+    return {}
+
+
+def cache_axes(graph: ir.UnitGraph) -> list:
+    """Per-unit logical-axes pytree aligned with :func:`init_cache`."""
+    return [_state_axes(u) for u in graph.units]
+
+
+def _is_names(x):
+    return isinstance(x, tuple) or x is None
+
+
+def _constrain_state(c, ax):
+    """logical_constraint over one unit's decode-state pytree."""
+    if not ax:
+        return c
+    return jax.tree.map(
+        lambda names, a: logical_constraint(a, names) if names else a,
+        ax, c, is_leaf=_is_names)
+
 
 def init_cache(graph: ir.UnitGraph, batch_size: int, seq_len: int):
     """Per-unit decode state: KV cache for attention sublayers, recurrent
@@ -219,7 +269,8 @@ def decode_step(graph: ir.UnitGraph, cache, batch):
                 t, c = XL.mlstm_decode(sub["p"], h, cfg, c)
             else:
                 t, c = XL.slstm_decode(sub["p"], h, cfg, c)
-            x = x + t
+            x = logical_constraint(x + t, ("batch", "seq", "act_embed"))
+            c = _constrain_state(c, _state_axes(u))
         else:
             x = _apply_unit(cfg, u, x, None, mrope)
         new_cache.append(c)
@@ -239,3 +290,80 @@ def make_serve_step(graph: ir.UnitGraph):
     def step(p, cache, batch):
         return decode_step(ir.bind_params(graph, p), cache, batch)
     return step, params
+
+
+# ---------------------------------------------------------------------------
+# Mesh-aware execution (sharded serving)
+# ---------------------------------------------------------------------------
+
+def graph_shardings(rules, graph: ir.UnitGraph):
+    """NamedSharding pytree for :func:`ir.graph_params` under ``rules``.
+
+    Resolved from the graph's declarative axes annotations with per-leaf
+    divisibility fallback (a dim the mesh does not divide is replicated,
+    the GQA kv<TP contract) — sharding stays data in the artifact.
+    """
+    return param_shardings_with_shapes(rules, ir.graph_axes(graph),
+                                       ir.graph_params(graph))
+
+
+def cache_shardings(rules, graph: ir.UnitGraph, cache):
+    """NamedSharding pytree for a decode cache ('kv_seq' layout)."""
+    return param_shardings_with_shapes(rules, cache_axes(graph), cache)
+
+
+class GraphExecutor:
+    """Jitted, mesh-aware prefill/decode over one :class:`UnitGraph`.
+
+    ``rules=None`` (or a rules object without a mesh) is the trivial
+    single-device executor: the same traced programs, with every
+    ``logical_constraint`` a no-op and params left where they are.  With
+    rules, params are ``device_put`` onto the shardings their logical
+    axes resolve to, prefill/decode are traced once under the ambient
+    rules (so activation and KV-cache constraints bake into the jitted
+    programs), and fresh caches come back mesh-placed.
+    """
+
+    def __init__(self, graph: ir.UnitGraph, rules=None):
+        self.graph = graph
+        self.rules = rules if (rules is not None
+                               and rules.mesh is not None) else None
+        params = ir.graph_params(graph)
+        if self.rules is not None:
+            params = jax.device_put(params, graph_shardings(self.rules,
+                                                            graph))
+        self.params = params
+        self._prefill = jax.jit(
+            lambda p, batch: execute(graph, batch, params=p))
+        self._decode = jax.jit(
+            lambda p, cache, batch: decode_step(ir.bind_params(graph, p),
+                                                cache, batch))
+
+    def apply(self, batch, params=None):
+        """Full forward (CNN image batch / transformer prefill), jitted."""
+        with use_rules(self.rules):
+            return self._prefill(self.params if params is None else params,
+                                 batch)
+
+    def init_cache(self, batch_size: int, seq_len: int):
+        cache = init_cache(self.graph, batch_size, seq_len)
+        if self.rules is not None:
+            cache = jax.device_put(
+                cache, cache_shardings(self.rules, self.graph, cache))
+        return cache
+
+    def decode(self, cache, batch, params=None):
+        """One-token decode step, jitted: ``(logits, new_cache)``."""
+        with use_rules(self.rules):
+            return self._decode(self.params if params is None else params,
+                                cache, batch)
+
+    def serve_step(self):
+        """``(step(params, cache, batch), params)`` for the serve loops.
+
+        The step is unjitted — :mod:`repro.runtime.serving` scans and
+        jits it; callers must run it under ``use_rules(self.rules)``
+        (the serving entry points take ``rules=`` and do this).
+        """
+        step, _ = make_serve_step(self.graph)
+        return step, self.params

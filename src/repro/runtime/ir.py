@@ -18,6 +18,15 @@ Design rules:
 * Skip/branch wiring is expressed through boundary ids: a unit may
   ``save_at`` a boundary and later units may ``add_from`` /
   ``concat_from`` it — the executor keeps the saved-activation table.
+* Sharding is DATA, not code: every unit carries an ``axes`` record
+  mapping param key-paths to *logical axis names* (MaxText-style, see
+  :mod:`repro.sharding.rules`), and ``UnitGraph.axes`` does the same for
+  graph-level params.  The executor resolves names → ``NamedSharding``
+  through whatever :class:`ShardingRules` it is given; an artifact
+  therefore ships its own sharding contract and a loader can
+  ``device_put`` weights straight to their mesh placement.  Hosts
+  populate the annotations at lowering time via :func:`annotate_axes`;
+  empty ``axes`` simply means fully replicated.
 
 CNN unit semantics (epilogue order matches the merged forward that the
 merge-equality tests certify): conv → skip-add → concat → group-norm →
@@ -26,7 +35,7 @@ boundary activation → save.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Mapping
 
 
 @dataclasses.dataclass
@@ -48,6 +57,7 @@ class ConvUnit:
     add_from: int | None = None     # skip-add source boundary id
     concat_from: int | None = None  # U-Net concat source boundary id
     save_at: int | None = None      # boundary id to save the output under
+    axes: dict = dataclasses.field(default_factory=dict)
     params: dict = dataclasses.field(default_factory=dict)
 
 
@@ -60,6 +70,7 @@ class PoolUnit:
     stride: int = 2
     concat_from: int | None = None
     save_at: int | None = None
+    axes: dict = dataclasses.field(default_factory=dict)
     params: dict = dataclasses.field(default_factory=dict)
 
 
@@ -71,6 +82,7 @@ class UpsampleUnit:
     factor: int = 2
     concat_from: int | None = None
     save_at: int | None = None
+    axes: dict = dataclasses.field(default_factory=dict)
     params: dict = dataclasses.field(default_factory=dict)
 
 
@@ -84,6 +96,7 @@ class AttnUnit:
 
     kind = "attn"
     save_at: int | None = None
+    axes: dict = dataclasses.field(default_factory=dict)
     params: dict = dataclasses.field(default_factory=dict)
 
 
@@ -96,6 +109,7 @@ class LowRankUnit:
     """
 
     kind = "lowrank"
+    axes: dict = dataclasses.field(default_factory=dict)
     params: dict = dataclasses.field(default_factory=dict)
 
 
@@ -111,6 +125,7 @@ class SublayerUnit:
 
     kind = "sublayer"
     sub_kind: str = "ffn"
+    axes: dict = dataclasses.field(default_factory=dict)
     params: dict = dataclasses.field(default_factory=dict)
 
 
@@ -149,6 +164,9 @@ class UnitGraph:
     units: tuple
     params: dict = dataclasses.field(default_factory=dict)
     meta: dict = dataclasses.field(default_factory=dict)
+    #: logical axes of graph-level params (flat keypath → name list);
+    #: same contract as the per-unit ``axes`` records
+    axes: dict = dataclasses.field(default_factory=dict)
 
 
 # ---------------------------------------------------------------------------
@@ -191,7 +209,8 @@ def bind_params(graph: UnitGraph, params: dict) -> UnitGraph:
     units = tuple(dataclasses.replace(u, params=p)
                   for u, p in zip(graph.units, params["units"]))
     return UnitGraph(family=graph.family, units=units,
-                     params=params["globals"], meta=graph.meta)
+                     params=params["globals"], meta=graph.meta,
+                     axes=graph.axes)
 
 
 def count_units(graph: UnitGraph) -> dict[str, int]:
@@ -201,3 +220,147 @@ def count_units(graph: UnitGraph) -> dict[str, int]:
         key = u.kind if u.kind != "sublayer" else f"sublayer:{u.sub_kind}"
         out[key] = out.get(key, 0) + 1
     return out
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis annotations (the artifact sharding contract)
+# ---------------------------------------------------------------------------
+#
+# ``axes`` records are flat dicts {param keypath → [logical names]} — the
+# keypath uses '/'-joined keys exactly like the artifact array layout, and
+# a name entry of ``None`` (JSON null) means "this dim is never sharded".
+# Key-paths absent from the record resolve to fully replicated, so partial
+# annotations (and the empty v1-artifact record) are always valid.
+
+def axes_tree(params, flat_axes: Mapping, prefix: str = ""):
+    """Axes pytree aligned leaf-for-leaf with ``params``.
+
+    Each array leaf becomes a tuple of logical names (or ``None`` for
+    replicated) looked up by its '/'-joined keypath — the shape
+    :func:`repro.sharding.rules.param_shardings_with_shapes` consumes.
+    """
+    if isinstance(params, dict):
+        return {k: axes_tree(v, flat_axes, f"{prefix}{k}/")
+                for k, v in params.items()}
+    if isinstance(params, (list, tuple)):
+        return [axes_tree(v, flat_axes, f"{prefix}{i}/")
+                for i, v in enumerate(params)]
+    names = flat_axes.get(prefix[:-1])
+    return tuple(names) if names else None
+
+
+def unit_axes(unit):
+    """Logical-axes pytree matching ``unit.params``."""
+    return axes_tree(unit.params, unit.axes)
+
+
+def graph_axes(graph: UnitGraph) -> dict:
+    """Logical-axes pytree matching :func:`graph_params`."""
+    return {"units": [unit_axes(u) for u in graph.units],
+            "globals": axes_tree(graph.params, graph.axes)}
+
+
+def _flat_names(tree, prefix: str = "") -> dict:
+    """Flatten a nested {key: names-tuple} tree to the flat-dict form."""
+    out: dict = {}
+    for k, v in tree.items():
+        if isinstance(v, dict):
+            out.update(_flat_names(v, f"{prefix}{k}/"))
+        elif v:
+            out[f"{prefix}{k}"] = list(v)
+    return out
+
+
+# channels of a merged conv play the role the ffn dim plays in a
+# transformer: the model-parallel axis of the unit graph
+_CONV_W = [None, None, "conv_in", "conv_out"]
+_CONV_W_DW = [None, None, None, "conv_out"]        # (K,K,1,C) depthwise
+
+
+def _conv_axes(u) -> dict:
+    ax = {"w": list(_CONV_W_DW if u.depthwise else _CONV_W),
+          "b": ["conv_out"]}
+    if "gn" in u.params:
+        ax["gn/gamma"] = ["conv_out"]
+        ax["gn/beta"] = ["conv_out"]
+    if "proj" in u.params:
+        ax["proj/w"] = list(_CONV_W)
+        ax["proj/b"] = ["conv_out"]
+    return ax
+
+
+def _sublayer_axes(u, cfg) -> dict:
+    from repro.models import layers as L
+    from repro.models import moe as MOE
+    from repro.models import rglru as RG
+    from repro.models import xlstm as XL
+
+    kind = u.sub_kind
+    if kind in ("attn", "attn_local"):
+        block = L.attention_axes(cfg)
+    elif kind == "ffn":
+        block = L.ffn_axes(cfg.ffn_kind)
+    elif kind == "moe":
+        block = MOE.moe_axes()
+    elif kind == "rglru":
+        block = RG.rglru_axes()
+    elif kind == "mlstm":
+        block = XL.mlstm_axes()
+    elif kind == "slstm":
+        block = XL.slstm_axes()
+    else:
+        block = {}
+    ax = {"norm": ["embed"]}
+    ax.update(_flat_names({"p": block}))
+    return ax
+
+
+def default_unit_axes(unit, cfg=None) -> dict:
+    """The canonical logical-axes record for one unit.
+
+    ``cfg`` (the transformer :class:`ArchConfig`) is required only for
+    sublayer units — their block axes come from the model's own axes
+    functions, so the artifact contract never drifts from the training
+    annotations.
+    """
+    if unit.kind == "conv":
+        return _conv_axes(unit)
+    if unit.kind == "attn":
+        return {k: ["conv_in", "conv_out"] for k in ("wq", "wk", "wv", "wo")
+                if k in unit.params}
+    if unit.kind == "lowrank":
+        return {"u": ["embed", "rank"], "v": ["rank", "embed"]}
+    if unit.kind == "sublayer":
+        return _sublayer_axes(unit, cfg)
+    return {}
+
+
+def graph_global_axes(graph: UnitGraph) -> dict:
+    """Canonical logical-axes record for the graph-level params."""
+    out: dict = {}
+    if graph.family == "transformer":
+        if "embed" in graph.params:
+            out["embed"] = ["vocab", "embed"]
+        out["final_norm"] = ["embed"]
+        if "unembed" in graph.params:
+            out["unembed"] = ["embed", "vocab"]
+    elif "head" in graph.params:
+        out["head/w"] = ["conv_in", "vocab"]
+        out["head/b"] = ["vocab"]
+    return out
+
+
+def annotate_axes(graph: UnitGraph) -> UnitGraph:
+    """Fill in the canonical axes records on a freshly-lowered graph.
+
+    Units that already carry annotations (e.g. loaded from an artifact)
+    are left untouched — the artifact's recorded contract wins.  Mutates
+    the unit records in place and returns ``graph`` for chaining.
+    """
+    cfg = graph.meta.get("config")
+    for u in graph.units:
+        if not u.axes:
+            u.axes = default_unit_axes(u, cfg)
+    if not graph.axes:
+        graph.axes = graph_global_axes(graph)
+    return graph

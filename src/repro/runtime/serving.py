@@ -1,10 +1,39 @@
-"""Serve-loop driver: teacher-forced prefill + greedy KV-cache decode.
+"""Serving: jitted chunked prefill, ``lax.scan`` decode, slot batching.
 
-ONE timing loop for every consumer of a one-token serve step — the
-original stack (:func:`repro.train.step.make_serve_step`) and the
-artifact-backed compressed executor (:func:`repro.runtime.executor.
-make_serve_step`) — so ``examples/serve_lm.py`` and
-``benchmarks/bench_serve.py`` measure exactly the same protocol.
+ONE protocol for every consumer of a one-token serve step — the original
+stack (:func:`repro.train.step.make_serve_step`) and the artifact-backed
+compressed executor (:func:`repro.runtime.executor.make_serve_step` /
+:meth:`GraphExecutor.serve_step`) — so ``examples/serve_lm.py`` and
+``benchmarks/bench_serve.py`` measure exactly the same thing for both
+stacks.
+
+Three layers, each built on the one below:
+
+* :func:`serve_loop` — single-batch prefill + greedy decode.  Prefill is
+  ONE jitted chunked call (a ``lax.scan`` over the prompt — not a Python
+  dispatch per token) and decode is one jitted ``lax.scan`` that feeds
+  each greedy argmax back in; the host touches the device twice, not
+  ``P + N`` times.  :func:`serve_loop_pertoken` keeps the PR-4-era
+  unjitted per-token loop as the dispatch-bound reference the serve
+  bench compares against.
+* :func:`generate_fused` — ONE scan over a slot batch with *per-slot*
+  prompt lengths: while slot ``b`` still has prompt left the scan
+  teacher-forces ``prompt[b, t]``, afterwards it feeds the slot's own
+  previous greedy token — so a padded batch of ragged prompts runs
+  prefill and decode in the same compiled program with no pad token
+  ever entering a KV cache (exactness is tested against single-prompt
+  serving).
+* :func:`serve_requests` — the fixed-size slot scheduler: admit up to
+  ``slots`` prompts per round into a padded batch, run the fused scan,
+  retire the round, admit the next.  Under a mesh the slot axis is the
+  'data' axis — many concurrent prompts decode data-parallel.
+
+Every entry point takes ``rules=`` (a :class:`ShardingRules`) and traces
+under it, so the same code serves one CPU device and a sharded mesh.
+
+The greedy-argmax / prompt-encoding glue the example and the bench used
+to duplicate lives here too: :func:`greedy_token`, :func:`random_prompts`,
+:func:`decode_tok_s`.
 """
 from __future__ import annotations
 
@@ -12,30 +41,247 @@ import time
 
 import jax
 import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding.rules import use_rules
 
 
-def serve_loop(step, params, cache, prompt, tokens: int):
+# ---------------------------------------------------------------------------
+# Shared glue (hoisted from examples/serve_lm.py + benchmarks/bench_serve.py)
+# ---------------------------------------------------------------------------
+
+def greedy_token(logits):
+    """Greedy sampling: ``(B, S, V)`` logits → ``(B,)`` next-token ids."""
+    return jnp.argmax(logits[:, -1], axis=-1)
+
+
+def random_prompts(seed: int, batch: int, prompt_len: int, vocab_size: int):
+    """The example/bench prompt encoding: ``(B, P)`` random token ids."""
+    return jax.random.randint(jax.random.PRNGKey(seed), (batch, prompt_len),
+                              0, vocab_size)
+
+
+def ragged_prompts(seed: int, n: int, min_len: int, max_len: int,
+                   vocab_size: int):
+    """``n`` random prompts of random lengths in ``[min_len, max_len]`` —
+    the scheduler-workload encoding (list of 1-D int32 id arrays; feed
+    through :func:`pad_prompts`)."""
+    import numpy as np
+
+    if not 1 <= min_len <= max_len:
+        raise ValueError(f"need 1 <= min_len <= max_len, got "
+                         f"[{min_len}, {max_len}]")
+    rng = np.random.RandomState(seed)
+    return [jnp.asarray(rng.randint(0, vocab_size,
+                                    size=rng.randint(min_len, max_len + 1)),
+                        jnp.int32)
+            for _ in range(n)]
+
+
+def decode_tok_s(tokens: int, batch: int, seconds: float) -> float:
+    """Decode throughput; guards the div by tiny smoke timings."""
+    return tokens * batch / max(seconds, 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Jitted single-batch serve loop (chunked prefill + scan decode)
+# ---------------------------------------------------------------------------
+
+def _prefill_chunk(step, params, cache, prompt):
+    """One chunked prefill call: scan the step over the prompt axis.
+
+    Returns the last-position logits ``(B, V)`` and the filled cache.
+    """
+    def body(cache, tok):
+        logits, cache = step(params, cache, {"tokens": tok[:, None]})
+        return cache, logits[:, -1]
+    cache, logits = lax.scan(body, cache, prompt.T)
+    return logits[-1], cache
+
+
+def _decode_scan(step, params, cache, tok0, n: int):
+    """Greedy decode scan: ``n`` tokens from ``tok0`` ``(B,)`` on."""
+    def body(carry, _):
+        tok, cache = carry
+        logits, cache = step(params, cache, {"tokens": tok[:, None]})
+        nxt = greedy_token(logits)
+        return (nxt, cache), nxt
+    (_, cache), toks = lax.scan(body, (tok0, cache), None, length=n)
+    return toks.T, cache                                   # (B, n)
+
+
+def serve_loop(step, params, cache, prompt, tokens: int, *, rules=None,
+               warm: bool = True):
     """Drive ``step(params, cache, batch) → (logits, cache)``.
 
-    Feeds ``prompt`` token by token (prefill), then greedily decodes
-    ``tokens`` ids.  Returns ``(prefill_s, decode_s, logits, seqs)`` —
-    wall-clock seconds for each phase, the final logits, and the
-    ``(B, tokens)`` generated ids.
+    Prefill is ONE jitted chunked call over the whole prompt; decode is
+    ONE jitted ``lax.scan`` issuing ``tokens - 1`` greedy steps.  With
+    ``warm`` (the benchmarking contract) both programs run once
+    unmeasured first, so ``(prefill_s, decode_s)`` report steady-state
+    serving, not compilation; pass ``warm=False`` to serve without the
+    extra pass.  Returns
+    ``(prefill_s, decode_s, last_logits (B, V), seqs (B, tokens))``.
     """
-    logits = None
-    t0 = time.perf_counter()
-    for t in range(prompt.shape[1]):
-        logits, cache = step(params, cache, {"tokens": prompt[:, t:t + 1]})
-    jax.block_until_ready(logits)
-    prefill_s = time.perf_counter() - t0
+    prefill = jax.jit(lambda p, c, t: _prefill_chunk(step, p, c, t))
+    decode = jax.jit(lambda p, c, t0: _decode_scan(step, p, c, t0,
+                                                   tokens - 1))
+    with use_rules(rules):
+        if warm:
+            jax.block_until_ready(prefill(params, cache, prompt))
+        t0 = time.perf_counter()
+        logits, cache = prefill(params, cache, prompt)
+        jax.block_until_ready(logits)
+        prefill_s = time.perf_counter() - t0
 
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-    out = [tok]
-    t0 = time.perf_counter()
-    for _ in range(tokens - 1):
-        logits, cache = step(params, cache, {"tokens": tok})
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        out.append(tok)
-    jax.block_until_ready(tok)
-    decode_s = time.perf_counter() - t0
-    return prefill_s, decode_s, logits, jnp.concatenate(out, axis=1)
+        tok = greedy_token(logits[:, None])
+        if warm:
+            jax.block_until_ready(decode(params, cache, tok))
+        t0 = time.perf_counter()
+        out, _ = decode(params, cache, tok)
+        jax.block_until_ready(out)
+        decode_s = time.perf_counter() - t0
+    seqs = jnp.concatenate([tok[:, None], out], axis=1)
+    return prefill_s, decode_s, logits, seqs
+
+
+def serve_loop_pertoken(step, params, cache, prompt, tokens: int, *,
+                        rules=None):
+    """The PR-4 reference loop: a host round-trip per token, per prompt
+    position (pass a ``jax.jit``-ed step to make each one exactly one
+    XLA dispatch).  Kept so the serve bench can report how much the
+    chunked/scan protocol buys on the same step."""
+    logits = None
+    with use_rules(rules):
+        t0 = time.perf_counter()
+        for t in range(prompt.shape[1]):
+            logits, cache = step(params, cache,
+                                 {"tokens": prompt[:, t:t + 1]})
+        jax.block_until_ready(logits)
+        prefill_s = time.perf_counter() - t0
+        last = logits[:, -1]
+
+        tok = greedy_token(logits)[:, None]
+        out = [tok]
+        t0 = time.perf_counter()
+        for _ in range(tokens - 1):
+            logits, cache = step(params, cache, {"tokens": tok})
+            tok = greedy_token(logits)[:, None]
+            out.append(tok)
+        jax.block_until_ready(tok)
+        decode_s = time.perf_counter() - t0
+    return prefill_s, decode_s, last, jnp.concatenate(out, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Fused ragged-prompt generation (one scan = prefill + decode)
+# ---------------------------------------------------------------------------
+
+def generate_fused(step, params, cache, prompts, lengths, tokens: int):
+    """One scan over a padded slot batch with per-slot prompt lengths.
+
+    ``prompts``: ``(B, P)`` right-padded ids; ``lengths``: ``(B,)`` with
+    ``1 <= lengths[b] <= P``.  At scan step ``t`` slot ``b`` consumes
+    ``prompts[b, t]`` while ``t < lengths[b]`` (teacher-forced prefill)
+    and its own previous greedy token afterwards (decode) — pad ids are
+    never fed, so every slot's cache holds exactly its own sequence and
+    the result matches serving that prompt alone.  Returns
+    ``(gen (B, tokens), cache)``; the cache must cover ``P + tokens``
+    positions.
+    """
+    prompts = prompts.astype(jnp.int32)    # match the argmax carry dtype
+    B, P = prompts.shape
+    steps = P + tokens - 1
+    toks_in = jnp.pad(prompts, ((0, 0), (0, steps - P)))   # (B, steps)
+
+    def body(carry, xs):
+        prev, cache = carry
+        tok_t, t = xs
+        inp = jnp.where(t < lengths, tok_t, prev)
+        logits, cache = step(params, cache, {"tokens": inp[:, None]})
+        nxt = greedy_token(logits)
+        return (nxt, cache), nxt
+
+    init = (jnp.zeros((B,), prompts.dtype), cache)
+    (_, cache), samples = lax.scan(
+        body, init, (toks_in.T, jnp.arange(steps)))
+    # slot b's generation starts at the step that consumed its last
+    # prompt token: samples[lengths[b] - 1 + i, b]
+    idx = (lengths - 1)[:, None] + jnp.arange(tokens)[None, :]
+    gen = jnp.take_along_axis(samples.T, idx, axis=1)
+    return gen, cache
+
+
+# ---------------------------------------------------------------------------
+# Fixed-slot batched request scheduler
+# ---------------------------------------------------------------------------
+
+def pad_prompts(prompts, pad_to: int | None = None):
+    """Encode a list of 1-D id arrays as ``(R, P)`` padded ids + lengths.
+
+    ``pad_to`` pins ``P`` (e.g. to keep one compiled scheduler program
+    across calls); it must cover the longest prompt.
+    """
+    lengths = jnp.asarray([len(p) for p in prompts], jnp.int32)
+    longest = int(lengths.max())
+    P = longest if pad_to is None else pad_to
+    if P < longest:
+        raise ValueError(f"pad_to={pad_to} shorter than the longest "
+                         f"prompt ({longest} tokens)")
+    mat = jnp.stack([
+        jnp.pad(jnp.asarray(p, jnp.int32), (0, P - len(p)))
+        for p in prompts])
+    return mat, lengths
+
+
+def serve_requests(step, params, make_cache, prompts, lengths=None, *,
+                   tokens: int, slots: int | None = None, rules=None,
+                   warm: bool = True):
+    """Serve many prompts through fixed-size slot batching.
+
+    ``prompts``: ``(R, P)`` padded ids (or a list of 1-D id arrays, in
+    which case ``lengths`` is derived).  Up to ``slots`` prompts are
+    admitted per round into a padded batch; one jitted
+    :func:`generate_fused` program serves every round (short final
+    rounds re-admit slot 0's prompt as filler and drop the duplicate
+    results), then the round retires and the next is admitted.
+    ``make_cache(batch_size, seq_len)`` builds a fresh per-round cache.
+
+    Under mesh ``rules`` the slot axis is the 'data' mesh axis — rounds
+    decode data-parallel.  Returns ``(gen (R, tokens), seconds)`` where
+    ``seconds`` is steady-state wall clock with ``warm`` (one unmeasured
+    pass over round 0's shapes first — the benchmarking contract; pass
+    ``warm=False`` to serve without it).
+    """
+    if lengths is None:
+        if getattr(prompts, "ndim", None) == 2:
+            # a padded matrix has no recoverable lengths — deriving them
+            # here would silently teacher-force pad tokens into caches
+            raise ValueError("pass lengths= with a padded (R, P) matrix "
+                             "(or pass the list of 1-D prompts)")
+        prompts, lengths = pad_prompts(prompts)
+    R, P = prompts.shape
+    slots = min(slots or R, R)
+
+    fused = jax.jit(
+        lambda p, c, pr, ln: generate_fused(step, p, c, pr, ln, tokens))
+
+    def round_batch(start):
+        # short final round: re-admit request 0 as filler, results dropped
+        idx = [start + i if start + i < R else 0 for i in range(slots)]
+        return prompts[jnp.asarray(idx)], lengths[jnp.asarray(idx)]
+
+    outs = []
+    with use_rules(rules):
+        if warm:
+            pr0, ln0 = round_batch(0)
+            jax.block_until_ready(
+                fused(params, make_cache(slots, P + tokens), pr0, ln0))
+        t0 = time.perf_counter()
+        for start in range(0, R, slots):
+            pr, ln = round_batch(start)
+            cache = make_cache(slots, P + tokens)
+            gen, _ = fused(params, cache, pr, ln)
+            outs.append(gen[: min(slots, R - start)])
+        jax.block_until_ready(outs)
+        seconds = time.perf_counter() - t0
+    return jnp.concatenate(outs, axis=0), seconds

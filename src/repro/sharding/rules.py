@@ -16,6 +16,19 @@ Default production mapping (16×16 pod, see launch/mesh.py):
 * ``kv``      → 'model' when divisible, else replicated (GQA)
 * ``kv_seq``  → 'model' for decode caches (flash-decoding layout, §Perf)
 * ``seq``     → 'data' in sequence-parallel prefill configs
+
+Unit-graph artifacts (:mod:`repro.runtime`) carry these names as DATA:
+every unit record ships an ``axes`` map {param keypath → logical names}
+written at lowering time, so an artifact loader resolves placement with
+nothing but a :class:`ShardingRules` — no family-specific code.  The
+vocabulary extends to merged-CNN graphs (``conv_out`` / ``channels`` are
+the model-parallel axes of a merged conv, ``conv_in`` stays replicated,
+``act_channels`` shards NHWC activations) and to serving
+(:func:`make_unit_rules`: weights replicated over 'data' for
+data-parallel batches, tensor-parallel over 'model', decode KV caches on
+the 'kv_seq' flash-decoding layout).  Names a rule set does not know
+resolve to replicated, so v1 artifacts (no annotations) and single-device
+meshes fall out of the same path.
 """
 from __future__ import annotations
 
@@ -131,8 +144,26 @@ def make_rules(mesh: Mesh | None, *, fsdp: bool = True,
         "layers": None,
         # decode KV cache: sequence over the model axis (flash-decoding)
         "kv_seq": ("model" if decode_kv_model else None),
+        # merged-CNN unit graphs: channels are the model axis (LayerMerge)
+        "conv_in": None,
+        "conv_out": "model",
+        "channels": "model",
+        "act_channels": "model",
     }
     return ShardingRules(mesh=mesh, rules=rules)
+
+
+def make_unit_rules(mesh: Mesh | None, *,
+                    decode_kv_model: bool = True) -> ShardingRules:
+    """The serving rule set for unit-graph artifacts (CNN + transformer).
+
+    Identical to :func:`make_rules` except weights stay whole on the
+    'data' axes (``fsdp=False``): serving shards the *batch* over 'data'
+    and the model dims ('ffn'/'heads'/'vocab'/'conv_out'/'rank') over
+    'model', so a decode step runs without the FSDP weight all-gathers
+    that only pay off under training's optimizer-state memory pressure.
+    """
+    return make_rules(mesh, fsdp=False, decode_kv_model=decode_kv_model)
 
 
 def param_shardings(rules: ShardingRules, axes_tree):
