@@ -4,7 +4,8 @@
 PY := python
 ENV := JAX_PLATFORMS=cpu PYTHONPATH=src
 
-.PHONY: verify test bench bench-dp bench-tables bench-serve bench-smoke
+.PHONY: verify test bench bench-dp bench-tables bench-serve bench-smoke \
+	fault-smoke
 
 verify:
 	bash scripts/verify.sh
@@ -33,3 +34,9 @@ bench-smoke:
 	$(ENV) $(PY) -m benchmarks.bench_serve --smoke
 	$(ENV) XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 		$(PY) -m benchmarks.bench_serve --smoke --mesh --model-par 2
+
+# Crash-safety gate (also part of `make verify`): SIGKILL a journaled
+# table build in a child process, resume it, and require the resumed
+# tables to be bit-identical to an uninterrupted build.
+fault-smoke:
+	$(ENV) $(PY) -m repro.testing.faults --smoke

@@ -4,8 +4,8 @@ Measures batched (shape-bucketed, compile-overlapped, vmapped-importance)
 table construction against the sequential entry-at-a-time reference on a
 deep uniform conv chain — the shape-dedup regime the engine targets — and
 writes ``results/BENCH_tables.json`` with build time, #compiles, #timings,
-cache hit rate, and batched-vs-sequential parity deltas so the perf
-trajectory is trackable across PRs.
+cache hit rate, batched-vs-sequential parity deltas, and the journaled
+kill-and-resume overhead so the perf trajectory is trackable across PRs.
 
   PYTHONPATH=src python -m benchmarks.bench_tables [--smoke] [--out PATH]
 
@@ -180,6 +180,39 @@ def bench_cache(host, params) -> dict:
                 "warm_speedup": t_cold / max(t_warm, 1e-12)}
 
 
+def bench_resume(host, params, *, kill_at_bucket: int = 4) -> dict:
+    """Journaled kill-and-resume: a build killed at the Nth bucket must
+    resume BIT-identically, and the resume must not cost a full rebuild
+    — journaled buckets replay from the WAL instead of re-probing."""
+    from repro.testing import faults
+
+    oracle = AnalyticTPUOracle()
+    with tempfile.TemporaryDirectory() as d:
+        t_cold, ref = build(host, params, oracle, "batched")
+        with faults.inject(faults.Fault("tables.bucket", "kill",
+                                        nth=kill_at_bucket)):
+            t0 = time.perf_counter()
+            try:
+                build(host, params, oracle, "batched", cache_dir=d)
+                raise AssertionError("injected kill never fired")
+            except faults.FaultKill:
+                t_interrupted = time.perf_counter() - t0
+        t_resume, resumed = build(host, params, oracle, "batched",
+                                  cache_dir=d)
+        assert resumed.entries == ref.entries, "resume diverged from cold"
+        assert resumed.num_pruned == ref.num_pruned
+        assert resumed.stats.num_journal_hits >= kill_at_bucket - 1
+        return {
+            "killed_at_bucket": kill_at_bucket,
+            "interrupted_s": t_interrupted,
+            "cold_s": t_cold,
+            "resume_s": t_resume,
+            "resume_overhead": t_resume / max(t_cold, 1e-12),
+            "journal_hits_on_resume": resumed.stats.num_journal_hits,
+            "bit_identical": True,
+        }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -207,6 +240,7 @@ def main(argv=None):
         "importance": bench_importance(imp_host, imp_params,
                                        run_sequential=not args.smoke),
         "cache": bench_cache(host, params),
+        "resume": bench_resume(host, params),
     }
     if not args.smoke:
         speedup = report["wallclock"]["speedup"]

@@ -37,4 +37,7 @@ echo "== serve bench smoke, sharded (forced host devices, data x model) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python -m benchmarks.bench_serve --smoke --mesh --model-par 2 > /dev/null
 
+echo "== fault-injection smoke (SIGKILL mid-build, resume bit-identical) =="
+python -m repro.testing.faults --smoke > /dev/null
+
 echo "verify: OK"

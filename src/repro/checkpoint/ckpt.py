@@ -84,6 +84,54 @@ def atomic_write_bytes(path: str, data: bytes) -> str:
     return path
 
 
+def append_journal_line(path: str, text: str) -> str:
+    """Crash-safe append of ONE journal record (write-ahead-log contract).
+
+    ``text`` (newlines squashed) is written as a single ``\\n``-terminated
+    line, flushed and fsync'd before return — once this function returns,
+    the record survives a SIGKILL.  A crash *during* the write leaves a
+    torn tail with no terminating newline, which
+    :func:`read_journal_lines` truncates away on the next open, so a
+    reader never parses half a record and subsequent appends never
+    concatenate onto torn bytes.  Shared with the resumable table builds
+    (:class:`repro.core.table_cache.BuildJournal`).
+    """
+    from repro.testing import faults
+
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    data = faults.mangle("journal.append",
+                         (text.replace("\n", " ") + "\n").encode())
+    with open(path, "ab") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    faults.hit("journal.append.done")
+    return path
+
+
+def read_journal_lines(path: str) -> list[str]:
+    """All COMPLETE lines of a journal; self-heals a torn tail.
+
+    A record is complete iff its terminating newline reached the disk.
+    Trailing bytes with no newline (a torn final append) are truncated
+    off the file before returning, so the journal is again well-formed
+    for subsequent appends.  A missing file is an empty journal.
+    """
+    try:
+        with open(path, "rb") as f:
+            raw = f.read()
+    except FileNotFoundError:
+        return []
+    if not raw:
+        return []
+    cut = raw.rfind(b"\n") + 1               # 0 when no newline at all
+    if cut != len(raw):                      # torn tail: truncate it away
+        with open(path, "r+b") as f:
+            f.truncate(cut)
+        raw = raw[:cut]
+    return raw.decode(errors="replace").splitlines()
+
+
 def save(ckpt_dir: str, step: int, tree, *, metadata: dict | None = None,
          keep: int = 3):
     """Synchronous atomic save."""
@@ -103,7 +151,17 @@ def save(ckpt_dir: str, step: int, tree, *, metadata: dict | None = None,
 
 
 class AsyncCheckpointer:
-    """Fire-and-forget saves on a background thread (one in flight)."""
+    """Fire-and-forget saves on a background thread (one in flight).
+
+    Usable as a context manager: ``__exit__`` joins the in-flight save —
+    on clean exit AND on exception — so an interrupted run never leaves
+    its newest checkpoint half-written::
+
+        with AsyncCheckpointer(ckpt_dir) as ckpt:
+            for step in ...:
+                ckpt.save(step, state)
+        # pending save has landed (or its error has been raised) here
+    """
 
     def __init__(self, ckpt_dir: str, keep: int = 3):
         self.ckpt_dir = ckpt_dir
@@ -131,6 +189,19 @@ class AsyncCheckpointer:
             self._thread = None
         if self.error:
             raise self.error
+
+    def __enter__(self) -> "AsyncCheckpointer":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is None:
+            self.wait()                      # surface any save error
+        else:
+            try:                             # still join the writer, but
+                self.wait()                  # never mask the body's error
+            except Exception:
+                pass
+        return False
 
 
 def latest_step(ckpt_dir: str) -> int | None:

@@ -91,17 +91,31 @@ def main(argv=None):
                     help="transformer: full config, not .reduced()")
     ap.add_argument("--cache-dir", default=None,
                     help="lookup-table cache directory (optional)")
+    ap.add_argument("--resume", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="resume an interrupted table build from its "
+                         "write-ahead journal in --cache-dir (default on; "
+                         "--no-resume discards a stale journal)")
+    ap.add_argument("--probe-timeout", type=float, default=None,
+                    metavar="SECONDS",
+                    help="per-probe wall-clock budget; over-budget probes "
+                         "retry, then quarantine to the analytic estimate")
+    ap.add_argument("--probe-retries", type=int, default=2,
+                    help="attempts per failing probe before quarantine")
     args = ap.parse_args(argv)
 
-    from repro.core import WallClockOracle, compress
+    from repro.core import ProbeConfig, WallClockOracle, compress
 
     host, source = build_host(args.arch, seed=args.seed, batch=args.batch,
                               seq=args.seq, full=args.full,
                               max_span=args.max_span)
     oracle = WallClockOracle() if args.oracle == "wallclock" else None
+    probe_config = ProbeConfig(timeout_s=args.probe_timeout,
+                               retries=args.probe_retries)
     res = compress(host, budget_ratio=args.budget_ratio, P=args.P,
                    method=args.method, latency_oracle=oracle,
-                   importance="magnitude", cache_dir=args.cache_dir)
+                   importance="magnitude", cache_dir=args.cache_dir,
+                   probe_config=probe_config, resume=args.resume)
     if res is None:
         raise SystemExit(
             f"[repro.compress] infeasible: no plan fits "
@@ -116,6 +130,8 @@ def main(argv=None):
         "kept_layers": len(plan.C),
         "segments": len(plan.segments),
         "predicted_speedup": round(res.speedup, 3),
+        "flagged_probes": (len(res.tables.provenance)
+                           if res.tables is not None else 0),
         "artifact": args.out,
         "fingerprint": fp[:16],
     }, indent=2))

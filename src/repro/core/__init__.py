@@ -10,7 +10,8 @@ from .importance import (ImportanceSpec, measure_importance,
                          magnitude_importance, adam_finetune_batched,
                          xent_loss, accuracy_perf, neg_loss_perf,
                          distill_loss)
-from .probe_engine import (EngineStats, ProbeCallable, layer_latencies,
+from .probe_engine import (EngineStats, ProbeCallable, ProbeConfig,
+                           ProbeTimeout, layer_latencies,
                            measure_latencies, measure_importances)
 from .tables import Tables, build_tables, one_segment_plan
 from .compress import CompressResult, compress, original_latency
@@ -27,8 +28,8 @@ __all__ = [
     "ImportanceSpec", "measure_importance", "magnitude_importance",
     "adam_finetune_batched",
     "xent_loss", "accuracy_perf", "neg_loss_perf", "distill_loss",
-    "EngineStats", "ProbeCallable", "layer_latencies",
-    "measure_latencies", "measure_importances",
+    "EngineStats", "ProbeCallable", "ProbeConfig", "ProbeTimeout",
+    "layer_latencies", "measure_latencies", "measure_importances",
     "Tables", "build_tables", "one_segment_plan",
     "CompressResult", "compress", "original_latency",
     "table_cache",

@@ -76,6 +76,14 @@ class CompressResult:
             "compressed_latency": self.compressed_latency,
             "predicted_speedup": self.speedup,
             "method": self.plan.method,
+            # Latency entries that were NOT clean first-shot measurements
+            # ("retimed"/"quarantined") — deployers can see exactly which
+            # numbers the plan rests on (empty list: all clean).
+            "probe_provenance": (
+                [{"i": i, "j": j, "k": k, "flag": flag}
+                 for (i, j, k), flag
+                 in sorted(self.tables.provenance.items())]
+                if self.tables is not None else []),
         }
         meta.update(extra_meta or {})
         return runtime.save(path, self.lower(), plan=self.plan, meta=meta)
@@ -101,16 +109,24 @@ def compress(
     params=None,
     engine: str = "batched",
     cache_dir: str | None = None,
+    probe_config: probe_engine.ProbeConfig | None = None,
+    resume: bool = True,
 ) -> CompressResult | None:
     """Run LayerMerge (or a baseline) at ``T0 = budget_ratio · T_orig``.
 
     The result is artifact-backed: it carries the host, params, and the
     resolved oracle, so ``result.save(path)`` publishes a portable
     merged-model artifact without re-deriving any of them.
+
+    ``probe_config`` / ``resume`` are the crash-safety knobs threaded to
+    :func:`repro.core.tables.build_tables`: probe retry/timeout/
+    quarantine policy, and journal-based resumption of an interrupted
+    table build (requires ``cache_dir``).
     """
     oracle = _resolve_oracle(latency_oracle)
     layer_lats = probe_engine.layer_latencies(host, oracle, params,
-                                              engine=engine)
+                                              engine=engine,
+                                              probe_config=probe_config)
     t_orig = sum(layer_lats)
     T0 = budget_ratio * t_orig
     L = len(host.descs())
@@ -121,7 +137,8 @@ def compress(
 
     tables = build_tables(host, method=method, latency_oracle=oracle,
                           importance=importance, base_perf=base_perf,
-                          params=params, engine=engine, cache_dir=cache_dir)
+                          params=params, engine=engine, cache_dir=cache_dir,
+                          probe_config=probe_config, resume=resume)
     t0 = time.perf_counter()
     res = solve_dp(L, tables.fn(), T0, P, method=method,
                    original_k=host.original_k)

@@ -102,11 +102,17 @@ class WallClockOracle(LatencyOracle):
     iters: int = 20
     groups: int = 5
 
-    def time_callable(self, fn: Callable[[], jax.Array], *,
-                      warmup: int | None = None) -> float:
-        """Measure ``fn``; ``warmup`` overrides the configured warmup count
-        (the probe engine passes 0 for callables it already warmed while
-        compilation of later buckets was still in flight)."""
+    def time_callable_stats(self, fn: Callable[[], jax.Array], *,
+                            warmup: int | None = None
+                            ) -> tuple[float, float]:
+        """``(median-of-group-means, relative spread)`` for ``fn``.
+
+        The relative spread — ``(max − min) / median`` over the group
+        means — is the probe engine's outlier signal: a jitter spike that
+        contaminated one group leaves the median usable but the spread
+        large, triggering a variance-based re-timing
+        (:class:`repro.core.probe_engine.ProbeConfig`).
+        """
         for _ in range(self.warmup if warmup is None else warmup):
             jax.block_until_ready(fn())
         g = max(1, min(self.groups, self.iters))
@@ -118,7 +124,16 @@ class WallClockOracle(LatencyOracle):
             for _ in range(n):
                 jax.block_until_ready(fn())
             means.append((time.perf_counter() - t0) / n)
-        return float(np.median(means))
+        med = float(np.median(means))
+        spread = float((max(means) - min(means)) / max(med, 1e-12))
+        return med, spread
+
+    def time_callable(self, fn: Callable[[], jax.Array], *,
+                      warmup: int | None = None) -> float:
+        """Measure ``fn``; ``warmup`` overrides the configured warmup count
+        (the probe engine passes 0 for callables it already warmed while
+        compilation of later buckets was still in flight)."""
+        return self.time_callable_stats(fn, warmup=warmup)[0]
 
     def segment_latency(self, cost: CostBreakdown) -> float:
         raise TypeError(

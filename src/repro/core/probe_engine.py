@@ -25,6 +25,26 @@ Adam fine-tune per importance entry.  This module replaces that inner loop:
   across local devices when more than one is present).  Hosts without a
   batchable formulation fall back to the sequential per-probe path.
 
+Crash safety (the table build is an hours-long, preemption-exposed job):
+
+* **Write-ahead journal** — pass ``journal=`` (a
+  :class:`repro.core.table_cache.BuildJournal`) and every completed
+  bucket/probe is durably recorded before the build moves on; a killed
+  build resumes from the journal bit-identically (the resume contract is
+  documented in :mod:`repro.core.table_cache`).
+* **Probe hardening** (:class:`ProbeConfig`) — each wall-clock probe gets
+  a post-hoc wall-clock timeout, bounded retry with exponential backoff,
+  and variance-based outlier re-timing (the oracle's group spread is the
+  signal); a bucket that keeps failing is **quarantined** to the
+  deterministic :class:`~repro.core.latency.AnalyticTPUOracle` estimate
+  with provenance ``"quarantined"`` recorded in the tables (and from
+  there the cache and the artifact spec) — one flaky probe can no longer
+  kill an otherwise-complete build.
+* **Fault points** — ``probe.prepare`` / ``probe.time`` /
+  ``tables.bucket`` / ``tables.importance`` hooks from
+  :mod:`repro.testing.faults` make every one of these paths
+  deterministically testable.
+
 ``engine="sequential"`` preserves the original entry-at-a-time walk as the
 certified reference; ``tests/test_probe_engine.py`` asserts the batched
 path is *bit-identical* to it under the analytic oracle and within
@@ -33,17 +53,59 @@ tolerance under :class:`~repro.core.latency.WallClockOracle`.
 from __future__ import annotations
 
 import dataclasses
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Sequence
 
 import jax
 
+from repro.testing import faults
+
 from .importance import (adam_finetune_batched, measure_importance,
                          perf_to_importance)
-from .latency import LatencyOracle, WallClockOracle
+from .latency import AnalyticTPUOracle, LatencyOracle, WallClockOracle
 from .plan import Segment
 
 ENGINES = ("batched", "sequential")
+
+# Provenance flags attached to every latency entry (see Tables.provenance;
+# only non-"measured" flags are recorded — "measured" is the default).
+PROBE_MEASURED = "measured"        # the configured oracle's own value
+PROBE_RETIMED = "retimed"          # outlier spread triggered a re-timing
+PROBE_QUARANTINED = "quarantined"  # persistent failure → analytic estimate
+
+
+class ProbeTimeout(RuntimeError):
+    """A probe exceeded its configured wall-clock budget."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeConfig:
+    """Hardening policy for wall-clock latency probes.
+
+    ``timeout_s`` is *post hoc*: a running XLA dispatch cannot be
+    interrupted, so the budget is checked against the measured duration
+    of the compile/warm/timing phases and an over-budget attempt counts
+    as a failure (a straggler).  Failures retry up to ``retries`` times
+    with exponential backoff (``backoff_s · 2^attempt``); a bucket still
+    failing afterwards is quarantined to the deterministic analytic
+    estimate (``fallback_oracle`` or a default
+    :class:`~repro.core.latency.AnalyticTPUOracle`) with provenance
+    ``"quarantined"`` — unless ``quarantine=False``, in which case the
+    last error propagates.  ``outlier_rel_spread`` bounds the oracle's
+    group-mean spread; a noisier measurement is re-timed once and tagged
+    ``"retimed"``.
+    """
+
+    timeout_s: float | None = None
+    retries: int = 2
+    backoff_s: float = 0.05
+    outlier_rel_spread: float | None = 1.0
+    quarantine: bool = True
+    fallback_oracle: LatencyOracle | None = None
+
+    def fallback(self) -> LatencyOracle:
+        return self.fallback_oracle or AnalyticTPUOracle()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +136,10 @@ class EngineStats:
     num_importance_batches: int = 0  # vmapped fine-tune launches
     num_importance_sequential: int = 0
     cache_hit: bool = False
+    num_journal_hits: int = 0        # buckets/probes resumed from the WAL
+    num_probe_retries: int = 0       # failed attempts retried with backoff
+    num_retimed: int = 0             # outlier-spread re-timings
+    num_quarantined: int = 0         # buckets fallen back to the analytic
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -110,6 +176,89 @@ def _prepare_probe(host, seg: Segment, params):
     return call
 
 
+def _prepare_guarded(host, seg: Segment, params):
+    """One prepare attempt: ``(warmed callable, seconds it took)``.
+
+    The fault point sits inside the timed window so an injected
+    straggler delay is indistinguishable from a real slow compile.
+    """
+    t0 = time.perf_counter()
+    faults.hit("probe.prepare")
+    call = _prepare_probe(host, seg, params)
+    return call, time.perf_counter() - t0
+
+
+def _backoff(cfg: ProbeConfig, attempt: int, stats: EngineStats) -> None:
+    stats.num_probe_retries += 1
+    time.sleep(cfg.backoff_s * (2 ** (attempt - 1)))
+
+
+def _timed_guarded(call, oracle: WallClockOracle, cfg: ProbeConfig,
+                   stats: EngineStats, *, warmup: int = 0):
+    """Guarded timing of a prepared callable: ``(value | None, flag)``.
+
+    ``None`` means the bucket timed out / kept failing and must be
+    quarantined by the caller (``cfg.quarantine=False`` raises instead).
+    """
+    last: Exception | None = None
+    for attempt in range(cfg.retries + 1):
+        if attempt:
+            _backoff(cfg, attempt, stats)
+        try:
+            t0 = time.perf_counter()
+            faults.hit("probe.time")       # inside the timed window: an
+            # injected delay reads as a real straggler to the timeout
+            val, spread = oracle.time_callable_stats(call, warmup=warmup)
+            if cfg.timeout_s is not None and \
+                    time.perf_counter() - t0 > cfg.timeout_s:
+                raise ProbeTimeout(
+                    f"timing exceeded the {cfg.timeout_s}s probe budget")
+            if cfg.outlier_rel_spread is not None \
+                    and spread > cfg.outlier_rel_spread:
+                stats.num_retimed += 1
+                val2, spread2 = oracle.time_callable_stats(call,
+                                                           warmup=warmup)
+                return (val2 if spread2 <= spread else val), PROBE_RETIMED
+            return val, PROBE_MEASURED
+        except Exception as e:           # FaultKill is BaseException: dies
+            last = e
+    if not cfg.quarantine:
+        raise last
+    stats.num_quarantined += 1
+    return None, PROBE_QUARANTINED
+
+
+def _sequential_wallclock(host, seg: Segment, params,
+                          oracle: WallClockOracle, cfg: ProbeConfig,
+                          stats: EngineStats):
+    """Guarded prepare + time of ONE entry (the sequential reference path).
+
+    ``_prepare_probe`` already issues one warm call, so timing warms
+    ``oracle.warmup - 1`` more — the same total number of pre-timing
+    calls as the pre-engine behavior.
+    """
+    last: Exception | None = None
+    for attempt in range(cfg.retries + 1):
+        if attempt:
+            _backoff(cfg, attempt, stats)
+        try:
+            call, prep_s = _prepare_guarded(host, seg, params)
+            if cfg.timeout_s is not None and prep_s > cfg.timeout_s:
+                raise ProbeTimeout(
+                    f"prepare exceeded the {cfg.timeout_s}s probe budget")
+            val, flag = _timed_guarded(call, oracle, cfg, stats,
+                                       warmup=max(0, oracle.warmup - 1))
+            stats.num_compiles += 1
+            stats.num_timings += 1
+            return val, flag
+        except Exception as e:
+            last = e
+    if not cfg.quarantine:
+        raise last
+    stats.num_quarantined += 1
+    return None, PROBE_QUARANTINED
+
+
 def measure_latencies(
     host,
     segs: Sequence[Segment],
@@ -119,6 +268,9 @@ def measure_latencies(
     engine: str = "batched",
     stats: EngineStats | None = None,
     progress: Callable[[str], None] | None = None,
+    journal=None,
+    probe_config: ProbeConfig | None = None,
+    provenance: list | None = None,
 ) -> list[float]:
     """``T`` value for every segment in ``segs`` (order preserved).
 
@@ -127,27 +279,63 @@ def measure_latencies(
     compiled once per bucket (the next bucket pre-compiling on a worker
     thread while the current one warms up) and timed once per bucket in a
     quiet window after the last compile.
-    ``sequential``: the certified reference — one evaluation per entry,
-    byte-for-byte the pre-engine behavior.
+    ``sequential``: the certified reference — one evaluation per entry.
+
+    ``journal``: write-ahead journal (``get``/``put``) — completed
+    buckets are durably recorded and replayed on resume.
+    ``probe_config``: retry/timeout/quarantine policy (wall-clock only).
+    ``provenance``: optional caller-owned list (``len(segs)``) filled
+    with the per-entry provenance flag.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; expected {ENGINES}")
     stats = stats if stats is not None else EngineStats(engine=engine)
+    cfg = probe_config or ProbeConfig()
     stats.num_latency_probes += len(segs)
     wallclock = isinstance(oracle, WallClockOracle)
+
+    def set_prov(n: int, flag: str):
+        if provenance is not None:
+            provenance[n] = flag
+
+    def quarantine_value(seg: Segment) -> float:
+        return cfg.fallback().segment_latency(host.segment_cost(seg))
+
+    def journal_get(key: str):
+        if journal is None:
+            return None
+        rec = journal.get(key)
+        if rec is not None:
+            stats.num_journal_hits += 1
+        return rec
+
+    def journal_put(key: str, val, flag: str):
+        if journal is not None:
+            journal.put(key, None if val is None else float(val), flag)
 
     if engine == "sequential":
         out = []
         for n, seg in enumerate(segs):
-            if wallclock:
-                out.append(oracle.time_callable(
-                    host.segment_callable(seg, params)))
-                stats.num_compiles += 1
-                stats.num_timings += 1
+            key = f"lat:{seg.i}:{seg.j}:{seg.k}"
+            rec = journal_get(key)
+            if rec is not None:
+                val, flag = rec
+            elif wallclock:
+                val, flag = _sequential_wallclock(host, seg, params, oracle,
+                                                  cfg, stats)
+                journal_put(key, val, flag)
+                faults.hit("tables.bucket")
                 if progress and (n % 10 == 9 or n == len(segs) - 1):
                     progress(f"latency probe {n + 1}/{len(segs)}")
             else:
-                out.append(oracle.segment_latency(host.segment_cost(seg)))
+                val, flag = oracle.segment_latency(
+                    host.segment_cost(seg)), PROBE_MEASURED
+                journal_put(key, val, flag)
+                faults.hit("tables.bucket")
+            if val is None:                       # journaled quarantine
+                val = quarantine_value(seg)
+            set_prov(n, flag)
+            out.append(val)
         stats.num_latency_buckets += len(segs)
         return out
 
@@ -162,36 +350,83 @@ def measure_latencies(
             order.append(sig)
     stats.num_latency_buckets += len(order)
 
-    per_bucket: dict = {}
+    per_bucket: dict = {}                  # sig -> (value | None, flag)
+    pending: list = []
+    for sig in order:
+        rec = journal_get(f"latb:{sig!r}")
+        if rec is not None:
+            per_bucket[sig] = rec
+        else:
+            pending.append(sig)
+
+    def finish_bucket(sig, val, flag):
+        per_bucket[sig] = (val, flag)
+        journal_put(f"latb:{sig!r}", val, flag)
+        faults.hit("tables.bucket")
+
     if not wallclock:
-        for sig in order:
-            per_bucket[sig] = oracle.segment_latency(
-                host.segment_cost(buckets[sig]))
-    else:
+        for sig in pending:
+            finish_bucket(sig, oracle.segment_latency(
+                host.segment_cost(buckets[sig])), PROBE_MEASURED)
+    elif pending:
         # Overlap compilation with warmup: a single worker thread lowers
         # and compiles bucket representatives while the main thread warms
         # the already-compiled ones.  The *timed* loops only start once
         # the last compile has retired — warmup calls tolerate the CPU
         # contention of a concurrent XLA compile, timed calls do not (a
         # compile running beside the timing loop inflates cheap buckets
-        # by integer factors).
-        warmed = []
+        # by integer factors).  A failed prepare retries inline on the
+        # main thread; persistent failure quarantines the bucket.
+        warmed = []                        # (sig, call | None)
         with ThreadPoolExecutor(max_workers=1) as ex:
-            futures = [(sig, ex.submit(_prepare_probe, host, buckets[sig],
-                                       params)) for sig in order]
+            futures = [(sig, ex.submit(_prepare_guarded, host, buckets[sig],
+                                       params)) for sig in pending]
             for bi, (sig, fut) in enumerate(futures):
-                call = fut.result()
-                for _ in range(oracle.warmup):
-                    jax.block_until_ready(call())
+                call, last = None, None
+                for attempt in range(cfg.retries + 1):
+                    try:
+                        if attempt == 0:
+                            call, prep_s = fut.result()
+                        else:
+                            _backoff(cfg, attempt, stats)
+                            call, prep_s = _prepare_guarded(
+                                host, buckets[sig], params)
+                        if cfg.timeout_s is not None \
+                                and prep_s > cfg.timeout_s:
+                            raise ProbeTimeout(
+                                f"prepare exceeded the {cfg.timeout_s}s "
+                                "probe budget")
+                        break
+                    except Exception as e:
+                        call, last = None, e
+                if call is None:
+                    if not cfg.quarantine:
+                        raise last
+                    stats.num_quarantined += 1
+                else:
+                    stats.num_compiles += 1
+                    for _ in range(oracle.warmup):
+                        jax.block_until_ready(call())
                 warmed.append((sig, call))
                 if progress:
-                    progress(f"compiled+warmed bucket {bi + 1}/{len(order)}"
-                             f" ({len(segs)} probes)")
+                    progress(f"compiled+warmed bucket {bi + 1}/"
+                             f"{len(pending)} ({len(segs)} probes)")
         for sig, call in warmed:           # quiet window: compiles done
-            per_bucket[sig] = oracle.time_callable(call, warmup=0)
-        stats.num_compiles += len(order)
-        stats.num_timings += len(order)
-    return [per_bucket[sig] for sig in sigs]
+            if call is None:
+                finish_bucket(sig, None, PROBE_QUARANTINED)
+                continue
+            val, flag = _timed_guarded(call, oracle, cfg, stats)
+            stats.num_timings += 1
+            finish_bucket(sig, val, flag)
+
+    out = []
+    for n, (seg, sig) in enumerate(zip(segs, sigs)):
+        val, flag = per_bucket[sig]
+        if val is None:                    # quarantined: analytic estimate
+            val = quarantine_value(seg)
+        set_prov(n, flag)
+        out.append(val)
+    return out
 
 
 def layer_latencies(
@@ -201,6 +436,7 @@ def layer_latencies(
     *,
     engine: str = "batched",
     stats: EngineStats | None = None,
+    probe_config: ProbeConfig | None = None,
 ) -> list[float]:
     """Per-layer latency of the untouched network via one engine pass.
 
@@ -211,7 +447,7 @@ def layer_latencies(
                     original=True)
             for l in range(1, len(host.descs()) + 1)]
     return measure_latencies(host, segs, oracle, params, engine=engine,
-                             stats=stats)
+                             stats=stats, probe_config=probe_config)
 
 
 # Single-device vmapped fine-tunes win only while probes are dispatch-
@@ -246,6 +482,7 @@ def measure_importances(
     stats: EngineStats | None = None,
     force_batching: bool | None = None,
     progress: Callable[[str], None] | None = None,
+    journal=None,
 ) -> list[float]:
     """Eq. 4 importance for every (non-original) segment in ``segs``.
 
@@ -258,6 +495,12 @@ def measure_importances(
     declines — and, unless ``force_batching`` overrides the
     :func:`_batching_pays` heuristic, compute-bound single-device
     workloads — fall back to the sequential per-probe path.
+
+    With a ``journal``, each completed probe is durably recorded; on
+    resume, fully-journaled span groups are replayed without re-tuning,
+    while a *partially* journaled group reruns whole — the vmap width
+    never changes across a resume, so replayed and recomputed lanes are
+    both bit-identical to the uninterrupted build.
     """
     from .tables import one_segment_plan   # local import: tables imports us
 
@@ -267,13 +510,31 @@ def measure_importances(
     stats.num_importance_probes += len(segs)
     out: list[float | None] = [None] * len(segs)
 
+    jkeys = [f"imp:{s.i}:{s.j}:{s.k}" for s in segs]
+    done: set[int] = set()
+    if journal is not None:
+        for n, key in enumerate(jkeys):
+            rec = journal.get(key)
+            if rec is not None:
+                out[n] = rec[0]
+                done.add(n)
+                stats.num_journal_hits += 1
+
+    def journal_put(n: int):
+        if journal is not None:
+            journal.put(jkeys[n], float(out[n]))
+
     def sequential(indices):
         for n in indices:
+            if n in done:
+                continue
             seg = segs[n]
             apply_fn, p = host.replaced_apply(
                 one_segment_plan(host, seg), params)
             out[n] = measure_importance(apply_fn, p, spec, base_perf)
             stats.num_importance_sequential += 1
+            journal_put(n)
+            faults.hit("tables.importance")
             if progress:
                 progress(f"importance probe ({seg.i},{seg.j}] k={seg.k}")
 
@@ -288,13 +549,19 @@ def measure_importances(
     for n, seg in enumerate(segs):
         groups.setdefault((seg.i, seg.j), []).append(n)
     for span, indices in groups.items():
+        if all(n in done for n in indices):
+            continue                      # whole group replayed from journal
         if len(indices) < 2:
             # A vmap of one lane only adds overhead over the scalar probe
             # (and the Dirac stand-ins cost real FLOPs) — not worth it.
             sequential(indices)
             continue
+        # NOTE: a partially-journaled group reruns EVERY lane (identical
+        # stacked width ⇒ identical XLA program ⇒ bit-identical values);
+        # the recomputed values overwrite equal journal records.
         batch = batch_fn([segs[n] for n in indices], params)
         if batch is None:
+            done.difference_update(indices)
             sequential(indices)
             continue
         apply_fn, stacked, grad_mask = batch
@@ -305,6 +572,8 @@ def measure_importances(
             p_n = jax.tree.map(lambda x: x[lane], tuned)
             perf = spec.perf_fn(apply_fn, p_n, spec.eval_batches)
             out[n] = perf_to_importance(perf, base_perf, spec)
+            journal_put(n)
+        faults.hit("tables.importance")
         if progress:
             progress(f"importance batch ({span[0]},{span[1]}]: "
                      f"{len(indices)} lanes vmapped")

@@ -26,6 +26,31 @@ Returns ``None`` (caching disabled) whenever any component is not
 content-addressable.  Entries publish atomically via the checkpoint
 package's tmp-then-rename contract, so a crashed build never leaves a
 half-written table behind.
+
+Failure semantics (the crash-safety contract)
+---------------------------------------------
+* **Write-ahead journal** — while a build runs with a ``cache_dir`` and an
+  addressable key, every completed probe bucket appends one JSON record
+  to ``tables_<key>.journal`` (:class:`BuildJournal`; fsync'd line
+  appends via :func:`repro.checkpoint.ckpt.append_journal_line`).
+  Records: ``{"k": <key>, "v": <value>, "p": <provenance>}`` where the
+  key namespaces are ``latb:<shape-signature>`` (batched latency bucket),
+  ``lat:<i>:<j>:<k>`` (sequential latency entry), and ``imp:<i>:<j>:<k>``
+  (importance probe).  A killed build resumes from the journal: journaled
+  buckets are attributed without re-probing, so the resumed tables are
+  **bit-identical** to an uninterrupted build (measured buckets replay
+  their recorded floats exactly — JSON round-trips IEEE doubles via
+  shortest-repr; quarantined buckets re-derive the deterministic analytic
+  estimate).  The journal is deleted only after the tables publish.
+* **Torn appends** — a crash mid-append leaves a record with no
+  terminating newline; the journal reader truncates that torn tail away
+  before parsing (and before any further append), so half a record is
+  never parsed and never concatenated onto.
+* **Quarantine on load** — a torn/corrupt/unparsable cache file is
+  renamed to ``<file>.corrupt`` and reported as a miss, so one bad file
+  can neither poison the caller nor wedge every subsequent build; the
+  rebuild re-publishes under the original name.  A stale format version
+  is a plain miss (the file is valid, just old).
 """
 from __future__ import annotations
 
@@ -37,7 +62,9 @@ import os
 import jax
 import numpy as np
 
-FORMAT_VERSION = 1
+from repro.testing import faults
+
+FORMAT_VERSION = 2
 
 
 def pytree_digest(tree) -> str:
@@ -116,6 +143,25 @@ def _path(cache_dir: str, key: str) -> str:
     return os.path.join(cache_dir, f"tables_{key}.json")
 
 
+def quarantine(path: str) -> str | None:
+    """Move a corrupt file out of the read path (``<path>.corrupt``).
+
+    Numbered suffixes avoid clobbering earlier evidence; returns the
+    destination, or ``None`` when the file vanished / can't be moved
+    (in which case the caller just treats it as a miss).
+    """
+    base = path + ".corrupt"
+    dst, n = base, 0
+    while os.path.exists(dst):
+        n += 1
+        dst = f"{base}.{n}"
+    try:
+        os.replace(path, dst)
+    except OSError:
+        return None
+    return dst
+
+
 def save(cache_dir: str, key: str, tables) -> str:
     """Atomically publish a built :class:`~repro.core.tables.Tables`."""
     from repro.checkpoint.ckpt import atomic_write_text
@@ -126,6 +172,9 @@ def save(cache_dir: str, key: str, tables) -> str:
         "build_seconds_importance": tables.build_seconds_importance,
         "num_pruned": tables.num_pruned,
         "stats": tables.stats.as_dict() if tables.stats else None,
+        "provenance": [{"i": i, "j": j, "k": k, "flag": flag}
+                       for (i, j, k), flag
+                       in sorted(tables.provenance.items())],
         "spans": [
             {"i": i, "j": j,
              "opts": [{"k": k, "imp": imp, "lat": lat, "kept": list(kept)}
@@ -133,11 +182,17 @@ def save(cache_dir: str, key: str, tables) -> str:
             for (i, j), row in sorted(tables.entries.items())
         ],
     }
+    faults.hit("table_cache.publish")
     return atomic_write_text(_path(cache_dir, key), json.dumps(payload))
 
 
 def load(cache_dir: str, key: str):
-    """Cached :class:`~repro.core.tables.Tables`, or None on a miss."""
+    """Cached :class:`~repro.core.tables.Tables`, or None on a miss.
+
+    A torn or corrupt file is quarantined to ``<file>.corrupt`` and
+    reported as a miss — it can neither poison the caller nor keep
+    failing every future build from the same key.
+    """
     from .probe_engine import EngineStats
     from .tables import Tables
 
@@ -147,22 +202,85 @@ def load(cache_dir: str, key: str):
     try:
         with open(path) as f:
             payload = json.load(f)
-    except (OSError, json.JSONDecodeError):   # torn/corrupt entry: miss
+        if payload.get("format") != FORMAT_VERSION:
+            return None                       # valid but stale: plain miss
+        entries = {
+            (sp["i"], sp["j"]): {
+                o["k"]: (o["imp"], o["lat"], tuple(o["kept"]))
+                for o in sp["opts"]}
+            for sp in payload["spans"]
+        }
+        provenance = {(p["i"], p["j"], p["k"]): p["flag"]
+                      for p in payload.get("provenance", [])}
+        stats = EngineStats(**payload["stats"]) if payload.get("stats") \
+            else EngineStats()
+    except (OSError, json.JSONDecodeError, KeyError, TypeError, ValueError):
+        quarantine(path)                      # torn/corrupt entry: miss
         return None
-    if payload.get("format") != FORMAT_VERSION:
-        return None
-    entries = {
-        (sp["i"], sp["j"]): {
-            o["k"]: (o["imp"], o["lat"], tuple(o["kept"]))
-            for o in sp["opts"]}
-        for sp in payload["spans"]
-    }
-    stats = EngineStats(**payload["stats"]) if payload.get("stats") \
-        else EngineStats()
     stats.cache_hit = True
     return Tables(entries=entries,
                   build_seconds_latency=payload["build_seconds_latency"],
                   build_seconds_importance=payload[
                       "build_seconds_importance"],
                   num_pruned=payload["num_pruned"],
-                  stats=stats)
+                  stats=stats, provenance=provenance)
+
+
+# ---------------------------------------------------------------------------
+# Write-ahead journal for resumable builds
+# ---------------------------------------------------------------------------
+
+def journal_path(cache_dir: str, key: str) -> str:
+    return os.path.join(cache_dir, f"tables_{key}.journal")
+
+
+def discard_journal(cache_dir: str, key: str) -> None:
+    """Remove a journal that is no longer needed (tables published, or a
+    crash landed between publish and cleanup)."""
+    try:
+        os.remove(journal_path(cache_dir, key))
+    except OSError:
+        pass
+
+
+class BuildJournal:
+    """Append-only record of completed probe buckets for ONE build key.
+
+    ``get(key)`` returns the journaled ``(value, provenance)`` for a
+    bucket (``None`` on a miss); ``put`` durably appends one record
+    (fsync'd — once it returns, the bucket survives SIGKILL).  Records
+    whose line was torn by a crash are dropped (and truncated away) on
+    open.  The journal's resume contract lives in the module docstring.
+    """
+
+    def __init__(self, cache_dir: str, key: str):
+        from repro.checkpoint.ckpt import read_journal_lines
+
+        self.path = journal_path(cache_dir, key)
+        self._records: dict[str, tuple] = {}
+        for line in read_journal_lines(self.path):
+            try:
+                rec = json.loads(line)
+                self._records[rec["k"]] = (rec["v"], rec.get("p", "measured"))
+            except (json.JSONDecodeError, KeyError, TypeError):
+                continue                      # unparsable record: skip
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def get(self, key: str) -> tuple | None:
+        """``(value, provenance)`` for a completed bucket, else ``None``."""
+        return self._records.get(key)
+
+    def put(self, key: str, value, provenance: str = "measured") -> None:
+        from repro.checkpoint.ckpt import append_journal_line
+
+        append_journal_line(self.path, json.dumps(
+            {"k": key, "v": value, "p": provenance}))
+        self._records[key] = (value, provenance)
+
+    def discard(self) -> None:
+        try:
+            os.remove(self.path)
+        except OSError:
+            pass

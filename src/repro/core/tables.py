@@ -50,6 +50,11 @@ class Tables:
     build_seconds_importance: float = 0.0
     num_pruned: int = 0              # options dropped by Pareto dominance
     stats: probe_engine.EngineStats | None = None   # probe-engine accounting
+    # (i, j, k) -> probe provenance for every entry whose latency did NOT
+    # come straight from the configured oracle ("retimed"/"quarantined" —
+    # see repro.core.probe_engine).  Sparse: "measured" is implied.
+    provenance: dict[tuple[int, int, int], str] = \
+        dataclasses.field(default_factory=dict)
 
     @property
     def num_entries(self) -> int:
@@ -89,6 +94,8 @@ def build_tables(
     prune: bool = True,
     engine: str = "batched",
     cache_dir: str | None = None,
+    probe_config: probe_engine.ProbeConfig | None = None,
+    resume: bool = True,
 ) -> Tables:
     """Construct both lookup tables for ``host`` (Algorithm 2, lines 1-8).
 
@@ -100,10 +107,22 @@ def build_tables(
     Pareto-dominated within their span are dropped before the tables
     reach the DP — provably optimum-preserving.  With ``cache_dir``, a
     content-addressed hit skips the build entirely.
+
+    Crash safety: when the build is cacheable, every completed probe
+    bucket is journaled to ``cache_dir`` *before* the build moves on, and
+    (with ``resume``, the default) a killed build replays the journal and
+    produces tables **bit-identical** to an uninterrupted run (contract:
+    :mod:`repro.core.table_cache`).  ``probe_config`` sets the wall-clock
+    hardening policy — per-probe timeout, bounded retry with backoff,
+    outlier re-timing, and quarantine-to-analytic for persistently
+    failing buckets; non-default provenance lands in
+    ``Tables.provenance`` and survives the cache and artifact round-trip.
+    ``resume=False`` discards any stale journal and starts clean.
     """
     oracle = latency_oracle or AnalyticTPUOracle()
 
     key = None
+    journal = None
     if cache_dir is not None:
         key = table_cache.cache_key(host, oracle, method, importance,
                                     prune=prune, base_perf=base_perf,
@@ -111,10 +130,20 @@ def build_tables(
         if key is not None:
             cached = table_cache.load(cache_dir, key)
             if cached is not None:
+                # A journal can outlive a publish only when the build
+                # crashed in the publish→cleanup window; it is fully
+                # subsumed by the published tables.
+                table_cache.discard_journal(cache_dir, key)
                 if progress:
                     progress(f"tables: cache hit ({cached.num_entries} "
                              "entries)")
                 return cached
+            if not resume:
+                table_cache.discard_journal(cache_dir, key)
+            journal = table_cache.BuildJournal(cache_dir, key)
+            if progress and len(journal):
+                progress(f"tables: resuming from journal "
+                         f"({len(journal)} completed probes)")
 
     enum = host.enumerator(method)
     total_value = sum(d.value for d in enum.descs)
@@ -131,9 +160,11 @@ def build_tables(
 
     # Pass 2 — latency column through the probe engine.
     t0 = time.perf_counter()
+    prov_flags: list[str] = [probe_engine.PROBE_MEASURED] * len(probes)
     lats = probe_engine.measure_latencies(
         host, [p[5] for p in probes], oracle, params, engine=engine,
-        stats=stats, progress=progress)
+        stats=stats, progress=progress, journal=journal,
+        probe_config=probe_config, provenance=prov_flags)
     t_lat = time.perf_counter() - t0
 
     # Pass 3 — importance column (analytic entries inline, measured
@@ -153,7 +184,7 @@ def build_tables(
         vals = probe_engine.measure_importances(
             host, [probes[n][5] for n in measured], importance,
             base_perf or 0.0, params, engine=engine, stats=stats,
-            progress=progress)
+            progress=progress, journal=journal)
         for n, v in zip(measured, vals):
             imps[n] = v
     t_imp = time.perf_counter() - t0
@@ -169,11 +200,21 @@ def build_tables(
     if prune:
         entries, dropped = pareto_prune(entries)
 
+    # Provenance survives pruning only for entries the DP can still see.
+    provenance = {
+        (i, j, k): flag
+        for (i, j, k, _val, _kept, _seg), flag in zip(probes, prov_flags)
+        if flag != probe_engine.PROBE_MEASURED
+        and k in entries.get((i, j), {})
+    }
+
     tables = Tables(entries=entries, build_seconds_latency=t_lat,
                     build_seconds_importance=t_imp, num_pruned=dropped,
-                    stats=stats)
+                    stats=stats, provenance=provenance)
     if key is not None:
         table_cache.save(cache_dir, key, tables)
+        # Only after a durable publish is the journal redundant.
+        table_cache.discard_journal(cache_dir, key)
     return tables
 
 

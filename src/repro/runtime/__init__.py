@@ -37,6 +37,25 @@ under the mesh with the matching activation and KV-cache ('kv_seq')
 constraints.  No rules — or a one-device mesh — runs the identical code
 fully replicated; v1 artifacts load with empty annotations and behave
 the same way.
+
+**Failure semantics.**  The runtime is the deployment surface, so its
+failure contract is explicit:
+
+* ``load`` never runs a questionable model: a torn, corrupt, or
+  tampered artifact (fingerprint mismatch) raises
+  :class:`ArtifactError` **after quarantining** the bad file to
+  ``<path>.corrupt`` — the next load or re-publish of the same path
+  starts clean, and the error names the quarantine file and the
+  recovery command.  An unsupported format version raises but leaves
+  the file in place (it may be valid under other code).
+* ``serve_requests`` degrades per-request, never per-process: a slot
+  whose logits go non-finite is aborted at that token (other slots of
+  the round are bit-untouched), per-request token and wall-clock
+  budgets bound runaway work, and on a blown deadline the scheduler
+  drains cleanly.  The return still unpacks as ``(gen, seconds)``; the
+  per-request outcome lives on ``.report`` (:class:`ServeReport`).
+* Table builds journal their probes and resume bit-identically — that
+  half of the contract is documented in :mod:`repro.core.table_cache`.
 """
 from .artifact import (ArtifactError, CompressedArtifact, fingerprint, load,
                        save)
@@ -46,9 +65,10 @@ from .executor import (GraphExecutor, cache_shardings, execute,
 from .ir import (AttnUnit, ConvUnit, LowRankUnit, PoolUnit, SublayerUnit,
                  UnitGraph, UpsampleUnit, annotate_axes, bind_params,
                  graph_axes, graph_params)
-from .serving import (decode_tok_s, generate_fused, greedy_token,
-                      pad_prompts, ragged_prompts, random_prompts,
-                      serve_loop, serve_loop_pertoken, serve_requests)
+from .serving import (ServeOutput, ServeReport, decode_tok_s,
+                      generate_fused, greedy_token, pad_prompts,
+                      ragged_prompts, random_prompts, serve_loop,
+                      serve_loop_pertoken, serve_requests)
 
 __all__ = [
     "ArtifactError", "CompressedArtifact", "fingerprint", "load", "save",
@@ -58,7 +78,7 @@ __all__ = [
     "AttnUnit", "ConvUnit", "LowRankUnit", "PoolUnit", "SublayerUnit",
     "UnitGraph", "UpsampleUnit", "annotate_axes", "bind_params",
     "graph_axes", "graph_params",
-    "decode_tok_s", "generate_fused", "greedy_token", "pad_prompts",
-    "ragged_prompts", "random_prompts", "serve_loop", "serve_loop_pertoken",
-    "serve_requests",
+    "ServeOutput", "ServeReport", "decode_tok_s", "generate_fused",
+    "greedy_token", "pad_prompts", "ragged_prompts", "random_prompts",
+    "serve_loop", "serve_loop_pertoken", "serve_requests",
 ]

@@ -203,9 +203,33 @@ def _key_axes(spec: dict, key: str):
     return spec["units"][int(idx[1:])].get("axes", {}).get(sub)
 
 
+def _corrupt(path: str, msg: str) -> ArtifactError:
+    """Quarantine a provably-corrupt artifact and build the error.
+
+    The bad file is renamed to ``<path>.corrupt`` (the table-cache
+    quarantine contract) so the next deploy/publish to the same path
+    starts clean instead of tripping over the same bytes forever; the
+    raised error names the quarantine destination and the recovery path.
+    """
+    from repro.core.table_cache import quarantine
+
+    dst = quarantine(path)
+    where = f" (quarantined to {dst})" if dst else ""
+    return ArtifactError(
+        f"{msg}{where}; re-publish with repro.runtime.save(...) or "
+        "CompressResult.save(...)")
+
+
 def load(path: str, rules=None) -> CompressedArtifact:
     """Load + verify an artifact; raises :class:`ArtifactError` when the
     file is missing, torn, corrupt, or from an unknown format version.
+
+    Self-healing: a torn/corrupt/tampered file is **quarantined** —
+    renamed to ``<path>.corrupt`` — before the error is raised, so the
+    bad bytes cannot wedge every subsequent load or block a re-publish
+    to the same path (the error message names the quarantine file and
+    the recovery command).  A file from an *unsupported format version*
+    is left in place — it may be valid under a different code version.
 
     With ``rules`` (a :class:`ShardingRules` over a live mesh), every
     array is ``device_put`` DIRECTLY to the ``NamedSharding`` its
@@ -219,19 +243,21 @@ def load(path: str, rules=None) -> CompressedArtifact:
         with np.load(path, allow_pickle=False) as z:
             data = {k: z[k] for k in z.files}
     except (OSError, ValueError, zipfile.BadZipFile, KeyError) as e:
-        raise ArtifactError(f"torn or unreadable artifact {path}: {e}") from e
+        raise _corrupt(path,
+                       f"torn or unreadable artifact {path}: {e}") from e
     try:
         spec = json.loads(data.pop("__spec__").item())
         stored_fp = data.pop("__fingerprint__").item()
     except (KeyError, json.JSONDecodeError, ValueError) as e:
-        raise ArtifactError(f"artifact {path} has no valid spec: {e}") from e
+        raise _corrupt(path,
+                       f"artifact {path} has no valid spec: {e}") from e
     if spec.get("format") not in SUPPORTED_FORMATS:
         raise ArtifactError(
             f"artifact {path} format {spec.get('format')!r} not in "
             f"{SUPPORTED_FORMATS}")
     if _digest(spec, data) != stored_fp:
-        raise ArtifactError(
-            f"artifact {path} failed fingerprint verification "
+        raise _corrupt(
+            path, f"artifact {path} failed fingerprint verification "
             "(corrupt weights or tampered spec)")
 
     sharded = rules is not None and rules.mesh is not None

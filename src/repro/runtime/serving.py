@@ -31,12 +31,31 @@ Three layers, each built on the one below:
 Every entry point takes ``rules=`` (a :class:`ShardingRules`) and traces
 under it, so the same code serves one CPU device and a sharded mesh.
 
+Failure semantics (the serving half of the crash-safety contract):
+
+* **Non-finite guard** — the fused scan tracks, per slot, the first step
+  whose logits went non-finite; that slot is *aborted* (its tokens from
+  the failure on are deterministically zeroed, its greedy feedback is
+  pinned so no NaN-argmax garbage re-enters the cache) while every other
+  slot is bit-untouched — slots are batch-independent, so one poisoned
+  request can never corrupt its round.
+* **Budgets** — ``serve_requests`` accepts a per-request token budget
+  (caps generated tokens) and a wall-clock budget; when the deadline
+  passes, the scheduler **drains cleanly**: in-flight rounds retire
+  normally, no new round is admitted, and never-admitted requests come
+  back zeroed and named in the report.
+* **Reporting** — ``serve_requests`` still unpacks as ``(gen, seconds)``
+  (the return is a tuple subclass) but carries a :class:`ServeReport`
+  on ``.report``: which requests completed / aborted (and at which
+  token) / were never admitted.
+
 The greedy-argmax / prompt-encoding glue the example and the bench used
 to duplicate lives here too: :func:`greedy_token`, :func:`random_prompts`,
 :func:`decode_tok_s`.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -176,7 +195,8 @@ def serve_loop_pertoken(step, params, cache, prompt, tokens: int, *,
 # Fused ragged-prompt generation (one scan = prefill + decode)
 # ---------------------------------------------------------------------------
 
-def generate_fused(step, params, cache, prompts, lengths, tokens: int):
+def generate_fused(step, params, cache, prompts, lengths, tokens: int, *,
+                   logit_hook=None, with_report: bool = False):
     """One scan over a padded slot batch with per-slot prompt lengths.
 
     ``prompts``: ``(B, P)`` right-padded ids; ``lengths``: ``(B,)`` with
@@ -187,6 +207,18 @@ def generate_fused(step, params, cache, prompts, lengths, tokens: int):
     the result matches serving that prompt alone.  Returns
     ``(gen (B, tokens), cache)``; the cache must cover ``P + tokens``
     positions.
+
+    Non-finite guard: each step tracks, per slot, whether the logits are
+    all-finite; a slot that goes bad feeds a pinned token 0 back (never a
+    NaN-argmax) so the remaining slots of the batch are bit-untouched.
+    With ``with_report`` the return gains a third element ``fail_idx
+    (B,)``: the generation index at which each slot first saw non-finite
+    logits (``tokens`` = never — healthy), with the aborted slot's tokens
+    deterministically zeroed from that index on.
+
+    ``logit_hook(logits, t) → logits`` runs inside the (jitted) scan just
+    before the argmax — the deterministic injection point used by
+    :func:`repro.testing.faults.nan_logits_hook`.
     """
     prompts = prompts.astype(jnp.int32)    # match the argmax carry dtype
     B, P = prompts.shape
@@ -198,17 +230,30 @@ def generate_fused(step, params, cache, prompts, lengths, tokens: int):
         tok_t, t = xs
         inp = jnp.where(t < lengths, tok_t, prev)
         logits, cache = step(params, cache, {"tokens": inp[:, None]})
-        nxt = greedy_token(logits)
-        return (nxt, cache), nxt
+        if logit_hook is not None:
+            logits = logit_hook(logits, t)
+        ok = jnp.isfinite(logits).all(
+            axis=tuple(range(1, logits.ndim)))             # (B,)
+        nxt = jnp.where(ok, greedy_token(logits), 0)
+        return (nxt, cache), (nxt, ok)
 
     init = (jnp.zeros((B,), prompts.dtype), cache)
-    (_, cache), samples = lax.scan(
+    (_, cache), (samples, ok) = lax.scan(
         body, init, (toks_in.T, jnp.arange(steps)))
     # slot b's generation starts at the step that consumed its last
     # prompt token: samples[lengths[b] - 1 + i, b]
     idx = (lengths - 1)[:, None] + jnp.arange(tokens)[None, :]
     gen = jnp.take_along_axis(samples.T, idx, axis=1)
-    return gen, cache
+    if not with_report:
+        return gen, cache
+    bad = ~ok.T                                            # (B, steps)
+    first_bad = jnp.where(bad.any(axis=1),
+                          jnp.argmax(bad, axis=1), steps)  # scan step
+    # A failure while the slot was still teacher-forcing (its cache is
+    # poisoned before the first generated token) clips to index 0.
+    fail_idx = jnp.clip(first_bad - (lengths - 1), 0, tokens)
+    keep = jnp.arange(tokens)[None, :] < fail_idx[:, None]
+    return jnp.where(keep, gen, 0), cache, fail_idx
 
 
 # ---------------------------------------------------------------------------
@@ -233,9 +278,46 @@ def pad_prompts(prompts, pad_to: int | None = None):
     return mat, lengths
 
 
+@dataclasses.dataclass
+class ServeReport:
+    """Per-request outcome accounting for one :func:`serve_requests` call.
+
+    ``aborted`` maps a request index to the generation index at which its
+    logits first went non-finite (its tokens are zeroed from there on);
+    ``unserved`` lists requests never admitted because the wall-clock
+    budget expired (their rows are all zeros); everything else
+    ``completed`` normally.  ``tokens_per_request`` is the effective
+    generation length after the token budget.
+    """
+
+    completed: list[int] = dataclasses.field(default_factory=list)
+    aborted: dict[int, int] = dataclasses.field(default_factory=dict)
+    unserved: list[int] = dataclasses.field(default_factory=list)
+    rounds: int = 0
+    tokens_per_request: int = 0
+    deadline_hit: bool = False
+
+    @property
+    def ok(self) -> bool:
+        return not self.aborted and not self.unserved
+
+
+class ServeOutput(tuple):
+    """``(gen, seconds)`` (unpacks like the pre-report return) carrying
+    the :class:`ServeReport` on ``.report``."""
+
+    report: ServeReport
+
+    def __new__(cls, gen, seconds, report):
+        out = super().__new__(cls, (gen, seconds))
+        out.report = report
+        return out
+
+
 def serve_requests(step, params, make_cache, prompts, lengths=None, *,
                    tokens: int, slots: int | None = None, rules=None,
-                   warm: bool = True):
+                   warm: bool = True, token_budget: int | None = None,
+                   time_budget_s: float | None = None, logit_hook=None):
     """Serve many prompts through fixed-size slot batching.
 
     ``prompts``: ``(R, P)`` padded ids (or a list of 1-D id arrays, in
@@ -247,10 +329,22 @@ def serve_requests(step, params, make_cache, prompts, lengths=None, *,
     ``make_cache(batch_size, seq_len)`` builds a fresh per-round cache.
 
     Under mesh ``rules`` the slot axis is the 'data' mesh axis — rounds
-    decode data-parallel.  Returns ``(gen (R, tokens), seconds)`` where
-    ``seconds`` is steady-state wall clock with ``warm`` (one unmeasured
-    pass over round 0's shapes first — the benchmarking contract; pass
+    decode data-parallel.  Returns a :class:`ServeOutput` — unpacks as
+    ``(gen (R, T), seconds)`` exactly like before, with the
+    :class:`ServeReport` on ``.report`` — where ``seconds`` is
+    steady-state wall clock with ``warm`` (one unmeasured pass over
+    round 0's shapes first — the benchmarking contract; pass
     ``warm=False`` to serve without it).
+
+    Hardening: ``token_budget`` caps generated tokens per request
+    (``T = min(tokens, token_budget)``); ``time_budget_s`` bounds the
+    measured serving wall clock — once exceeded, the scheduler drains
+    cleanly (the in-flight round retires, no new round is admitted,
+    never-admitted requests come back zeroed and listed in
+    ``report.unserved``).  A slot whose logits go non-finite is aborted
+    at that token (see :func:`generate_fused`) and recorded in
+    ``report.aborted``; the other slots of its round are bit-untouched.
+    ``logit_hook`` is threaded into the fused scan (fault injection).
     """
     if lengths is None:
         if getattr(prompts, "ndim", None) == 2:
@@ -258,12 +352,24 @@ def serve_requests(step, params, make_cache, prompts, lengths=None, *,
             # here would silently teacher-force pad tokens into caches
             raise ValueError("pass lengths= with a padded (R, P) matrix "
                              "(or pass the list of 1-D prompts)")
-        prompts, lengths = pad_prompts(prompts)
+        if len(prompts) == 0:              # zero requests: nothing to pad
+            prompts = jnp.zeros((0, 1), jnp.int32)
+            lengths = jnp.zeros((0,), jnp.int32)
+        else:
+            prompts, lengths = pad_prompts(prompts)
     R, P = prompts.shape
+    eff_tokens = tokens if token_budget is None \
+        else max(1, min(tokens, token_budget))
+    report = ServeReport(tokens_per_request=eff_tokens)
+    if R == 0:                             # zero requests: nothing to trace
+        return ServeOutput(jnp.zeros((0, eff_tokens), jnp.int32), 0.0,
+                           report)
     slots = min(slots or R, R)
 
     fused = jax.jit(
-        lambda p, c, pr, ln: generate_fused(step, p, c, pr, ln, tokens))
+        lambda p, c, pr, ln: generate_fused(step, p, c, pr, ln, eff_tokens,
+                                            logit_hook=logit_hook,
+                                            with_report=True))
 
     def round_batch(start):
         # short final round: re-admit request 0 as filler, results dropped
@@ -271,17 +377,34 @@ def serve_requests(step, params, make_cache, prompts, lengths=None, *,
         return prompts[jnp.asarray(idx)], lengths[jnp.asarray(idx)]
 
     outs = []
+    fails = []                             # (start, n, fail_idx) per round
     with use_rules(rules):
         if warm:
             pr0, ln0 = round_batch(0)
             jax.block_until_ready(
-                fused(params, make_cache(slots, P + tokens), pr0, ln0))
+                fused(params, make_cache(slots, P + eff_tokens), pr0, ln0))
         t0 = time.perf_counter()
         for start in range(0, R, slots):
+            if time_budget_s is not None \
+                    and time.perf_counter() - t0 > time_budget_s:
+                report.deadline_hit = True
+                report.unserved.extend(range(start, R))
+                outs.append(jnp.zeros((R - start, eff_tokens), jnp.int32))
+                break
             pr, ln = round_batch(start)
-            cache = make_cache(slots, P + tokens)
-            gen, _ = fused(params, cache, pr, ln)
-            outs.append(gen[: min(slots, R - start)])
+            cache = make_cache(slots, P + eff_tokens)
+            gen, _, fail_idx = fused(params, cache, pr, ln)
+            n = min(slots, R - start)
+            outs.append(gen[:n])
+            fails.append((start, n, fail_idx))
+            report.rounds += 1
         jax.block_until_ready(outs)
         seconds = time.perf_counter() - t0
-    return jnp.concatenate(outs, axis=0), seconds
+    for start, n, fail_idx in fails:
+        fail_np = jax.device_get(fail_idx)
+        for b in range(n):
+            if int(fail_np[b]) < eff_tokens:
+                report.aborted[start + b] = int(fail_np[b])
+            else:
+                report.completed.append(start + b)
+    return ServeOutput(jnp.concatenate(outs, axis=0), seconds, report)

@@ -1,0 +1,11 @@
+"""``repro.testing`` — deterministic test instrumentation.
+
+:mod:`repro.testing.faults` is the fault-injection registry consumed by
+the crash-safety hooks in the production pipeline (probe engine, build
+journal, table cache, serving).  It is stdlib-only and a no-op unless a
+fault plan is explicitly activated, so production modules may import it
+unconditionally.  (Not imported eagerly here: ``python -m
+repro.testing.faults`` would otherwise re-execute the module under
+runpy and split the fault-plan state across two module objects.)
+"""
+__all__ = ["faults"]

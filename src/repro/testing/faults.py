@@ -1,0 +1,342 @@
+"""Deterministic fault injection for the crash-safe compression pipeline.
+
+Table construction is an hours-long job on real networks, and the crash
+paths it must survive — a SIGKILL mid-bucket, a torn journal append, a
+flaky probe, a NaN'd serving slot — are exactly the ones ordinary tests
+never reach.  This module gives the pipeline *named injection points*
+whose behavior is deterministic and scriptable, so every recovery path in
+:mod:`repro.core.probe_engine`, :mod:`repro.core.table_cache`,
+:mod:`repro.checkpoint.ckpt`, and :mod:`repro.runtime.serving` is
+exercised by a reproducible test instead of luck.
+
+Design:
+
+* Production code calls :func:`hit(point)` at an injection point (and
+  :func:`mangle(point, data)` around journal writes).  With no plan
+  active both are near-free no-ops — one module-global ``is None`` check
+  — so the hooks stay in shipping code.
+* A test activates a :class:`FaultPlan` via the :func:`inject` context
+  manager.  Rules are counted per point: ``Fault(point, action, nth=3,
+  times=2)`` fires on the 3rd and 4th hit of ``point`` only, which makes
+  retry/backoff paths testable ("fail twice, then succeed").
+* Actions: ``"raise"`` (a :class:`FaultError` — a *retryable* failure),
+  ``"kill"`` (a :class:`FaultKill` — an in-process stand-in for SIGKILL;
+  derives :class:`BaseException` so no retry loop may swallow it),
+  ``"exit"`` (``os._exit`` — a REAL crash, for subprocess kill-and-resume
+  tests), ``"delay"`` (``time.sleep`` — stragglers/timeouts), and
+  ``"torn"`` (truncate the bytes of the guarded write, then kill at the
+  matching ``<point>.done`` hit — a torn write only matters if the
+  process died before completing it).
+* ``REPRO_FAULTS="exit@tables.bucket:3"`` activates a plan from the
+  environment — how a *separate process* is crashed for the true
+  kill-and-resume smoke (``python -m repro.testing.faults --smoke``,
+  wired into ``scripts/verify.sh``).
+
+Injection points currently wired into the pipeline:
+
+=====================  =====================================================
+``probe.prepare``      before compiling/first-calling a latency-probe bucket
+``probe.time``         before each timed measurement of a bucket
+``tables.bucket``      after a bucket's result is journaled (kill here ⇒
+                       resume must replay the journal bit-identically)
+``tables.importance``  after an importance probe/batch is journaled
+``journal.append``     ``mangle`` over the journal line bytes (torn writes)
+``journal.append.done``after the journal bytes hit the disk
+``table_cache.publish``before the built tables are atomically published
+=====================  =====================================================
+
+NaN injection for serving cannot go through :func:`hit` (it must run
+inside a jitted ``lax.scan``); :func:`nan_logits_hook` builds the
+deterministic ``logit_hook`` consumed by
+:func:`repro.runtime.serving.serve_requests` instead.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import threading
+import time
+
+ACTIONS = ("raise", "kill", "exit", "delay", "torn")
+
+
+class FaultError(RuntimeError):
+    """An injected *retryable* failure (a flaky probe, a failed write)."""
+
+
+class FaultKill(BaseException):
+    """In-process stand-in for SIGKILL.
+
+    Derives :class:`BaseException` so ``except Exception`` retry loops in
+    the code under test can never swallow it — exactly like the real
+    signal, the only valid reaction is to die with journals flushed.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One injection rule: at hits ``nth .. nth+times-1`` of ``point``,
+    perform ``action``."""
+
+    point: str
+    action: str
+    nth: int = 1            # 1-based hit index the rule first fires on
+    times: int = 1          # consecutive hits it stays armed for
+    seconds: float = 0.0    # "delay": sleep duration
+    keep_bytes: int = 8     # "torn": bytes of the write that reach disk
+    exit_code: int = 17     # "exit": status for the hard crash
+
+    def __post_init__(self):
+        if self.action not in ACTIONS:
+            raise ValueError(f"unknown action {self.action!r}; "
+                             f"expected one of {ACTIONS}")
+
+    def armed(self, n: int) -> bool:
+        return self.nth <= n < self.nth + self.times
+
+
+class FaultPlan:
+    """A set of :class:`Fault` rules with per-point hit counters.
+
+    Thread-safe: probe pre-compilation runs on a worker thread, so
+    counters are guarded.  ``fired`` records ``(point, hit_index,
+    action)`` for post-mortem assertions in tests.
+    """
+
+    def __init__(self, *rules: Fault):
+        self.rules = tuple(rules)
+        self.fired: list[tuple[str, int, str]] = []
+        self._counts: dict[str, int] = {}
+        self._pending_kill: set[str] = set()
+        self._lock = threading.Lock()
+
+    def _arm(self, point: str) -> Fault | None:
+        """Count one hit of ``point`` and return the rule it arms."""
+        n = self._counts[point] = self._counts.get(point, 0) + 1
+        for rule in self.rules:
+            if rule.point == point and rule.armed(n):
+                self.fired.append((point, n, rule.action))
+                return rule
+        return None
+
+    def hit(self, point: str) -> None:
+        with self._lock:
+            rule = self._arm(point)
+            kill_pending = point in self._pending_kill
+            if kill_pending:
+                self._pending_kill.discard(point)
+        if kill_pending:                     # completes a torn write
+            raise FaultKill(f"torn write at {point}")
+        if rule is None:
+            return
+        if rule.action == "raise":
+            raise FaultError(f"injected failure at {point}")
+        if rule.action == "kill":
+            raise FaultKill(f"injected kill at {point}")
+        if rule.action == "exit":            # pragma: no cover — dies
+            os._exit(rule.exit_code)
+        if rule.action == "delay":
+            time.sleep(rule.seconds)
+
+    def mangle(self, point: str, data: bytes) -> bytes:
+        """Apply a ``torn`` rule to the bytes of a guarded write.
+
+        The truncated bytes ARE written by the caller; the matching
+        ``<point>.done`` hit then kills the process — the on-disk state a
+        crash mid-``write(2)`` leaves behind.
+        """
+        with self._lock:
+            rule = self._arm(point)
+            if rule is not None and rule.action == "torn":
+                self._pending_kill.add(point + ".done")
+                return data[: rule.keep_bytes]
+        if rule is None:
+            return data
+        # non-torn rules on a mangle point behave like hit() rules
+        if rule.action == "raise":
+            raise FaultError(f"injected failure at {point}")
+        if rule.action == "kill":
+            raise FaultKill(f"injected kill at {point}")
+        if rule.action == "exit":            # pragma: no cover — dies
+            os._exit(rule.exit_code)
+        if rule.action == "delay":
+            time.sleep(rule.seconds)
+        return data
+
+
+_ACTIVE: FaultPlan | None = None
+_ENV_PLAN: FaultPlan | None = None
+_ENV_PARSED = False
+
+ENV_VAR = "REPRO_FAULTS"
+
+
+def parse_env_spec(spec: str) -> FaultPlan:
+    """``"action@point:nth[xtimes][~seconds]"`` items, ``;``-separated.
+
+    Examples: ``exit@tables.bucket:3`` (hard-crash on the 3rd bucket),
+    ``raise@probe.prepare:1x2`` (fail the first two prepare attempts),
+    ``delay@probe.time:1~0.5`` (0.5 s straggler on the first timing).
+    """
+    rules = []
+    for item in filter(None, (s.strip() for s in spec.split(";"))):
+        action, _, rest = item.partition("@")
+        point, _, counts = rest.partition(":")
+        if not (action and point):
+            raise ValueError(f"bad {ENV_VAR} item {item!r} "
+                             "(want action@point[:nth[xtimes][~seconds]])")
+        counts, _, seconds = (counts or "1").partition("~")
+        nth, _, times = counts.partition("x")
+        rules.append(Fault(point=point, action=action, nth=int(nth or 1),
+                           times=int(times or 1),
+                           seconds=float(seconds or 0.0)))
+    return FaultPlan(*rules)
+
+
+def active() -> FaultPlan | None:
+    """The plan in effect: an :func:`inject` context, else ``REPRO_FAULTS``."""
+    global _ENV_PLAN, _ENV_PARSED
+    if _ACTIVE is not None:
+        return _ACTIVE
+    if not _ENV_PARSED:
+        _ENV_PARSED = True
+        spec = os.environ.get(ENV_VAR)
+        if spec:
+            _ENV_PLAN = parse_env_spec(spec)
+    return _ENV_PLAN
+
+
+def hit(point: str) -> None:
+    """Injection point: no-op unless an active plan has a rule for it."""
+    plan = active()
+    if plan is not None:
+        plan.hit(point)
+
+
+def mangle(point: str, data: bytes) -> bytes:
+    """Write-guard injection point: may truncate ``data`` (torn write)."""
+    plan = active()
+    return data if plan is None else plan.mangle(point, data)
+
+
+@contextlib.contextmanager
+def inject(*rules: Fault):
+    """Activate a fault plan for the dynamic extent of the context."""
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, FaultPlan(*rules)
+    try:
+        yield _ACTIVE
+    finally:
+        _ACTIVE = prev
+
+
+def nan_logits_hook(slot: int, step: int):
+    """Deterministic NaN injection for serving: a ``logit_hook`` that
+    poisons ``slot``'s logits at scan step ``step`` (jit-compatible —
+    runs inside the fused prefill+decode ``lax.scan``)."""
+    import jax.numpy as jnp
+
+    def hook(logits, t):
+        poisoned = logits.at[slot].set(jnp.nan)
+        return jnp.where(jnp.asarray(t) == step, poisoned, logits)
+    return hook
+
+
+# ---------------------------------------------------------------------------
+# Kill-and-resume smoke: a REAL child-process crash mid-table-build, then
+# a resume that must be bit-identical to an uninterrupted build.
+# Wired into scripts/verify.sh; also usable standalone:
+#
+#   PYTHONPATH=src JAX_PLATFORMS=cpu python -m repro.testing.faults --smoke
+# ---------------------------------------------------------------------------
+
+def _smoke_host():
+    import jax
+
+    from repro.models import cnn, cnn_host, zoo
+
+    net = zoo.tiny_resnet(num_classes=4, in_hw=8, width=4, blocks=(2,))
+    params = cnn.init_params(net, jax.random.PRNGKey(0))
+    return cnn_host.CNNHost(net, params, batch=4), params
+
+
+def _smoke_build(cache_dir: str | None):
+    from repro.core import build_tables
+
+    host, params = _smoke_host()
+    return build_tables(host, params=params, cache_dir=cache_dir)
+
+
+def kill_resume_smoke(kill_at_bucket: int = 4) -> dict:
+    """Crash a child's table build at the Nth journaled bucket (hard
+    ``os._exit`` — no Python cleanup), resume in this process, and verify
+    the resumed tables are bit-identical to an uninterrupted build."""
+    import glob
+    import subprocess
+    import sys
+    import tempfile
+
+    src_root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    with tempfile.TemporaryDirectory() as d:
+        env = dict(os.environ,
+                   PYTHONPATH=src_root + os.pathsep + os.environ.get(
+                       "PYTHONPATH", ""),
+                   JAX_PLATFORMS=os.environ.get("JAX_PLATFORMS", "cpu"))
+        env[ENV_VAR] = f"exit@tables.bucket:{kill_at_bucket}"
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.testing.faults", "--child", d],
+            env=env, capture_output=True, text=True, timeout=600)
+        if r.returncode != 17:
+            raise AssertionError(
+                f"child was expected to die at bucket {kill_at_bucket} "
+                f"(exit 17), got {r.returncode}:\n{r.stdout}{r.stderr}")
+        journals = glob.glob(os.path.join(d, "*.journal"))
+        if len(journals) != 1:
+            raise AssertionError(f"expected 1 journal after the crash, "
+                                 f"found {journals}")
+        resumed = _smoke_build(d)
+        reference = _smoke_build(None)
+        if resumed.entries != reference.entries:
+            raise AssertionError("resumed tables diverged from the "
+                                 "uninterrupted build")
+        if resumed.num_pruned != reference.num_pruned:
+            raise AssertionError("resumed Pareto drops diverged")
+        if resumed.stats.num_journal_hits < kill_at_bucket - 1:
+            raise AssertionError(
+                f"resume replayed only {resumed.stats.num_journal_hits} "
+                f"journaled buckets (expected >= {kill_at_bucket - 1})")
+        if glob.glob(os.path.join(d, "*.journal")):
+            raise AssertionError("journal not cleaned up after publish")
+        return {
+            "killed_at_bucket": kill_at_bucket,
+            "journal_hits_on_resume": resumed.stats.num_journal_hits,
+            "entries": resumed.num_entries,
+            "bit_identical": True,
+        }
+
+
+def main(argv=None):
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(prog="python -m repro.testing.faults")
+    ap.add_argument("--smoke", action="store_true",
+                    help="kill-and-resume table-build smoke (verify.sh leg)")
+    ap.add_argument("--child", metavar="CACHE_DIR", default=None,
+                    help=argparse.SUPPRESS)   # internal: the crashed build
+    args = ap.parse_args(argv)
+    if args.child is not None:
+        _smoke_build(args.child)
+        print("CHILD_COMPLETED")               # only reached if not killed
+        return
+    if args.smoke:
+        print(json.dumps(kill_resume_smoke(), indent=2))
+        print("FAULT_SMOKE_OK")
+        return
+    ap.print_help()
+
+
+if __name__ == "__main__":
+    main()

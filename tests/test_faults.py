@@ -1,0 +1,419 @@
+"""Crash-safety certification: the deterministic fault-injection suite.
+
+Every recovery path the pipeline claims is exercised here under
+:mod:`repro.testing.faults`:
+
+* journal primitives survive torn appends and self-heal the file;
+* a table build killed mid-bucket / mid-journal-write / mid-publish
+  resumes **bit-identical** to an uninterrupted build;
+* flaky probes retry with backoff, stragglers time out and recover,
+  persistently failing buckets quarantine to the analytic estimate with
+  provenance that survives the cache AND the artifact round trip;
+* corrupt stores (table cache, artifacts) are quarantined to
+  ``.corrupt`` files instead of wedging every subsequent load;
+* ``AsyncCheckpointer`` as a context manager lands its pending save on
+  clean exit and on exception;
+* the real SIGKILL-grade kill-and-resume smoke (a child process
+  hard-``os._exit``s mid-build) — the same leg ``scripts/verify.sh``
+  runs.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro import runtime
+from repro.checkpoint import ckpt
+from repro.core import (AnalyticTPUOracle, ProbeConfig, WallClockOracle,
+                        build_tables, compress, table_cache)
+from repro.core.probe_engine import (PROBE_MEASURED, PROBE_QUARANTINED,
+                                     PROBE_RETIMED)
+from repro.models import cnn, cnn_host, zoo
+from repro.testing import faults
+
+
+@pytest.fixture(scope="module")
+def host():
+    net = zoo.tiny_resnet(num_classes=4, in_hw=8, width=4, blocks=(2,))
+    params = cnn.init_params(net, jax.random.PRNGKey(0))
+    return cnn_host.CNNHost(net, params, batch=4), params
+
+
+@pytest.fixture(scope="module")
+def reference(host):
+    """The uninterrupted analytic build every resume must reproduce."""
+    h, params = host
+    return build_tables(h, params=params)
+
+
+def _fast_probe(**kw):
+    return ProbeConfig(backoff_s=0.0, **kw)
+
+
+def _tiny_oracle():
+    return WallClockOracle(warmup=1, iters=2, groups=1)
+
+
+# ---------------------------------------------------------------------------
+# Fault-plan mechanics
+# ---------------------------------------------------------------------------
+
+def test_parse_env_spec():
+    plan = faults.parse_env_spec(
+        "raise@probe.time:2x3; delay@probe.prepare:1~0.5;exit@tables.bucket")
+    a, b, c = plan.rules
+    assert (a.point, a.action, a.nth, a.times) == ("probe.time", "raise", 2, 3)
+    assert (b.action, b.seconds) == ("delay", 0.5)
+    assert (c.point, c.nth, c.times) == ("tables.bucket", 1, 1)
+    with pytest.raises(ValueError):
+        faults.parse_env_spec("frobnicate@x")
+    with pytest.raises(ValueError):
+        faults.parse_env_spec("raise@")
+
+
+def test_counted_rules_fire_on_exact_hits():
+    with faults.inject(faults.Fault("pt", "raise", nth=2, times=2)) as plan:
+        faults.hit("pt")                       # hit 1: unarmed
+        with pytest.raises(faults.FaultError):
+            faults.hit("pt")                   # hit 2: fires
+        with pytest.raises(faults.FaultError):
+            faults.hit("pt")                   # hit 3: fires
+        faults.hit("pt")                       # hit 4: past the window
+        assert [n for (_, n, _) in plan.fired] == [2, 3]
+    faults.hit("pt")                           # no active plan: no-op
+
+
+def test_kill_is_not_swallowed_by_except_exception():
+    """FaultKill must behave like SIGKILL: no ``except Exception`` retry
+    loop may absorb it."""
+    with faults.inject(faults.Fault("pt", "kill")):
+        with pytest.raises(faults.FaultKill):
+            try:
+                faults.hit("pt")
+            except Exception:                  # noqa: BLE001
+                pytest.fail("FaultKill was caught as an Exception")
+
+
+# ---------------------------------------------------------------------------
+# Journal primitives — torn appends self-heal
+# ---------------------------------------------------------------------------
+
+def test_journal_roundtrip_and_torn_tail(tmp_path):
+    path = str(tmp_path / "j.journal")
+    ckpt.append_journal_line(path, json.dumps({"k": "a", "v": 1.5}))
+    ckpt.append_journal_line(path, json.dumps({"k": "b", "v": 2.5}))
+    with open(path, "ab") as f:                # crash mid-append: torn tail
+        f.write(b'{"k": "c", "v"')
+    lines = ckpt.read_journal_lines(path)
+    assert [json.loads(l)["k"] for l in lines] == ["a", "b"]
+    raw = open(path, "rb").read()              # reader healed the file
+    assert raw.endswith(b"\n") and raw.count(b"\n") == 2
+    ckpt.append_journal_line(path, json.dumps({"k": "c", "v": 3.5}))
+    assert len(ckpt.read_journal_lines(path)) == 3
+
+
+def test_journal_torn_write_injection(tmp_path):
+    """The 'torn' action writes a prefix of the record then dies at the
+    fsync point — the reader must drop the fragment."""
+    path = str(tmp_path / "j.journal")
+    ckpt.append_journal_line(path, json.dumps({"k": "a", "v": 1.0}))
+    with faults.inject(faults.Fault("journal.append", "torn", nth=1,
+                                    keep_bytes=5)):
+        with pytest.raises(faults.FaultKill):
+            ckpt.append_journal_line(path, json.dumps({"k": "b", "v": 2.0}))
+    lines = ckpt.read_journal_lines(path)
+    assert [json.loads(l)["k"] for l in lines] == ["a"]
+    ckpt.append_journal_line(path, json.dumps({"k": "b", "v": 2.0}))
+    assert len(ckpt.read_journal_lines(path)) == 2
+
+
+# ---------------------------------------------------------------------------
+# Resumable table builds — bit-identical after any injected crash
+# ---------------------------------------------------------------------------
+
+def _crash_then_resume(host, reference, cache_dir, rule, **build_kw):
+    h, params = host
+    with faults.inject(rule):
+        with pytest.raises(faults.FaultKill):
+            build_tables(h, params=params, cache_dir=cache_dir, **build_kw)
+    resumed = build_tables(h, params=params, cache_dir=cache_dir, **build_kw)
+    assert resumed.entries == reference.entries
+    assert resumed.num_pruned == reference.num_pruned
+    return resumed
+
+
+def test_kill_mid_bucket_resumes_bit_identical(host, reference, tmp_path):
+    resumed = _crash_then_resume(
+        host, reference, str(tmp_path),
+        faults.Fault("tables.bucket", "kill", nth=3))
+    # buckets journaled before the kill are replayed, not re-probed
+    assert resumed.stats.num_journal_hits >= 2
+    assert not list(tmp_path.glob("*.journal"))    # discarded after publish
+
+
+def test_kill_mid_journal_write_resumes_bit_identical(host, reference,
+                                                      tmp_path):
+    """A crash that tears the journal record itself: the torn bucket is
+    lost (re-probed on resume), earlier buckets replay."""
+    resumed = _crash_then_resume(
+        host, reference, str(tmp_path),
+        faults.Fault("journal.append", "torn", nth=4))
+    assert resumed.stats.num_journal_hits == 3     # buckets 1-3 survived
+
+
+def test_kill_mid_publish_resumes_bit_identical(host, reference, tmp_path):
+    """Crash after every probe journaled but before the tables published:
+    the resume replays the ENTIRE build from the journal."""
+    resumed = _crash_then_resume(
+        host, reference, str(tmp_path),
+        faults.Fault("table_cache.publish", "kill"))
+    assert resumed.stats.num_journal_hits == resumed.stats.num_latency_buckets
+
+
+def test_no_resume_discards_journal(host, reference, tmp_path):
+    h, params = host
+    with faults.inject(faults.Fault("tables.bucket", "kill", nth=3)):
+        with pytest.raises(faults.FaultKill):
+            build_tables(h, params=params, cache_dir=str(tmp_path))
+    fresh = build_tables(h, params=params, cache_dir=str(tmp_path),
+                         resume=False)
+    assert fresh.stats.num_journal_hits == 0
+    assert fresh.entries == reference.entries
+
+
+def test_cache_hit_cleans_stale_journal(host, tmp_path):
+    """A journal that survived into the publish→cleanup crash window is
+    subsumed by the published tables and removed on the next build."""
+    h, params = host
+    built = build_tables(h, params=params, cache_dir=str(tmp_path))
+    key = table_cache.cache_key(h, AnalyticTPUOracle(), "layermerge",
+                                "magnitude")
+    open(table_cache.journal_path(str(tmp_path), key), "w").write(
+        '{"k": "stale", "v": 1.0, "p": "measured"}\n')
+    warm = build_tables(h, params=params, cache_dir=str(tmp_path))
+    assert warm.stats.cache_hit and warm.entries == built.entries
+    assert not os.path.exists(table_cache.journal_path(str(tmp_path), key))
+
+
+def test_sequential_engine_resumes_too(host, tmp_path):
+    h, params = host
+    ref = build_tables(h, params=params, engine="sequential")
+    with faults.inject(faults.Fault("tables.bucket", "kill", nth=5)):
+        with pytest.raises(faults.FaultKill):
+            build_tables(h, params=params, engine="sequential",
+                         cache_dir=str(tmp_path))
+    resumed = build_tables(h, params=params, engine="sequential",
+                           cache_dir=str(tmp_path))
+    assert resumed.entries == ref.entries
+    assert resumed.stats.num_journal_hits >= 4
+
+
+def test_importance_probes_resume(tmp_path):
+    """Measured-importance builds journal per-probe and resume without
+    re-tuning completed span groups."""
+    from repro.core import ImportanceSpec, accuracy_perf, xent_loss
+
+    net = zoo.tiny_resnet(num_classes=4, in_hw=8, width=4, blocks=(1,))
+    params = cnn.init_params(net, jax.random.PRNGKey(0))
+    h = cnn_host.CNNHost(net, params, batch=4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 8, 8, 3))
+    y = jax.random.randint(jax.random.PRNGKey(2), (8,), 0, 4)
+    spec = ImportanceSpec(loss_fn=xent_loss, perf_fn=accuracy_perf,
+                          train_batches=[(x, y)], eval_batches=[(x, y)],
+                          steps=2, lr=1e-3, cache_token="faults-v1")
+    base = accuracy_perf(lambda p, xx: cnn.apply_replaced(net, p, xx),
+                         params, spec.eval_batches)
+    ref = build_tables(h, params=params, importance=spec, base_perf=base)
+    with faults.inject(faults.Fault("tables.importance", "kill", nth=2)):
+        with pytest.raises(faults.FaultKill):
+            build_tables(h, params=params, importance=spec, base_perf=base,
+                         cache_dir=str(tmp_path))
+    resumed = build_tables(h, params=params, importance=spec,
+                           base_perf=base, cache_dir=str(tmp_path))
+    assert resumed.entries == ref.entries
+    assert resumed.stats.num_journal_hits > 0
+
+
+# ---------------------------------------------------------------------------
+# Probe hardening — retry, timeout, straggler, quarantine, provenance
+# ---------------------------------------------------------------------------
+
+def test_flaky_probe_retries_then_succeeds(host):
+    h, params = host
+    with faults.inject(faults.Fault("probe.time", "raise", nth=1, times=2)):
+        tb = build_tables(h, latency_oracle=_tiny_oracle(), params=params,
+                          probe_config=_fast_probe())
+    assert tb.stats.num_probe_retries >= 2
+    assert tb.stats.num_quarantined == 0
+    assert tb.provenance == {}                 # clean after retries
+
+
+def test_persistent_failure_quarantines_to_analytic(host):
+    h, params = host
+    with faults.inject(faults.Fault("probe.time", "raise", nth=1, times=3)):
+        tb = build_tables(h, latency_oracle=_tiny_oracle(), params=params,
+                          probe_config=_fast_probe(retries=2), prune=False)
+    assert tb.stats.num_quarantined == 1       # first bucket gave up
+    assert set(tb.provenance.values()) == {PROBE_QUARANTINED}
+    # quarantined entries carry the deterministic analytic estimate — the
+    # same value AnalyticTPUOracle derives from the segment's static cost
+    for (i, j, k) in tb.provenance:
+        assert tb.entries[(i, j)][k][1] > 0.0
+
+
+def test_probe_timeout_quarantines_everything(host):
+    h, params = host
+    cfg = _fast_probe(timeout_s=1e-9, retries=0)
+    tb = build_tables(h, latency_oracle=_tiny_oracle(), params=params,
+                      probe_config=cfg)
+    assert tb.stats.num_quarantined == tb.stats.num_latency_buckets
+    assert all(lat > 0.0 for row in tb.entries.values()
+               for _, lat, _ in row.values())
+
+
+def test_straggler_delay_recovers_on_retry(host):
+    h, params = host
+    cfg = _fast_probe(timeout_s=0.25, retries=2)
+    with faults.inject(faults.Fault("probe.time", "delay", nth=1,
+                                    seconds=0.4)):
+        tb = build_tables(h, latency_oracle=_tiny_oracle(), params=params,
+                          probe_config=cfg)
+    assert tb.stats.num_probe_retries >= 1     # the straggler retried fast
+    assert tb.stats.num_quarantined == 0
+    assert tb.provenance == {}
+
+
+def test_quarantine_disabled_propagates(host):
+    h, params = host
+    cfg = _fast_probe(retries=0, quarantine=False)
+    with faults.inject(faults.Fault("probe.time", "raise", times=99)):
+        with pytest.raises(faults.FaultError):
+            build_tables(h, latency_oracle=_tiny_oracle(), params=params,
+                         probe_config=cfg)
+
+
+@dataclasses.dataclass
+class _SpikyOracle(WallClockOracle):
+    """First measurement reports an outlier spread, later ones are calm —
+    deterministic trigger for the variance-based re-timing."""
+
+    def time_callable_stats(self, fn, *, warmup=None):
+        med, _ = super().time_callable_stats(fn, warmup=warmup)
+        n = self.__dict__["_n"] = self.__dict__.get("_n", 0) + 1
+        return med, (10.0 if n == 1 else 0.0)
+
+
+def test_outlier_spread_triggers_retiming_with_provenance(host, tmp_path):
+    h, params = host
+    oracle = _SpikyOracle(warmup=1, iters=2, groups=1)
+    tb = build_tables(h, latency_oracle=oracle, params=params,
+                      probe_config=_fast_probe(outlier_rel_spread=1.0),
+                      cache_dir=str(tmp_path), prune=False)
+    assert tb.stats.num_retimed == 1
+    assert PROBE_RETIMED in set(tb.provenance.values())
+    # provenance flags survive the content-addressed cache round trip
+    warm = build_tables(h, latency_oracle=_SpikyOracle(warmup=1, iters=2,
+                                                       groups=1),
+                        params=params,
+                        probe_config=_fast_probe(outlier_rel_spread=1.0),
+                        cache_dir=str(tmp_path), prune=False)
+    assert warm.stats.cache_hit
+    assert warm.provenance == tb.provenance
+
+
+def test_quarantine_provenance_survives_artifact_roundtrip(host, tmp_path):
+    """ISSUE acceptance: quarantined-bucket flags must ride the plan all
+    the way into the published artifact's meta."""
+    h, params = host
+    cfg = _fast_probe(timeout_s=1e-9, retries=0)
+    res = compress(h, budget_ratio=1.0, P=100,
+                   latency_oracle=_tiny_oracle(), params=params,
+                   probe_config=cfg)
+    assert res is not None and len(res.tables.provenance) > 0
+    path = str(tmp_path / "flagged.npz")
+    res.save(path)
+    art = runtime.load(path)
+    prov = art.meta["probe_provenance"]
+    assert len(prov) == len(res.tables.provenance)
+    assert all(p["flag"] == PROBE_QUARANTINED for p in prov)
+    assert PROBE_MEASURED not in {p["flag"] for p in prov}
+
+
+# ---------------------------------------------------------------------------
+# Self-healing stores — quarantine-on-load
+# ---------------------------------------------------------------------------
+
+def test_corrupt_table_cache_quarantined_and_rebuilt(host, tmp_path):
+    h, params = host
+    build_tables(h, params=params, cache_dir=str(tmp_path))
+    key = table_cache.cache_key(h, AnalyticTPUOracle(), "layermerge",
+                                "magnitude")
+    path = tmp_path / f"tables_{key}.json"
+    path.write_text(path.read_text()[:40])     # truncated cache file
+    again = build_tables(h, params=params, cache_dir=str(tmp_path))
+    assert not again.stats.cache_hit           # miss, not a crash
+    assert (tmp_path / f"tables_{key}.json.corrupt").exists()
+    healed = build_tables(h, params=params, cache_dir=str(tmp_path))
+    assert healed.stats.cache_hit              # rebuild re-published
+
+
+def test_corrupt_artifact_quarantined_with_hint(host, tmp_path):
+    h, params = host
+    res = compress(h, budget_ratio=1.0, P=100, params=params)
+    path = str(tmp_path / "model.npz")
+    res.save(path)
+    raw = open(path, "rb").read()
+    open(path, "wb").write(raw[: len(raw) // 3])
+    with pytest.raises(runtime.ArtifactError, match="quarantined"):
+        runtime.load(path)
+    assert os.path.exists(path + ".corrupt")
+    assert not os.path.exists(path)            # read path is clear again
+    res.save(path)                             # recovery: re-publish
+    assert runtime.load(path).plan == res.plan
+
+
+# ---------------------------------------------------------------------------
+# AsyncCheckpointer context manager
+# ---------------------------------------------------------------------------
+
+def test_async_checkpointer_context_flushes_on_exit(tmp_path):
+    d = str(tmp_path / "ckpt")
+    with ckpt.AsyncCheckpointer(d) as c:
+        c.save(1, {"w": np.ones((3,), np.float32)})
+    assert ckpt.latest_step(d) == 1            # joined, no .wait() needed
+
+
+def test_async_checkpointer_context_flushes_on_exception(tmp_path):
+    d = str(tmp_path / "ckpt")
+    with pytest.raises(RuntimeError, match="body"):
+        with ckpt.AsyncCheckpointer(d) as c:
+            c.save(2, {"w": np.zeros((3,), np.float32)})
+            raise RuntimeError("body failed")
+    assert ckpt.latest_step(d) == 2            # save landed anyway
+
+
+# ---------------------------------------------------------------------------
+# The real thing: hard os._exit mid-build in a child process
+# ---------------------------------------------------------------------------
+
+def test_kill_resume_smoke_subprocess():
+    """Run the verify.sh smoke in-process: child dies with exit 17 at the
+    4th journaled bucket, parent resumes bit-identically."""
+    out = faults.kill_resume_smoke(kill_at_bucket=4)
+    assert out["bit_identical"]
+    assert out["journal_hits_on_resume"] >= 3
+
+
+def test_faults_cli_smoke_flag():
+    env = {"PYTHONPATH": "src", "PATH": os.environ.get("PATH", ""),
+           "JAX_PLATFORMS": "cpu"}
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.testing.faults", "--smoke"],
+        capture_output=True, text=True, env=env, cwd="/root/repo",
+        timeout=600)
+    assert "FAULT_SMOKE_OK" in r.stdout, r.stdout + r.stderr

@@ -95,3 +95,128 @@ def test_prompt_glue():
     assert serving.decode_tok_s(10, 4, 0.0) > 0          # no div-by-zero
     tok = serving.greedy_token(jnp.asarray([[[0.0, 2.0, 1.0]]]))
     assert tok.shape == (1,) and int(tok[0]) == 1
+
+
+# ---------------------------------------------------------------------------
+# Scheduler edge cases — must return cleanly, not rely on untested paths
+# ---------------------------------------------------------------------------
+
+def _mk(cfg):
+    return lambda b, s: T.init_cache(cfg, b, s)
+
+
+def test_zero_prompts_returns_empty(lm):
+    cfg, params, step = lm
+    out = serving.serve_requests(step, params, _mk(cfg), [], tokens=4)
+    gen, secs = out                                      # still unpacks
+    assert gen.shape == (0, 4)
+    assert secs >= 0.0
+    assert out.report.ok and out.report.rounds == 0
+
+
+def test_prompt_longer_than_pad_window_rejected(lm):
+    """A prompt that exceeds the pinned pad window must raise up front —
+    silently truncating it would serve a different request."""
+    cfg, params, step = lm
+    rng = np.random.RandomState(4)
+    prompts = [jnp.asarray(rng.randint(0, cfg.vocab_size, size=n), jnp.int32)
+               for n in (3, 12)]
+    with pytest.raises(ValueError, match="longest"):
+        serving.pad_prompts(prompts, pad_to=8)
+    # served with an adequate window, the long prompt round-trips exactly
+    mat, lens = serving.pad_prompts(prompts, pad_to=12)
+    gen, _ = serving.serve_requests(step, params, _mk(cfg), mat, lens,
+                                    tokens=4, slots=2)
+    _, _, _, solo = serving.serve_loop(
+        step, params, T.init_cache(cfg, 1, 16), prompts[1][None, :], 4)
+    np.testing.assert_array_equal(np.asarray(gen[1]), np.asarray(solo[0]))
+
+
+def test_all_slots_retired_early(lm):
+    """Fewer requests than slots: the round pads with filler, retires
+    every real request in one pass, and reports them all completed."""
+    cfg, params, step = lm
+    prompts = [serving.random_prompts(5, 1, 6, cfg.vocab_size)[0]]
+    out = serving.serve_requests(step, params, _mk(cfg), prompts,
+                                 tokens=5, slots=8)
+    gen, _ = out
+    assert gen.shape == (1, 5)
+    assert out.report.completed == [0] and out.report.rounds == 1
+
+
+# ---------------------------------------------------------------------------
+# Hardened serving — NaN slot abort, budgets, drain
+# ---------------------------------------------------------------------------
+
+def test_nan_slot_aborts_alone_others_token_identical(lm):
+    """ISSUE acceptance: poisoning one slot's logits mid-decode retires
+    that slot (zeroed from the failure index) while every other request
+    is TOKEN-IDENTICAL to the fault-free run."""
+    from repro.testing import faults
+
+    cfg, params, step = lm
+    N = 6
+    prompt = serving.random_prompts(7, 4, 5, cfg.vocab_size)
+    lens = jnp.full((4,), 5, jnp.int32)
+    clean, _ = serving.serve_requests(step, params, _mk(cfg), prompt, lens,
+                                      tokens=N, slots=4)
+    # scan step 6 = generation index 2 for length-5 prompts (first
+    # generated token is at step lengths-1 = 4)
+    hook = faults.nan_logits_hook(slot=1, step=6)
+    out = serving.serve_requests(step, params, _mk(cfg), prompt, lens,
+                                 tokens=N, slots=4, logit_hook=hook)
+    gen = out[0]
+    assert out.report.aborted == {1: 2}
+    assert sorted(out.report.completed) == [0, 2, 3]
+    for r in (0, 2, 3):                                  # bit-untouched
+        np.testing.assert_array_equal(np.asarray(gen[r]),
+                                      np.asarray(clean[r]))
+    np.testing.assert_array_equal(np.asarray(gen[1, :2]),
+                                  np.asarray(clean[1, :2]))
+    assert np.asarray(gen[1, 2:]).tolist() == [0] * (N - 2)
+
+
+def test_nan_during_prefill_aborts_whole_slot(lm):
+    from repro.testing import faults
+
+    cfg, params, step = lm
+    prompt = serving.random_prompts(8, 2, 5, cfg.vocab_size)
+    lens = jnp.full((2,), 5, jnp.int32)
+    hook = faults.nan_logits_hook(slot=0, step=1)        # teacher-forcing
+    out = serving.serve_requests(step, params, _mk(cfg), prompt, lens,
+                                 tokens=4, slots=2, logit_hook=hook)
+    assert out.report.aborted == {0: 0}                  # clipped to 0
+    assert np.asarray(out[0][0]).tolist() == [0, 0, 0, 0]
+
+
+def test_token_budget_caps_generation(lm):
+    cfg, params, step = lm
+    prompt = serving.random_prompts(9, 3, 6, cfg.vocab_size)
+    lens = jnp.full((3,), 6, jnp.int32)
+    full, _ = serving.serve_requests(step, params, _mk(cfg), prompt, lens,
+                                     tokens=6, slots=3)
+    out = serving.serve_requests(step, params, _mk(cfg), prompt, lens,
+                                 tokens=6, slots=3, token_budget=3)
+    gen, _ = out
+    assert gen.shape == (3, 3)
+    assert out.report.tokens_per_request == 3
+    # greedy decode is prefix-stable: the capped run is the full run's prefix
+    np.testing.assert_array_equal(np.asarray(gen), np.asarray(full[:, :3]))
+
+
+def test_time_budget_drains_cleanly(lm):
+    cfg, params, step = lm
+    prompt = serving.random_prompts(10, 3, 5, cfg.vocab_size)
+    lens = jnp.full((3,), 5, jnp.int32)
+    out = serving.serve_requests(step, params, _mk(cfg), prompt, lens,
+                                 tokens=4, slots=1, warm=False,
+                                 time_budget_s=0.0)
+    gen, _ = out
+    assert gen.shape == (3, 4)                           # shape preserved
+    assert out.report.deadline_hit
+    assert out.report.unserved == [0, 1, 2]
+    assert np.asarray(gen).tolist() == [[0] * 4] * 3
+    # a generous budget admits everything
+    ok = serving.serve_requests(step, params, _mk(cfg), prompt, lens,
+                                tokens=4, slots=1, time_budget_s=60.0)
+    assert ok.report.ok and ok.report.rounds == 3
