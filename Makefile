@@ -5,7 +5,7 @@ PY := python
 ENV := JAX_PLATFORMS=cpu PYTHONPATH=src
 
 .PHONY: verify test bench bench-dp bench-tables bench-serve bench-smoke \
-	fault-smoke
+	fault-smoke serve-fault-smoke
 
 verify:
 	bash scripts/verify.sh
@@ -40,3 +40,10 @@ bench-smoke:
 # tables to be bit-identical to an uninterrupted build.
 fault-smoke:
 	$(ENV) $(PY) -m repro.testing.faults --smoke
+
+# Overload-safety gate (also part of `make verify`): the continuous
+# serve engine under a REPRO_FAULTS delayed-arrival + per-request NaN +
+# straggler-chunk spec — dispositions asserted, surviving requests
+# bit-identical to the fault-free run.
+serve-fault-smoke:
+	$(ENV) $(PY) -m repro.testing.faults --serve-smoke

@@ -11,7 +11,11 @@ both stacks:
   dispatch-bound reference;
 * the jitted chunked-prefill + ``lax.scan`` decode loop;
 * the fixed-slot batched scheduler (``serve_requests``) over many
-  concurrent ragged prompts, batched vs served one prompt at a time.
+  concurrent ragged prompts, batched vs served one prompt at a time;
+* the continuous-batching engine (``serve_continuous``) under a seeded
+  Poisson arrival trace (``--trace poisson --rate R`` requests/s) —
+  per-request latency p50/p99 (submission → retirement, queueing
+  included) and sustained tok/s across the whole trace.
 
 Writes ``results/BENCH_serve.json`` with throughput for every protocol
 plus ``mesh_info`` when ``--mesh`` shards the run over the host devices
@@ -20,12 +24,13 @@ plus ``mesh_info`` when ``--mesh`` shards the run over the host devices
 CPU).
 
   PYTHONPATH=src python -m benchmarks.bench_serve [--smoke] [--mesh]
-      [--model-par K] [--out PATH]
+      [--model-par K] [--trace poisson] [--rate R] [--out PATH]
 
 ``--smoke`` (wired into ``make verify`` via scripts/verify.sh) runs the
 correctness gates in seconds: artifact round-trip + fingerprint
 stability, compressed decode ≡ compressed prefill (KV-cache parity),
-scan-loop ≡ per-token-loop token ids, a genuinely shallower unit chain
+scan-loop ≡ per-token-loop token ids, continuous engine ≡ fixed-slot
+scheduler ids under the arrival trace, a genuinely shallower unit chain
 — and with ``--mesh`` additionally sharded-executor ≡ single-device
 logits — so serving-path regressions fail ``make verify`` even where
 timing is meaningless.
@@ -133,6 +138,52 @@ def _batched_report(step, params, make_cache, cfg, N, slots, n_prompts,
     }
 
 
+def _continuous_report(step, params, make_cache, cfg, N, slots, n_prompts,
+                       rules, trace, rate):
+    """Continuous-batching engine under a seeded arrival trace.
+
+    ``trace='poisson'`` draws inter-arrival gaps from a seeded
+    exponential (rate ``rate`` requests/s) so the run replays exactly;
+    ``trace='none'`` submits everything up front.  Latency is
+    submission → retirement per request (queueing included), reported
+    as p50/p99; ``sustained_tok_s`` counts every retired token over the
+    whole trace's wall clock.  When unsharded, the engine's ids are
+    gated bit-identical against the fixed-slot scheduler: mid-stream
+    admission into vacated slots must not change greedy generations.
+    """
+    mat, lens = serving.pad_prompts(
+        serving.ragged_prompts(7, n_prompts, 4, 16, cfg.vocab_size))
+    arrivals = None
+    if trace == "poisson":
+        rng = np.random.RandomState(11)
+        arrivals = [float(a) for a in
+                    np.cumsum(rng.exponential(1.0 / rate, size=n_prompts))]
+    gen_c, sec_c = out = serving.serve_continuous(
+        step, params, make_cache, mat, lens, tokens=N, slots=slots,
+        rules=rules, arrivals=arrivals)
+    rep = out.report
+    assert rep.ok and len(rep.completed) == n_prompts, \
+        f"trace leg must complete every request: {rep.dispositions}"
+    if rules is None:
+        gen_f, _ = serving.serve_requests(
+            step, params, make_cache, mat, lens, tokens=N, slots=slots,
+            rules=rules)
+        assert np.array_equal(np.asarray(gen_c), np.asarray(gen_f)), \
+            "continuous engine must reproduce the fixed scheduler's ids"
+    lat = sorted(rep.latency_s.values())
+    return {
+        "prompts": n_prompts, "slots": slots, "tokens": N,
+        "trace": trace,
+        "rate_req_s": rate if trace == "poisson" else None,
+        "seconds": sec_c,
+        "sustained_tok_s": rep.sustained_tok_s,
+        "latency_p50_s": float(np.percentile(lat, 50)),
+        "latency_p99_s": float(np.percentile(lat, 99)),
+        "queue_peak": rep.queue_peak,
+        "admitted": rep.admitted,
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -147,6 +198,11 @@ def main(argv=None):
     ap.add_argument("--tokens", type=int, default=None)
     ap.add_argument("--prompts", type=int, default=None,
                     help="ragged prompts for the batched-scheduler leg")
+    ap.add_argument("--trace", choices=["none", "poisson"],
+                    default="poisson",
+                    help="arrival trace for the continuous-engine leg")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="Poisson arrival rate in requests/s")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), os.pardir, "results",
         "BENCH_serve.json"))
@@ -197,6 +253,16 @@ def main(argv=None):
     batched = _batched_report(step_c, gp, ex.init_cache, cfg, N, B, R,
                               rules)
 
+    # continuous-batching engine under the seeded arrival trace — the
+    # engine vmaps the per-slot step over a slot-stacked cache and is
+    # certified on a single device; the sharded run keeps the fixed
+    # scheduler above, so this leg is skipped under --mesh
+    continuous = None
+    if rules is None:
+        rate = args.rate or (16.0 if args.smoke else 8.0)
+        continuous = _continuous_report(step_c, gp, ex.init_cache, cfg, N,
+                                        B, R, rules, args.trace, rate)
+
     # KV-cache parity gate: decode through the whole prompt ≡ parallel
     # prefill at the last position (under the mesh when --mesh)
     batch = {"tokens": prompt,
@@ -233,6 +299,7 @@ def main(argv=None):
         "original": orig,
         "compressed": comp,
         "batched": batched,
+        "continuous": continuous,
         "measured_decode_speedup":
             orig["decode_s"] / max(comp["decode_s"], 1e-9),
         "jit_loop_speedup_compressed": comp["jit_loop_speedup"],

@@ -4,6 +4,10 @@ Serves through the shared protocol in :mod:`repro.runtime.serving`:
 prefill is one jitted chunked call, decode one jitted ``lax.scan``, and
 ``--prompts R`` pushes R ragged prompts through the fixed-slot batched
 scheduler (``serve_requests``) — the production shape of the serve path.
+Adding ``--continuous`` serves the same prompts through the overload-safe
+continuous-batching engine under a seeded Poisson arrival trace
+(``--rate`` requests/s) and prints each request's disposition and
+latency — mid-stream admission does not change the greedy ids.
 
 With ``--artifact`` the example serves a LayerMerge-COMPRESSED model: it
 loads a portable merged-model artifact (written by ``python -m
@@ -50,6 +54,11 @@ def main():
     ap.add_argument("--prompts", type=int, default=0,
                     help="also serve N ragged prompts through the "
                          "fixed-slot batched scheduler")
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve the --prompts trace through the "
+                         "continuous-batching engine (Poisson arrivals)")
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="arrival rate (requests/s) for --continuous")
     ap.add_argument("--mesh", action="store_true",
                     help="shard over the host devices (data × model)")
     ap.add_argument("--model-par", type=int, default=1)
@@ -130,6 +139,28 @@ def main():
         print(f"[serve_lm] scheduler: {args.prompts} ragged prompts in "
               f"{B}-slot rounds → {secs*1e3:.1f} ms ({btps:.0f} tok/s)")
         print(f"[serve_lm] slot-0 continuation ids: {gen[0, :12].tolist()}")
+        if args.continuous:
+            import numpy as np
+
+            rng = np.random.RandomState(11)
+            arrivals = [float(a) for a in np.cumsum(
+                rng.exponential(1.0 / args.rate, size=args.prompts))]
+            cgen, csecs = cout = serving.serve_continuous(
+                bstep, bparams, mkcache, mat, lens, tokens=args.tokens,
+                slots=B, rules=rules, arrivals=arrivals)
+            rep = cout.report
+            print(f"[serve_lm] continuous: {args.prompts} requests, "
+                  f"Poisson rate {args.rate:g}/s, {B} slots → "
+                  f"{csecs*1e3:.1f} ms wall "
+                  f"({rep.sustained_tok_s:.0f} sustained tok/s, "
+                  f"queue peak {rep.queue_peak})")
+            for rid in sorted(rep.dispositions):
+                lat = rep.latency_s.get(rid)
+                lat_ms = "-" if lat is None else f"{lat*1e3:7.1f} ms"
+                print(f"[serve_lm]   request {rid}: "
+                      f"{rep.dispositions[rid]:<13s} latency {lat_ms}")
+            same = bool(np.array_equal(np.asarray(cgen), np.asarray(gen)))
+            print(f"[serve_lm] continuous ids == scheduler ids: {same}")
     print(f"[serve_lm] sample continuation ids: {seqs[0, :12].tolist()}")
 
 

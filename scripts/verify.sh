@@ -40,4 +40,7 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 echo "== fault-injection smoke (SIGKILL mid-build, resume bit-identical) =="
 python -m repro.testing.faults --smoke > /dev/null
 
+echo "== serve fault smoke (continuous engine: NaN + straggler, exact) =="
+python -m repro.testing.faults --serve-smoke > /dev/null
+
 echo "verify: OK"

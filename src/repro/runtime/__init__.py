@@ -20,9 +20,13 @@ plan is frozen:
   consumer (serving, benchmarks, fine-tuning) loads the same certified
   object: ``CompressResult.save(path)`` / ``runtime.load(path)``.
 * :mod:`repro.runtime.serving` — the jitted serve protocol: chunked
-  prefill + ``lax.scan`` greedy decode (:func:`serve_loop`) and a
+  prefill + ``lax.scan`` greedy decode (:func:`serve_loop`), a
   fixed-slot batched request scheduler (:func:`serve_requests`) that
-  runs ragged prompt batches through ONE fused prefill+decode scan.
+  runs ragged prompt batches through ONE fused prefill+decode scan, and
+  the continuous-batching engine (:class:`ContinuousEngine` /
+  :func:`serve_continuous`): per-slot generation state vmapped through a
+  jitted multi-slot chunk, mid-stream admission into vacated slots, and
+  individual retirement on EOS / budget / deadline / NaN-abort.
 
 **The logical-axis contract.**  Artifacts carry their sharding as data:
 every unit record (and the graph) ships an ``axes`` map {param keypath →
@@ -51,9 +55,23 @@ failure contract is explicit:
 * ``serve_requests`` degrades per-request, never per-process: a slot
   whose logits go non-finite is aborted at that token (other slots of
   the round are bit-untouched), per-request token and wall-clock
-  budgets bound runaway work, and on a blown deadline the scheduler
+  budgets bound runaway work — the wall-clock deadline is enforced per
+  decode chunk, not per round — and on a blown deadline the scheduler
   drains cleanly.  The return still unpacks as ``(gen, seconds)``; the
   per-request outcome lives on ``.report`` (:class:`ServeReport`).
+* The continuous engine adds the overload contract on top: every
+  request ends in exactly one disposition
+  (:data:`repro.runtime.serving.DISPOSITIONS` — ``completed`` /
+  ``aborted`` / ``shed`` / ``deadline_miss`` / ``unserved``).  The
+  admission queue is bounded and **sheds** up front — on overflow, or
+  when the deadline-aware shedder predicts (from the EWMA sustained
+  decode rate) that a request cannot finish by its deadline — rather
+  than admitting work it will half-serve.  A slot that NaN-aborts
+  ``slot_nan_limit`` times is quarantined (circuit breaker: the
+  poisoned request is reported, never silently re-queued), and
+  shutdown **drains**: in-flight requests finish, waiting ones come
+  back ``unserved``.  Per-request latency, queue high-water mark, and
+  sustained tok/s land on the same :class:`ServeReport`.
 * Table builds journal their probes and resume bit-identically — that
   half of the contract is documented in :mod:`repro.core.table_cache`.
 """
@@ -61,24 +79,26 @@ from .artifact import (ArtifactError, CompressedArtifact, fingerprint, load,
                        save)
 from .executor import (GraphExecutor, cache_shardings, execute,
                        graph_shardings, init_cache, decode_step, jit_apply,
-                       make_serve_step, run_units)
+                       make_serve_step, run_units, slot_state)
 from .ir import (AttnUnit, ConvUnit, LowRankUnit, PoolUnit, SublayerUnit,
                  UnitGraph, UpsampleUnit, annotate_axes, bind_params,
                  graph_axes, graph_params)
-from .serving import (ServeOutput, ServeReport, decode_tok_s,
-                      generate_fused, greedy_token, pad_prompts,
-                      ragged_prompts, random_prompts, serve_loop,
-                      serve_loop_pertoken, serve_requests)
+from .serving import (DISPOSITIONS, ContinuousEngine, ServeOutput,
+                      ServeReport, decode_tok_s, generate_fused,
+                      greedy_token, pad_prompts, ragged_prompts,
+                      random_prompts, serve_continuous, serve_loop,
+                      serve_loop_pertoken, serve_requests, stack_cache)
 
 __all__ = [
     "ArtifactError", "CompressedArtifact", "fingerprint", "load", "save",
     "GraphExecutor", "cache_shardings", "execute", "graph_shardings",
     "init_cache", "decode_step", "jit_apply", "make_serve_step",
-    "run_units",
+    "run_units", "slot_state",
     "AttnUnit", "ConvUnit", "LowRankUnit", "PoolUnit", "SublayerUnit",
     "UnitGraph", "UpsampleUnit", "annotate_axes", "bind_params",
     "graph_axes", "graph_params",
-    "ServeOutput", "ServeReport", "decode_tok_s", "generate_fused",
-    "greedy_token", "pad_prompts", "ragged_prompts", "random_prompts",
-    "serve_loop", "serve_loop_pertoken", "serve_requests",
+    "DISPOSITIONS", "ContinuousEngine", "ServeOutput", "ServeReport",
+    "decode_tok_s", "generate_fused", "greedy_token", "pad_prompts",
+    "ragged_prompts", "random_prompts", "serve_continuous", "serve_loop",
+    "serve_loop_pertoken", "serve_requests", "stack_cache",
 ]

@@ -14,7 +14,9 @@ Entry points:
 * :func:`execute` — full forward (CNN image / transformer prefill).
 * :func:`run_units` — a bare unit chain, no embed/head (segment probes).
 * :func:`init_cache` / :func:`decode_step` / :func:`make_serve_step` —
-  KV-cache-aware one-token decode for serving compressed transformers.
+  KV-cache-aware one-token decode for serving compressed transformers;
+  :func:`slot_state` stacks the per-unit cache into the per-slot state
+  the continuous serve engine vmaps over.
 * :func:`jit_apply` — jitted ``fn(params, inputs)`` with the graph's
   arrays exposed as a pytree (fine-tuning / sharding consumers).
 * :class:`GraphExecutor` — the mesh-aware serving entry point: resolves
@@ -292,6 +294,19 @@ def make_serve_step(graph: ir.UnitGraph):
     return step, params
 
 
+def slot_state(graph: ir.UnitGraph, slots: int, seq_len: int):
+    """Per-slot decode state for the continuous serve engine.
+
+    One fresh single-request cache (:func:`init_cache` with batch 1)
+    stacked so every leaf gains a leading ``(slots,)`` axis — including
+    each attention cache's scalar ``pos``, which is what lets every slot
+    advance its own sequence position independently under the engine's
+    vmapped chunk step (see :func:`repro.runtime.serving.stack_cache`).
+    """
+    from .serving import stack_cache
+    return stack_cache(init_cache(graph, 1, seq_len), slots)
+
+
 # ---------------------------------------------------------------------------
 # Mesh-aware execution (sharded serving)
 # ---------------------------------------------------------------------------
@@ -367,3 +382,17 @@ class GraphExecutor:
         """
         step, _ = make_serve_step(self.graph)
         return step, self.params
+
+    def continuous_engine(self, *, slots: int, max_seq: int, **kw):
+        """A :class:`repro.runtime.serving.ContinuousEngine` over this
+        graph: mid-stream admission/retirement with per-slot failure
+        isolation, using the executor's params and cache constructor.
+        Keyword extras (``chunk``, ``eos_id``, ``max_queue``,
+        ``slot_nan_limit``, ``clock``, ...) pass through.  Certified on
+        a single device; under a mesh prefer the fixed scheduler.
+        """
+        from .serving import ContinuousEngine
+        step, params = self.serve_step()
+        return ContinuousEngine(
+            step, params, lambda b, s: init_cache(self.graph, b, s),
+            slots=slots, max_seq=max_seq, rules=self.rules, **kw)

@@ -7,7 +7,7 @@ compressed executor (:func:`repro.runtime.executor.make_serve_step` /
 ``benchmarks/bench_serve.py`` measure exactly the same thing for both
 stacks.
 
-Three layers, each built on the one below:
+Four layers, each built on the one below:
 
 * :func:`serve_loop` — single-batch prefill + greedy decode.  Prefill is
   ONE jitted chunked call (a ``lax.scan`` over the prompt — not a Python
@@ -24,30 +24,72 @@ Three layers, each built on the one below:
   ever entering a KV cache (exactness is tested against single-prompt
   serving).
 * :func:`serve_requests` — the fixed-size slot scheduler: admit up to
-  ``slots`` prompts per round into a padded batch, run the fused scan,
-  retire the round, admit the next.  Under a mesh the slot axis is the
-  'data' axis — many concurrent prompts decode data-parallel.
+  ``slots`` prompts per round into a padded batch, run the fused scan
+  (as equal-length jitted segments so the wall-clock deadline is
+  enforced *per decode chunk*, not per round), retire the round, admit
+  the next.  Under a mesh the slot axis is the 'data' axis — many
+  concurrent prompts decode data-parallel.
+* :class:`ContinuousEngine` / :func:`serve_continuous` — the
+  continuous-batching engine: per-slot generation state (sequence
+  position, remaining prompt, token budget, deadline) is carried
+  through a jitted *vmapped* multi-slot chunk step, and a host-driven
+  dispatch loop admits new requests into vacated slots **mid-stream**
+  (the admitted slot chunk-prefills while live slots keep decoding) and
+  retires slots individually on EOS / token budget / deadline /
+  NaN-abort — no round barrier.  Each slot's KV cache carries its OWN
+  scalar position, so a slot's tokens are independent of when its
+  neighbours were admitted: the engine is certified token-identical to
+  single-prompt serving under arbitrary arrival traces.
 
 Every entry point takes ``rules=`` (a :class:`ShardingRules`) and traces
 under it, so the same code serves one CPU device and a sharded mesh.
+(The continuous engine accepts ``rules=`` but its exactness bar is
+certified on a single device; under a mesh prefer ``serve_requests``.)
 
 Failure semantics (the serving half of the crash-safety contract):
 
-* **Non-finite guard** — the fused scan tracks, per slot, the first step
-  whose logits went non-finite; that slot is *aborted* (its tokens from
-  the failure on are deterministically zeroed, its greedy feedback is
-  pinned so no NaN-argmax garbage re-enters the cache) while every other
-  slot is bit-untouched — slots are batch-independent, so one poisoned
+* **Non-finite guard** — the scan tracks, per slot, the first step whose
+  logits went non-finite; that slot is *aborted* (its tokens from the
+  failure on are deterministically zeroed, its greedy feedback is pinned
+  so no NaN-argmax garbage re-enters the cache) while every other slot
+  is bit-untouched — slots are batch-independent, so one poisoned
   request can never corrupt its round.
-* **Budgets** — ``serve_requests`` accepts a per-request token budget
-  (caps generated tokens) and a wall-clock budget; when the deadline
-  passes, the scheduler **drains cleanly**: in-flight rounds retire
-  normally, no new round is admitted, and never-admitted requests come
-  back zeroed and named in the report.
-* **Reporting** — ``serve_requests`` still unpacks as ``(gen, seconds)``
-  (the return is a tuple subclass) but carries a :class:`ServeReport`
-  on ``.report``: which requests completed / aborted (and at which
-  token) / were never admitted.
+* **Budgets and deadlines** — both engines accept a per-request token
+  budget and a wall-clock budget.  ``serve_requests`` checks the
+  deadline after every ``deadline_chunk`` decode steps (not only
+  between rounds): a deadline hit mid-round retires the partial round —
+  slots whose generation was cut short get a ``deadline_miss``
+  disposition with the tokens generated so far, never-admitted requests
+  come back zeroed and ``unserved``.  The continuous engine additionally
+  honours *per-request* deadlines (``deadline_s`` relative to arrival).
+* **Load shedding** — the continuous engine's admission queue is
+  bounded (``max_queue``); an arrival that would overflow it, or whose
+  deadline cannot be met at the current sustained decode rate (EWMA of
+  steps/s), is rejected up front with a ``shed`` disposition instead of
+  being admitted and half-served.  With no rate estimate yet the engine
+  admits optimistically.
+* **Circuit breakers** — a slot that NaN-aborts ``slot_nan_limit``
+  times is *quarantined*: it is never refilled, its id lands in
+  ``report.quarantined_slots``, and if every slot is quarantined the
+  remaining requests are reported ``unserved`` rather than retried
+  forever.
+* **Drain** — on a wall-clock budget hit (or an explicit
+  :meth:`ContinuousEngine.drain`) the engine finishes every in-flight
+  request, admits nothing new, and reports the still-waiting ones
+  ``unserved``.
+* **Reporting** — both engines still unpack as ``(gen, seconds)`` (the
+  return is a tuple subclass) but carry a :class:`ServeReport` on
+  ``.report``: one disposition per request (:data:`DISPOSITIONS` —
+  ``completed`` / ``aborted`` / ``shed`` / ``deadline_miss`` /
+  ``unserved``), per-request latency, queue high-water mark, and the
+  sustained decode rate.
+
+Deterministic fault hooks (:mod:`repro.testing.faults`): the continuous
+engine calls ``hit('serve.arrival')`` per ingested arrival,
+``hit('serve.admit')`` per slot admission, and ``hit('serve.chunk')``
+before every chunk dispatch (``delay`` rules there model stragglers);
+declarative ``nan@serve.nan:rid=R,t=G`` rules poison request ``R``'s
+logits at generation index ``G`` inside the jitted chunk.
 
 The greedy-argmax / prompt-encoding glue the example and the bench used
 to duplicate lives here too: :func:`greedy_token`, :func:`random_prompts`,
@@ -60,9 +102,11 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.sharding.rules import use_rules
+from repro.testing import faults as _faults
 
 
 # ---------------------------------------------------------------------------
@@ -85,8 +129,6 @@ def ragged_prompts(seed: int, n: int, min_len: int, max_len: int,
     """``n`` random prompts of random lengths in ``[min_len, max_len]`` —
     the scheduler-workload encoding (list of 1-D int32 id arrays; feed
     through :func:`pad_prompts`)."""
-    import numpy as np
-
     if not 1 <= min_len <= max_len:
         raise ValueError(f"need 1 <= min_len <= max_len, got "
                          f"[{min_len}, {max_len}]")
@@ -256,8 +298,37 @@ def generate_fused(step, params, cache, prompts, lengths, tokens: int, *,
     return jnp.where(keep, gen, 0), cache, fail_idx
 
 
+def _make_segment_fn(step, logit_hook):
+    """The fused prefill+decode scan, cut into equal-length segments.
+
+    Same per-step math as :func:`generate_fused` (teacher-force while
+    ``t < lengths``, pinned greedy feedback on non-finite logits), but
+    callable segment by segment: carry ``(prev, cache)`` lives on the
+    host between calls, ``tsteps`` carries the *global* step indices of
+    the segment so ``t < lengths`` and the ``logit_hook`` see exactly
+    the indices the single-scan program would.  One compiled program
+    serves every segment of every round (step indices are runtime data).
+    """
+    def seg_fn(params, cache, prev, feed, lengths, tsteps):
+        def body(carry, xs):
+            prev, cache = carry
+            tok_t, t = xs
+            inp = jnp.where(t < lengths, tok_t, prev)
+            logits, cache = step(params, cache, {"tokens": inp[:, None]})
+            if logit_hook is not None:
+                logits = logit_hook(logits, t)
+            ok = jnp.isfinite(logits).all(
+                axis=tuple(range(1, logits.ndim)))         # (B,)
+            nxt = jnp.where(ok, greedy_token(logits), 0)
+            return (nxt, cache), (nxt, ok)
+        (prev, cache), (samples, ok) = lax.scan(
+            body, (prev, cache), (feed, tsteps))
+        return prev, cache, samples, ok                    # samples (seg, B)
+    return jax.jit(seg_fn)
+
+
 # ---------------------------------------------------------------------------
-# Fixed-slot batched request scheduler
+# Request encoding shared by both schedulers
 # ---------------------------------------------------------------------------
 
 def pad_prompts(prompts, pad_to: int | None = None):
@@ -278,9 +349,28 @@ def pad_prompts(prompts, pad_to: int | None = None):
     return mat, lengths
 
 
+def _normalize_requests(prompts, lengths):
+    """``(prompts (R, P) int32, lengths (R,) int32)`` from either a padded
+    matrix + lengths or a list of 1-D prompts (zero requests OK)."""
+    if lengths is None:
+        if getattr(prompts, "ndim", None) == 2:
+            # a padded matrix has no recoverable lengths — deriving them
+            # here would silently teacher-force pad tokens into caches
+            raise ValueError("pass lengths= with a padded (R, P) matrix "
+                             "(or pass the list of 1-D prompts)")
+        if len(prompts) == 0:              # zero requests: nothing to pad
+            return jnp.zeros((0, 1), jnp.int32), jnp.zeros((0,), jnp.int32)
+        prompts, lengths = pad_prompts(prompts)
+    return jnp.asarray(prompts, jnp.int32), jnp.asarray(lengths, jnp.int32)
+
+
+#: Every per-request outcome a :class:`ServeReport` can assign.
+DISPOSITIONS = ("completed", "aborted", "shed", "deadline_miss", "unserved")
+
+
 @dataclasses.dataclass
 class ServeReport:
-    """Per-request outcome accounting for one :func:`serve_requests` call.
+    """Per-request outcome accounting for one serve call.
 
     ``aborted`` maps a request index to the generation index at which its
     logits first went non-finite (its tokens are zeroed from there on);
@@ -288,6 +378,20 @@ class ServeReport:
     budget expired (their rows are all zeros); everything else
     ``completed`` normally.  ``tokens_per_request`` is the effective
     generation length after the token budget.
+
+    Overload-safety fields (all default-empty, so PR-6 callers keep
+    working):
+
+    * ``shed`` — requests rejected at admission (queue overflow, or the
+      deadline-aware load shedder predicted a miss); row all zeros.
+    * ``deadline_miss`` — requests admitted but cut short by a deadline:
+      request index → tokens actually generated (kept in the row).
+    * ``latency_s`` — arrival → finish wall clock per served request.
+    * ``queue_peak`` / ``admitted`` — admission-queue high-water mark
+      and total admissions (continuous engine).
+    * ``quarantined_slots`` — slots retired by the NaN circuit breaker.
+    * ``sustained_tok_s`` — generated tokens / serving wall clock.
+    * ``engine`` — ``"fixed"`` (round scheduler) or ``"continuous"``.
     """
 
     completed: list[int] = dataclasses.field(default_factory=list)
@@ -296,10 +400,29 @@ class ServeReport:
     rounds: int = 0
     tokens_per_request: int = 0
     deadline_hit: bool = False
+    shed: list[int] = dataclasses.field(default_factory=list)
+    deadline_miss: dict[int, int] = dataclasses.field(default_factory=dict)
+    latency_s: dict[int, float] = dataclasses.field(default_factory=dict)
+    queue_peak: int = 0
+    admitted: int = 0
+    quarantined_slots: list[int] = dataclasses.field(default_factory=list)
+    sustained_tok_s: float = 0.0
+    engine: str = "fixed"
 
     @property
     def ok(self) -> bool:
-        return not self.aborted and not self.unserved
+        return not (self.aborted or self.unserved or self.shed
+                    or self.deadline_miss or self.quarantined_slots)
+
+    @property
+    def dispositions(self) -> dict[int, str]:
+        """request index → one of :data:`DISPOSITIONS`."""
+        d: dict[int, str] = {r: "completed" for r in self.completed}
+        d.update({r: "aborted" for r in self.aborted})
+        d.update({r: "shed" for r in self.shed})
+        d.update({r: "deadline_miss" for r in self.deadline_miss})
+        d.update({r: "unserved" for r in self.unserved})
+        return d
 
 
 class ServeOutput(tuple):
@@ -314,18 +437,23 @@ class ServeOutput(tuple):
         return out
 
 
+# ---------------------------------------------------------------------------
+# Fixed-slot batched request scheduler (round barrier, per-chunk deadline)
+# ---------------------------------------------------------------------------
+
 def serve_requests(step, params, make_cache, prompts, lengths=None, *,
                    tokens: int, slots: int | None = None, rules=None,
                    warm: bool = True, token_budget: int | None = None,
-                   time_budget_s: float | None = None, logit_hook=None):
+                   time_budget_s: float | None = None, logit_hook=None,
+                   deadline_chunk: int = 8, clock=None):
     """Serve many prompts through fixed-size slot batching.
 
     ``prompts``: ``(R, P)`` padded ids (or a list of 1-D id arrays, in
     which case ``lengths`` is derived).  Up to ``slots`` prompts are
-    admitted per round into a padded batch; one jitted
-    :func:`generate_fused` program serves every round (short final
-    rounds re-admit slot 0's prompt as filler and drop the duplicate
-    results), then the round retires and the next is admitted.
+    admitted per round into a padded batch; one jitted fused
+    prefill+decode scan serves every round (short final rounds re-admit
+    slot 0's prompt as filler and drop the duplicate results), then the
+    round retires and the next is admitted.
     ``make_cache(batch_size, seq_len)`` builds a fresh per-round cache.
 
     Under mesh ``rules`` the slot axis is the 'data' mesh axis — rounds
@@ -338,25 +466,24 @@ def serve_requests(step, params, make_cache, prompts, lengths=None, *,
 
     Hardening: ``token_budget`` caps generated tokens per request
     (``T = min(tokens, token_budget)``); ``time_budget_s`` bounds the
-    measured serving wall clock — once exceeded, the scheduler drains
-    cleanly (the in-flight round retires, no new round is admitted,
-    never-admitted requests come back zeroed and listed in
-    ``report.unserved``).  A slot whose logits go non-finite is aborted
-    at that token (see :func:`generate_fused`) and recorded in
-    ``report.aborted``; the other slots of its round are bit-untouched.
-    ``logit_hook`` is threaded into the fused scan (fault injection).
+    measured serving wall clock and is enforced **per decode chunk**:
+    with a budget set, each round runs as equal ``deadline_chunk``-step
+    jitted segments with a host deadline check between them, so a long
+    round cannot blow past the budget by more than one chunk.  On a
+    deadline hit the scheduler drains cleanly — the in-flight round
+    stops at its current chunk (slots whose generation was cut short are
+    recorded in ``report.deadline_miss`` with their token counts, their
+    rows keep the tokens generated so far; slots that had already
+    finished complete normally) and never-admitted requests come back
+    zeroed and listed in ``report.unserved``.  A slot whose logits go
+    non-finite is aborted at that token (see :func:`generate_fused`) and
+    recorded in ``report.aborted``; the other slots of its round are
+    bit-untouched.  ``logit_hook`` is threaded into the fused scan
+    (fault injection).  ``clock`` (default ``time.perf_counter``)
+    injects a virtual clock for deterministic deadline tests — e.g.
+    :class:`repro.testing.faults.TickClock`.
     """
-    if lengths is None:
-        if getattr(prompts, "ndim", None) == 2:
-            # a padded matrix has no recoverable lengths — deriving them
-            # here would silently teacher-force pad tokens into caches
-            raise ValueError("pass lengths= with a padded (R, P) matrix "
-                             "(or pass the list of 1-D prompts)")
-        if len(prompts) == 0:              # zero requests: nothing to pad
-            prompts = jnp.zeros((0, 1), jnp.int32)
-            lengths = jnp.zeros((0,), jnp.int32)
-        else:
-            prompts, lengths = pad_prompts(prompts)
+    prompts, lengths = _normalize_requests(prompts, lengths)
     R, P = prompts.shape
     eff_tokens = tokens if token_budget is None \
         else max(1, min(tokens, token_budget))
@@ -365,46 +492,575 @@ def serve_requests(step, params, make_cache, prompts, lengths=None, *,
         return ServeOutput(jnp.zeros((0, eff_tokens), jnp.int32), 0.0,
                            report)
     slots = min(slots or R, R)
+    clk = clock if clock is not None else time.perf_counter
 
-    fused = jax.jit(
-        lambda p, c, pr, ln: generate_fused(step, p, c, pr, ln, eff_tokens,
-                                            logit_hook=logit_hook,
-                                            with_report=True))
+    # One round = `steps` scan steps; with a wall-clock budget the round
+    # is cut into equal `seg`-step segments (padded with discarded tail
+    # steps) so ONE compiled program serves every segment and the host
+    # checks the deadline between segments.
+    steps = P + eff_tokens - 1
+    seg = steps if time_budget_s is None \
+        else max(1, min(deadline_chunk, steps))
+    nseg = -(-steps // seg)
+    pad_steps = nseg * seg
+    cache_len = P + eff_tokens + (pad_steps - steps)
+    seg_fn = _make_segment_fn(step, logit_hook)
+    tsteps = [jnp.arange(s * seg, (s + 1) * seg) for s in range(nseg)]
 
     def round_batch(start):
         # short final round: re-admit request 0 as filler, results dropped
         idx = [start + i if start + i < R else 0 for i in range(slots)]
         return prompts[jnp.asarray(idx)], lengths[jnp.asarray(idx)]
 
-    outs = []
-    fails = []                             # (start, n, fail_idx) per round
+    def round_feed(pr):
+        return jnp.pad(pr, ((0, 0), (0, pad_steps - P)))   # (slots, pad)
+
+    rounds_data = []                   # (start, n, ln, done, samples, oks)
+    deadline_hit = False
     with use_rules(rules):
         if warm:
             pr0, ln0 = round_batch(0)
-            jax.block_until_ready(
-                fused(params, make_cache(slots, P + eff_tokens), pr0, ln0))
-        t0 = time.perf_counter()
+            jax.block_until_ready(seg_fn(
+                params, make_cache(slots, cache_len),
+                jnp.zeros((slots,), jnp.int32),
+                round_feed(pr0)[:, :seg].T, ln0, tsteps[0]))
+        t0 = clk()
         for start in range(0, R, slots):
-            if time_budget_s is not None \
-                    and time.perf_counter() - t0 > time_budget_s:
+            if deadline_hit or (time_budget_s is not None
+                                and clk() - t0 > time_budget_s):
                 report.deadline_hit = True
                 report.unserved.extend(range(start, R))
-                outs.append(jnp.zeros((R - start, eff_tokens), jnp.int32))
                 break
             pr, ln = round_batch(start)
-            cache = make_cache(slots, P + eff_tokens)
-            gen, _, fail_idx = fused(params, cache, pr, ln)
+            feed = round_feed(pr)
+            cache = make_cache(slots, cache_len)
+            prev = jnp.zeros((slots,), jnp.int32)
+            samples, oks = [], []
+            executed = 0
+            for s in range(nseg):
+                prev, cache, sm, ok = seg_fn(
+                    params, cache, prev,
+                    feed[:, s * seg:(s + 1) * seg].T, ln, tsteps[s])
+                samples.append(sm)
+                oks.append(ok)
+                executed += seg
+                if time_budget_s is not None:
+                    jax.block_until_ready(sm)
+                    if clk() - t0 > time_budget_s and executed < pad_steps:
+                        deadline_hit = True
+                        break
             n = min(slots, R - start)
-            outs.append(gen[:n])
-            fails.append((start, n, fail_idx))
+            rounds_data.append((start, n, ln, min(executed, steps),
+                                samples, oks))
             report.rounds += 1
-        jax.block_until_ready(outs)
-        seconds = time.perf_counter() - t0
-    for start, n, fail_idx in fails:
-        fail_np = jax.device_get(fail_idx)
+        jax.block_until_ready([r[4] for r in rounds_data])
+        seconds = clk() - t0
+    if deadline_hit:
+        report.deadline_hit = True
+        # never-admitted requests after a mid-round deadline hit
+        tail = rounds_data[-1][0] + slots if rounds_data else 0
+        report.unserved.extend(r for r in range(tail, R)
+                               if r not in report.unserved)
+
+    gen = np.zeros((R, eff_tokens), np.int32)
+    for start, n, ln, done, samples, oks in rounds_data:
+        sm = np.concatenate([np.asarray(jax.device_get(s))
+                             for s in samples], axis=0)[:done]
+        ok = np.concatenate([np.asarray(jax.device_get(o))
+                             for o in oks], axis=0)[:done]
+        ln_np = np.asarray(jax.device_get(ln))
+        smT, badT = sm.T, ~ok.T                            # (slots, done)
         for b in range(n):
-            if int(fail_np[b]) < eff_tokens:
-                report.aborted[start + b] = int(fail_np[b])
+            rid = start + b
+            L = int(ln_np[b])
+            served = int(np.clip(done - (L - 1), 0, eff_tokens))
+            bad = badT[b]
+            first_bad = int(np.argmax(bad)) if bad.any() else done
+            fail = int(np.clip(first_bad - (L - 1), 0, eff_tokens))
+            keep = min(fail, served)
+            if keep > 0:
+                gen[rid, :keep] = smT[b, (L - 1) + np.arange(keep)]
+            if fail < min(served, eff_tokens):
+                report.aborted[rid] = fail
+            elif served < eff_tokens:
+                report.deadline_miss[rid] = served
             else:
-                report.completed.append(start + b)
-    return ServeOutput(jnp.concatenate(outs, axis=0), seconds, report)
+                report.completed.append(rid)
+    return ServeOutput(jnp.asarray(gen), seconds, report)
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching engine: per-slot state, mid-stream admission
+# ---------------------------------------------------------------------------
+
+def stack_cache(cache, slots: int):
+    """Stack one fresh single-request cache into per-slot engine state.
+
+    Every leaf gains a leading ``(slots,)`` axis; crucially the cache's
+    scalar ``pos`` becomes ``(slots,)`` — each slot carries its OWN
+    sequence position, which is what makes mid-stream admission exact:
+    resetting one slot (:func:`jax.tree.map` ``full.at[b].set(fresh)``)
+    rewinds only that slot's sequence.
+    """
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(jnp.asarray(x)[None],
+                                   (slots,) + tuple(jnp.shape(x))), cache)
+
+
+def _make_chunk_fn(step, logit_hook):
+    """Jitted multi-slot chunk: ``chunk`` scan steps over vmapped slots.
+
+    The serve step runs under ``jax.vmap`` over the slot axis, so every
+    slot advances its own cache position independently — slot ``b`` may
+    be teacher-forcing prompt token 3 while slot ``c`` decodes token 40.
+    ``feed (C, B)`` holds prompt tokens for slots still prefilling;
+    ``fp (B,)`` is the number of leading steps each slot teacher-forces
+    this chunk (``C`` for idle slots, which harmlessly decode a dummy
+    sequence that admission resets); ``poison (B,)`` is the local step
+    at which a slot's logits are forced non-finite (``-1`` = never — the
+    deterministic ``serve.nan`` fault); ``t0`` is the engine-global step
+    index handed to ``logit_hook``.
+    """
+    def vstep(params, cache, toks):
+        return jax.vmap(
+            lambda c, t: step(params, c, {"tokens": t[None, None]}))(
+                cache, toks)
+
+    def chunk_fn(params, cache, prev, feed, fp, poison, t0):
+        def body(carry, xs):
+            prev, cache = carry
+            tok_t, i = xs
+            inp = jnp.where(i < fp, tok_t, prev)
+            logits, cache = vstep(params, cache, inp)
+            logits = logits[:, 0]                          # (B, 1, V)
+            if logit_hook is not None:
+                logits = logit_hook(logits, t0 + i)
+            logits = jnp.where((i == poison)[:, None, None], jnp.nan,
+                               logits)
+            ok = jnp.isfinite(logits).all(axis=(1, 2))     # (B,)
+            nxt = jnp.where(ok, greedy_token(logits), 0).astype(jnp.int32)
+            return (nxt, cache), (nxt, ok)
+        C = feed.shape[0]
+        (prev, cache), (toks, oks) = lax.scan(
+            body, (prev, cache), (feed, jnp.arange(C)))
+        return prev, cache, toks, oks                      # toks (C, B)
+    return jax.jit(chunk_fn)
+
+
+@dataclasses.dataclass
+class _Request:
+    """Host-side lifecycle record of one submitted request."""
+
+    rid: int
+    prompt: np.ndarray                 # 1-D int32 token ids
+    budget: int                        # tokens to generate
+    arrival: float
+    deadline: float | None = None      # absolute (arrival + deadline_s)
+    admitted_at: float | None = None
+    finished_at: float | None = None
+    tokens: list = dataclasses.field(default_factory=list)
+    disposition: str | None = None
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side view of one device slot."""
+
+    rid: int = -1                      # -1 = idle
+    consumed: int = 0                  # scan steps run for this request
+    aborts: int = 0                    # NaN aborts since construction
+    quarantined: bool = False
+
+
+class ContinuousEngine:
+    """Persistent continuous-batching decode loop over ``slots`` slots.
+
+    ``step(params, cache, batch) → (logits, cache)`` is the same
+    one-token protocol every other entry point uses;
+    ``make_cache(batch_size, seq_len)`` must build the matching fresh
+    cache (the engine builds ONE ``make_cache(1, max_seq)`` cache and
+    stacks it per slot via :func:`stack_cache`).
+
+    Lifecycle: :meth:`submit` requests (with arrival times and optional
+    per-request deadlines), then :meth:`run` — the host loop ingests due
+    arrivals into a bounded queue (overflow → ``shed``), admits queued
+    requests into idle slots (deadline-aware shedding, see module
+    docstring), dispatches one jitted ``chunk``-step multi-slot scan,
+    and retires slots individually on EOS / budget / deadline /
+    NaN-abort.  A slot that NaN-aborts ``slot_nan_limit`` times is
+    quarantined (circuit breaker).  :meth:`drain` finishes in-flight
+    requests without admitting more.
+
+    ``clock`` (default ``time.perf_counter``) injects a virtual clock —
+    :class:`repro.testing.faults.TickClock` makes shedding/deadline
+    behavior fully deterministic (the loop reads the clock once per
+    chunk).  With a virtual clock the engine never sleeps while waiting
+    for arrivals; virtual time advances one tick per idle iteration.
+    """
+
+    def __init__(self, step, params, make_cache, *, slots: int,
+                 max_seq: int, chunk: int = 8, rules=None, eos_id=None,
+                 logit_hook=None, clock=None, max_queue: int | None = None,
+                 slot_nan_limit: int = 2, warm: bool = True):
+        if slots < 1:
+            raise ValueError(f"need at least one slot, got {slots}")
+        if chunk < 1:
+            raise ValueError(f"need chunk >= 1, got {chunk}")
+        self.slots = slots
+        self.chunk = chunk
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.rules = rules
+        self._params = params
+        self._clock = clock if clock is not None else time.perf_counter
+        self._virtual = clock is not None
+        self._max_queue = max_queue
+        self._nan_limit = slot_nan_limit
+        with use_rules(rules):
+            self._fresh = make_cache(1, max_seq)
+            self._cache = stack_cache(self._fresh, slots)
+        self._prev = jnp.zeros((slots,), jnp.int32)
+        self._chunk_fn = _make_chunk_fn(step, logit_hook)
+        self._reset_fn = jax.jit(lambda full, fr, b: jax.tree.map(
+            lambda f, x: f.at[b].set(x), full, fr))
+        self._slots = [_Slot() for _ in range(slots)]
+        self.requests: dict[int, _Request] = {}
+        self._pending: list[_Request] = []     # not yet arrived
+        self._queue: list[_Request] = []       # arrived, awaiting a slot
+        self._rate: float | None = None        # EWMA decode steps/s
+        self._next_rid = 0
+        self._now: float | None = None
+        self._epoch: float | None = None
+        self._t_global = 0
+        self._total_tokens = 0
+        self.report = ServeReport(engine="continuous")
+        if warm:
+            self._warmup()
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, prompt, *, tokens: int, arrival: float = 0.0,
+               deadline_s: float | None = None, rid: int | None = None):
+        """Queue one request; returns its request id.
+
+        ``arrival`` is the (clock-relative) time the request becomes
+        visible to the engine; ``deadline_s`` is relative to arrival.
+        """
+        prompt = np.asarray(jax.device_get(prompt), np.int32).reshape(-1)
+        if len(prompt) < 1:
+            raise ValueError("empty prompt")
+        if tokens < 1:
+            raise ValueError(f"need tokens >= 1, got {tokens}")
+        if len(prompt) + tokens > self.max_seq:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + tokens ({tokens}) exceeds the "
+                f"engine window max_seq={self.max_seq}")
+        if rid is None:
+            rid = self._next_rid
+        if rid in self.requests:
+            raise ValueError(f"duplicate request id {rid}")
+        self._next_rid = max(self._next_rid, rid + 1)
+        req = _Request(rid=rid, prompt=prompt, budget=int(tokens),
+                       arrival=float(arrival),
+                       deadline=None if deadline_s is None
+                       else float(arrival) + float(deadline_s))
+        if self._epoch is not None:      # mid-run submit: anchor now
+            req.arrival += self._epoch
+            if req.deadline is not None:
+                req.deadline += self._epoch
+        self.requests[rid] = req
+        self._pending.append(req)
+        return rid
+
+    def _anchor(self):
+        """Pin clock-relative arrivals/deadlines to the clock's frame.
+
+        ``submit`` takes times relative to the engine epoch (t=0 at the
+        first clock read); a real monotonic clock does not start at 0,
+        so the first ``run``/``drain`` shifts every pending timestamp
+        into the clock's frame.  Latencies stay epoch-relative because
+        both ends of the subtraction carry the same offset.
+        """
+        if self._now is not None:
+            return
+        self._now = self._epoch = self._clock()
+        if self._epoch:
+            for req in self._pending:
+                req.arrival += self._epoch
+                if req.deadline is not None:
+                    req.deadline += self._epoch
+
+    # -- main loop ----------------------------------------------------------
+
+    def run(self, *, time_budget_s: float | None = None) -> ServeReport:
+        """Serve every submitted request (or until the budget expires)."""
+        self._pending.sort(key=lambda r: (r.arrival, r.rid))
+        with use_rules(self.rules):
+            self._anchor()
+            start = self._now
+            while True:
+                now = self._now
+                if time_budget_s is not None \
+                        and now - start >= time_budget_s:
+                    self._drain_live()
+                    self._flush_waiting(deadline_hit=True)
+                    break
+                self._ingest(now)
+                self._admit(now)
+                if not any(s.rid >= 0 for s in self._slots):
+                    if not self._queue and not self._pending:
+                        break
+                    if all(s.quarantined for s in self._slots):
+                        self._flush_waiting()
+                        break
+                    if not self._virtual and self._pending:
+                        wait = self._pending[0].arrival - now
+                        if wait > 0:
+                            time.sleep(min(wait, 0.05))
+                    self._now = self._clock()
+                    continue
+                self._run_chunk()
+            elapsed = max(self._now - start, 1e-9)
+            self.report.sustained_tok_s = self._total_tokens / elapsed
+        return self.report
+
+    def drain(self) -> ServeReport:
+        """Finish in-flight requests, admit nothing new; waiting requests
+        are reported ``unserved`` (graceful shutdown)."""
+        with use_rules(self.rules):
+            self._anchor()
+            self._drain_live()
+            self._flush_waiting()
+        return self.report
+
+    # -- internal: admission ------------------------------------------------
+
+    def _ingest(self, now):
+        while self._pending and self._pending[0].arrival <= now:
+            req = self._pending.pop(0)
+            _faults.hit("serve.arrival")
+            if self._max_queue is not None \
+                    and len(self._queue) >= self._max_queue:
+                self._finish(req, "shed", now)
+                continue
+            self._queue.append(req)
+            self.report.queue_peak = max(self.report.queue_peak,
+                                         len(self._queue))
+
+    def _shed(self, req, now) -> bool:
+        """Deadline-aware load shedding: reject up front what cannot be
+        served in time at the sustained decode rate (optimistic when no
+        rate estimate exists yet)."""
+        if req.deadline is None:
+            return False
+        if now >= req.deadline:
+            return True
+        if self._rate:
+            steps = len(req.prompt) - 1 + req.budget
+            if now + steps / self._rate > req.deadline:
+                return True
+        return False
+
+    def _admit(self, now):
+        for b in range(self.slots):
+            slot = self._slots[b]
+            if slot.rid >= 0 or slot.quarantined:
+                continue
+            while self._queue:
+                req = self._queue.pop(0)
+                if self._shed(req, now):
+                    self._finish(req, "shed", now)
+                    continue
+                _faults.hit("serve.admit")
+                slot.rid = req.rid
+                slot.consumed = 0
+                req.admitted_at = now
+                self.report.admitted += 1
+                self._cache = self._reset_fn(self._cache, self._fresh,
+                                             jnp.int32(b))
+                break
+
+    # -- internal: chunk dispatch + retirement ------------------------------
+
+    def _build_feed(self):
+        C, B = self.chunk, self.slots
+        feed = np.zeros((C, B), np.int32)
+        fp = np.full((B,), C, np.int32)        # idle slots: inert zeros
+        poison = np.full((B,), -1, np.int32)
+        spec = _faults.serve_nan_spec()
+        for b, slot in enumerate(self._slots):
+            if slot.rid < 0:
+                continue
+            req = self.requests[slot.rid]
+            L = len(req.prompt)
+            left = max(0, L - slot.consumed)
+            fp[b] = left
+            if left > 0:
+                k = min(C, left)
+                feed[:k, b] = req.prompt[slot.consumed:slot.consumed + k]
+            if spec and req.rid in spec:
+                # poison at generation index g ⇒ global step (L - 1 + g)
+                i = (L - 1 + spec[req.rid]) - slot.consumed
+                if 0 <= i < C:
+                    poison[b] = i
+        return jnp.asarray(feed), jnp.asarray(fp), jnp.asarray(poison)
+
+    def _run_chunk(self):
+        _faults.hit("serve.chunk")
+        feed, fp, poison = self._build_feed()
+        prev, cache, toks, oks = self._chunk_fn(
+            self._params, self._cache, self._prev, feed, fp, poison,
+            jnp.int32(self._t_global))
+        self._prev, self._cache = prev, cache
+        toks = np.asarray(jax.device_get(toks))            # (C, B)
+        oks = np.asarray(jax.device_get(oks))
+        self._t_global += self.chunk
+        before = self._now
+        self._now = self._clock()
+        obs = self.chunk / max(self._now - before, 1e-9)
+        self._rate = obs if self._rate is None \
+            else 0.5 * self._rate + 0.5 * obs
+        self._retire(toks, oks, self._now)
+
+    def _retire(self, toks, oks, now):
+        for b, slot in enumerate(self._slots):
+            if slot.rid < 0:
+                continue
+            req = self.requests[slot.rid]
+            L = len(req.prompt)
+            c0 = slot.consumed
+            finished = None
+            for i in range(self.chunk):
+                s = c0 + i
+                if not oks[i, b]:
+                    # abort at generation index (clipped to 0 while the
+                    # failure happened during this slot's prefill)
+                    g_bad = min(max(s - (L - 1), 0), req.budget)
+                    del req.tokens[g_bad:]
+                    finished = "aborted"
+                    break
+                if s >= L - 1:
+                    req.tokens.append(int(toks[i, b]))
+                    if self.eos_id is not None \
+                            and req.tokens[-1] == self.eos_id:
+                        finished = "completed"
+                        break
+                    if len(req.tokens) >= req.budget:
+                        finished = "completed"
+                        break
+            slot.consumed = c0 + self.chunk
+            if finished is None and req.deadline is not None \
+                    and now > req.deadline:
+                finished = "deadline_miss"
+            if finished is None:
+                continue
+            slot.rid = -1
+            slot.consumed = 0
+            if finished == "aborted":
+                slot.aborts += 1
+                if slot.aborts >= self._nan_limit and not slot.quarantined:
+                    slot.quarantined = True
+                    self.report.quarantined_slots.append(b)
+            self._finish(req, finished, now)
+
+    def _drain_live(self):
+        while any(s.rid >= 0 for s in self._slots):
+            self._run_chunk()
+
+    def _flush_waiting(self, deadline_hit: bool = False):
+        now = self._now if self._now is not None else 0.0
+        for req in self._queue + self._pending:
+            self._finish(req, "unserved", now)
+        self._queue.clear()
+        self._pending.clear()
+        if deadline_hit:
+            self.report.deadline_hit = True
+
+    def _finish(self, req, disposition, now):
+        req.disposition = disposition
+        req.finished_at = now
+        r = self.report
+        if disposition == "completed":
+            r.completed.append(req.rid)
+        elif disposition == "aborted":
+            r.aborted[req.rid] = len(req.tokens)
+        elif disposition == "shed":
+            r.shed.append(req.rid)
+        elif disposition == "deadline_miss":
+            r.deadline_miss[req.rid] = len(req.tokens)
+        else:
+            r.unserved.append(req.rid)
+        if disposition in ("completed", "aborted", "deadline_miss"):
+            r.latency_s[req.rid] = now - req.arrival
+            self._total_tokens += len(req.tokens)
+
+    def _warmup(self):
+        """Compile the chunk + slot-reset programs off the serving clock
+        (on a scratch cache — the live per-slot state is untouched)."""
+        with use_rules(self.rules):
+            scratch = stack_cache(self._fresh, self.slots)
+            feed = jnp.zeros((self.chunk, self.slots), jnp.int32)
+            fp = jnp.full((self.slots,), self.chunk, jnp.int32)
+            poison = jnp.full((self.slots,), -1, jnp.int32)
+            jax.block_until_ready(self._chunk_fn(
+                self._params, scratch, self._prev, feed, fp, poison,
+                jnp.int32(0)))
+            jax.block_until_ready(self._reset_fn(scratch, self._fresh,
+                                                 jnp.int32(0)))
+
+
+def serve_continuous(step, params, make_cache, prompts, lengths=None, *,
+                     tokens: int, slots: int | None = None, chunk: int = 8,
+                     rules=None, warm: bool = True,
+                     token_budget: int | None = None,
+                     time_budget_s: float | None = None, eos_id=None,
+                     logit_hook=None, arrivals=None, deadlines=None,
+                     max_queue: int | None = None, slot_nan_limit: int = 2,
+                     clock=None, max_seq: int | None = None):
+    """Serve many prompts through the continuous-batching engine.
+
+    Drop-in counterpart of :func:`serve_requests` (same request
+    encoding, same :class:`ServeOutput` return with rows zero-padded to
+    the effective token count) built on :class:`ContinuousEngine`:
+    requests are admitted into slots as they vacate mid-stream, so one
+    long request never stalls the others.  Extras over the fixed
+    scheduler: ``arrivals`` (per-request arrival times — a seeded
+    Poisson trace in the bench), ``deadlines`` (per-request ``deadline_s``
+    relative to arrival; enables shedding + ``deadline_miss``),
+    ``eos_id`` (per-request early retirement), ``max_queue`` /
+    ``slot_nan_limit`` / ``clock`` (see :class:`ContinuousEngine`), and
+    ``chunk`` (scan steps per engine iteration — the deadline/admission
+    granularity).  ``max_seq`` pins the engine window (default
+    ``P + tokens``).
+    """
+    prompts, lengths = _normalize_requests(prompts, lengths)
+    R, P = prompts.shape
+    eff = tokens if token_budget is None else max(1, min(tokens,
+                                                         token_budget))
+    if R == 0:
+        return ServeOutput(jnp.zeros((0, eff), jnp.int32), 0.0,
+                           ServeReport(tokens_per_request=eff,
+                                       engine="continuous"))
+    n_slots = min(slots or min(4, R), R)
+    window = max_seq if max_seq is not None else P + eff
+    eng = ContinuousEngine(step, params, make_cache, slots=n_slots,
+                           max_seq=window, chunk=chunk, rules=rules,
+                           eos_id=eos_id, logit_hook=logit_hook,
+                           clock=clock, max_queue=max_queue,
+                           slot_nan_limit=slot_nan_limit, warm=warm)
+    pn = np.asarray(jax.device_get(prompts))
+    ln = np.asarray(jax.device_get(lengths))
+    for r in range(R):
+        eng.submit(pn[r, :int(ln[r])], tokens=eff,
+                   arrival=0.0 if arrivals is None else float(arrivals[r]),
+                   deadline_s=None if deadlines is None
+                   else deadlines[r], rid=r)
+    t0 = time.perf_counter()
+    report = eng.run(time_budget_s=time_budget_s)
+    seconds = time.perf_counter() - t0
+    report.tokens_per_request = eff
+    gen = np.zeros((R, eff), np.int32)
+    for r in range(R):
+        tk = eng.requests[r].tokens[:eff]
+        gen[r, :len(tk)] = tk
+    return ServeOutput(jnp.asarray(gen), seconds, report)

@@ -43,12 +43,25 @@ Injection points currently wired into the pipeline:
 ``journal.append``     ``mangle`` over the journal line bytes (torn writes)
 ``journal.append.done``after the journal bytes hit the disk
 ``table_cache.publish``before the built tables are atomically published
+``serve.arrival``      per request ingested by the continuous serve engine
+                       (``delay`` ⇒ a stalled frontend/network)
+``serve.admit``        per request admitted into a decode slot
+``serve.chunk``        before each multi-slot chunk dispatch (``delay`` ⇒
+                       a slow-decode straggler iteration)
+``serve.nan``          *declarative*: ``nan@serve.nan:rid=R,t=G`` poisons
+                       request ``R``'s logits at generation index ``G``
+                       inside the jitted chunk (read via
+                       :func:`serve_nan_spec`, never :func:`hit`)
 =====================  =====================================================
 
 NaN injection for serving cannot go through :func:`hit` (it must run
 inside a jitted ``lax.scan``); :func:`nan_logits_hook` builds the
 deterministic ``logit_hook`` consumed by
-:func:`repro.runtime.serving.serve_requests` instead.
+:func:`repro.runtime.serving.serve_requests`, and the continuous engine
+reads request-targeted ``nan`` rules through :func:`serve_nan_spec`
+(slot↔request binding is dynamic there, so the rule names the request).
+:class:`TickClock` is the virtual clock that makes the engine's
+deadline/shedding behavior deterministic under test.
 """
 from __future__ import annotations
 
@@ -58,7 +71,7 @@ import os
 import threading
 import time
 
-ACTIONS = ("raise", "kill", "exit", "delay", "torn")
+ACTIONS = ("raise", "kill", "exit", "delay", "torn", "nan")
 
 
 class FaultError(RuntimeError):
@@ -86,6 +99,8 @@ class Fault:
     seconds: float = 0.0    # "delay": sleep duration
     keep_bytes: int = 8     # "torn": bytes of the write that reach disk
     exit_code: int = 17     # "exit": status for the hard crash
+    rid: int = -1           # "nan": target request id (serve.nan)
+    at: int = -1            # "nan": generation index to poison
 
     def __post_init__(self):
         if self.action not in ACTIONS:
@@ -178,6 +193,10 @@ def parse_env_spec(spec: str) -> FaultPlan:
     Examples: ``exit@tables.bucket:3`` (hard-crash on the 3rd bucket),
     ``raise@probe.prepare:1x2`` (fail the first two prepare attempts),
     ``delay@probe.time:1~0.5`` (0.5 s straggler on the first timing).
+
+    Request-targeted serve rules use key=value counts instead:
+    ``nan@serve.nan:rid=1,t=2`` poisons request 1's logits at generation
+    index 2 (see :func:`serve_nan_spec`).
     """
     rules = []
     for item in filter(None, (s.strip() for s in spec.split(";"))):
@@ -186,6 +205,12 @@ def parse_env_spec(spec: str) -> FaultPlan:
         if not (action and point):
             raise ValueError(f"bad {ENV_VAR} item {item!r} "
                              "(want action@point[:nth[xtimes][~seconds]])")
+        if "=" in counts:                    # key=value form (serve.nan)
+            kv = dict(p.split("=", 1) for p in counts.split(","))
+            rules.append(Fault(point=point, action=action,
+                               rid=int(kv.get("rid", -1)),
+                               at=int(kv.get("t", kv.get("at", -1)))))
+            continue
         counts, _, seconds = (counts or "1").partition("~")
         nth, _, times = counts.partition("x")
         rules.append(Fault(point=point, action=action, nth=int(nth or 1),
@@ -207,11 +232,63 @@ def active() -> FaultPlan | None:
     return _ENV_PLAN
 
 
+def env_reload() -> FaultPlan | None:
+    """Re-parse ``REPRO_FAULTS`` after the lazy parse already ran.
+
+    :func:`active` caches the env parse on first use; a test or smoke
+    that mutates the env var mid-process (e.g. the serve fault smoke,
+    which runs a clean pass first) calls this to pick the change up.
+    Returns the now-active plan.
+    """
+    global _ENV_PLAN, _ENV_PARSED
+    _ENV_PLAN = None
+    _ENV_PARSED = False
+    return active()
+
+
 def hit(point: str) -> None:
     """Injection point: no-op unless an active plan has a rule for it."""
     plan = active()
     if plan is not None:
         plan.hit(point)
+
+
+def serve_nan_spec() -> dict[int, int]:
+    """Request-targeted NaN rules of the active plan: ``{rid: gen_idx}``.
+
+    The continuous serve engine reads this per chunk and poisons request
+    ``rid``'s logits at generation index ``gen_idx`` inside the jitted
+    multi-slot scan (the slot↔request binding is dynamic, so the rule
+    names the request, not the slot).  Declared as
+    ``nan@serve.nan:rid=R,t=G`` in ``REPRO_FAULTS`` or
+    ``Fault("serve.nan", "nan", rid=R, at=G)`` under :func:`inject`.
+    """
+    plan = active()
+    if plan is None:
+        return {}
+    return {r.rid: r.at for r in plan.rules
+            if r.point == "serve.nan" and r.action == "nan" and r.rid >= 0}
+
+
+class TickClock:
+    """Deterministic virtual clock: every call returns the current time,
+    then advances it by ``dt``.
+
+    Injected as ``clock=`` into the serve engines, it decouples
+    deadline/shedding/latency behavior from wall time — with the
+    continuous engine's one-read-per-chunk discipline, a chunk of ``C``
+    scan steps always "takes" exactly ``dt`` seconds, so shed decisions
+    and deadline misses are bit-reproducible in tests.
+    """
+
+    def __init__(self, dt: float = 1.0, t0: float = 0.0):
+        self.dt = float(dt)
+        self.t = float(t0)
+
+    def __call__(self) -> float:
+        t = self.t
+        self.t += self.dt
+        return t
 
 
 def mangle(point: str, data: bytes) -> bytes:
@@ -317,6 +394,105 @@ def kill_resume_smoke(kill_at_bucket: int = 4) -> dict:
         }
 
 
+# ---------------------------------------------------------------------------
+# Continuous-serving fault smoke: one seeded arrival trace served clean,
+# then re-served under a REPRO_FAULTS spec combining a request-targeted
+# NaN, a delayed arrival, and a slow-decode straggler chunk — asserting
+# the dispositions and that every surviving request is BIT-identical to
+# the clean run.  Wired into scripts/verify.sh; also standalone:
+#
+#   PYTHONPATH=src JAX_PLATFORMS=cpu python -m repro.testing.faults \
+#       --serve-smoke
+# ---------------------------------------------------------------------------
+
+def serve_fault_smoke() -> dict:
+    """Continuous-engine overload/fault smoke (in-process, deterministic).
+
+    Serves four staggered requests on two slots clean, then again under
+    ``nan@serve.nan:rid=1,t=2`` + ``delay@serve.arrival`` +
+    ``delay@serve.chunk`` — request 1 must abort at generation index 2
+    while requests 0/2/3 complete with tokens bit-identical to the
+    fault-free run, and both delay rules must actually fire.
+
+    Module identity matters: the env plan is (re)loaded on the canonical
+    ``repro.testing.faults`` module — the one the serving code imports —
+    because under ``python -m`` this function may execute in
+    ``__main__``, a *different* module object.
+    """
+    import dataclasses as _dc
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.runtime import serving
+    from repro.testing import faults as canonical
+    from repro.train.step import make_serve_step
+
+    cfg = _dc.replace(
+        get_config("smollm-135m").reduced(), num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=128)
+    params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+    step = make_serve_step(cfg)
+
+    def mk(b, s):
+        return T.init_cache(cfg, b, s)
+
+    N = 6
+    prompt = serving.random_prompts(7, 4, 5, cfg.vocab_size)
+    lens = jnp.full((4,), 5, jnp.int32)
+    kw = dict(tokens=N, slots=2, chunk=3, arrivals=[0.0, 0.5, 1.0, 1.5])
+    spec = ("nan@serve.nan:rid=1,t=2;delay@serve.arrival:2~0.02;"
+            "delay@serve.chunk:3~0.02")
+    prev_env = os.environ.get(ENV_VAR)
+    os.environ.pop(ENV_VAR, None)
+    canonical.env_reload()
+    try:
+        clean = serving.serve_continuous(
+            step, params, mk, prompt, lens, clock=canonical.TickClock(),
+            **kw)
+        os.environ[ENV_VAR] = spec
+        plan = canonical.env_reload()
+        out = serving.serve_continuous(
+            step, params, mk, prompt, lens, clock=canonical.TickClock(),
+            **kw)
+    finally:
+        if prev_env is None:
+            os.environ.pop(ENV_VAR, None)
+        else:
+            os.environ[ENV_VAR] = prev_env
+        canonical.env_reload()
+    gen, cg = np.asarray(out[0]), np.asarray(clean[0])
+    report = out.report
+    if report.aborted != {1: 2}:
+        raise AssertionError(f"expected request 1 aborted at generation "
+                             f"index 2, got {report.aborted}")
+    if sorted(report.completed) != [0, 2, 3]:
+        raise AssertionError(f"expected requests 0/2/3 completed, got "
+                             f"{sorted(report.completed)}")
+    for r in (0, 2, 3):
+        if not (gen[r] == cg[r]).all():
+            raise AssertionError(
+                f"surviving request {r} diverged from the fault-free run: "
+                f"{gen[r].tolist()} vs {cg[r].tolist()}")
+    if not (gen[1, :2] == cg[1, :2]).all() or not (gen[1, 2:] == 0).all():
+        raise AssertionError(f"aborted request 1 not truncated at index 2: "
+                             f"{gen[1].tolist()}")
+    delays = [f for f in plan.fired if f[2] == "delay"]
+    if len(delays) < 2:
+        raise AssertionError(f"expected the delayed-arrival AND straggler-"
+                             f"chunk rules to fire, saw {plan.fired}")
+    return {
+        "dispositions": report.dispositions,
+        "aborted": report.aborted,
+        "queue_peak": report.queue_peak,
+        "delay_rules_fired": [f"{p}:{n}" for p, n, _ in delays],
+        "survivors_bit_identical": True,
+    }
+
+
 def main(argv=None):
     import argparse
     import json
@@ -324,6 +500,9 @@ def main(argv=None):
     ap = argparse.ArgumentParser(prog="python -m repro.testing.faults")
     ap.add_argument("--smoke", action="store_true",
                     help="kill-and-resume table-build smoke (verify.sh leg)")
+    ap.add_argument("--serve-smoke", action="store_true",
+                    help="continuous-serving fault smoke: NaN + straggler "
+                         "under REPRO_FAULTS, survivor exactness asserted")
     ap.add_argument("--child", metavar="CACHE_DIR", default=None,
                     help=argparse.SUPPRESS)   # internal: the crashed build
     args = ap.parse_args(argv)
@@ -334,6 +513,10 @@ def main(argv=None):
     if args.smoke:
         print(json.dumps(kill_resume_smoke(), indent=2))
         print("FAULT_SMOKE_OK")
+        return
+    if args.serve_smoke:
+        print(json.dumps(serve_fault_smoke(), indent=2))
+        print("SERVE_FAULT_SMOKE_OK")
         return
     ap.print_help()
 

@@ -76,6 +76,43 @@ def test_parse_env_spec():
         faults.parse_env_spec("raise@")
 
 
+def test_parse_env_spec_serve_nan_kv_form():
+    """Request-targeted rules use key=value counts; serve_nan_spec
+    surfaces them (and only them) to the continuous serve engine."""
+    plan = faults.parse_env_spec(
+        "nan@serve.nan:rid=1,t=2;delay@serve.chunk:3~0.1")
+    a, b = plan.rules
+    assert (a.point, a.action, a.rid, a.at) == ("serve.nan", "nan", 1, 2)
+    assert (b.point, b.action, b.nth, b.seconds) == ("serve.chunk", "delay",
+                                                     3, 0.1)
+    with faults.inject(*plan.rules):
+        assert faults.serve_nan_spec() == {1: 2}
+    assert faults.serve_nan_spec() == {}       # no active plan
+    with faults.inject(faults.Fault("serve.nan", "nan", rid=0, at=4),
+                       faults.Fault("serve.nan", "nan", rid=3, at=0)):
+        assert faults.serve_nan_spec() == {0: 4, 3: 0}
+
+
+def test_env_reload_picks_up_mutation(monkeypatch):
+    """active() caches the env parse; env_reload() re-reads it — the
+    contract the serve fault smoke relies on when it flips REPRO_FAULTS
+    between its clean and faulted passes."""
+    monkeypatch.delenv(faults.ENV_VAR, raising=False)
+    faults.env_reload()
+    assert faults.active() is None
+    monkeypatch.setenv(faults.ENV_VAR, "nan@serve.nan:rid=2,t=1")
+    assert faults.active() is None             # stale cache by design
+    plan = faults.env_reload()
+    assert plan is not None and faults.serve_nan_spec() == {2: 1}
+    monkeypatch.delenv(faults.ENV_VAR)
+    assert faults.env_reload() is None
+
+
+def test_tick_clock_is_deterministic():
+    clk = faults.TickClock(dt=0.5, t0=2.0)
+    assert [clk() for _ in range(3)] == [2.0, 2.5, 3.0]
+
+
 def test_counted_rules_fire_on_exact_hits():
     with faults.inject(faults.Fault("pt", "raise", nth=2, times=2)) as plan:
         faults.hit("pt")                       # hit 1: unarmed
@@ -407,6 +444,15 @@ def test_kill_resume_smoke_subprocess():
     out = faults.kill_resume_smoke(kill_at_bucket=4)
     assert out["bit_identical"]
     assert out["journal_hits_on_resume"] >= 3
+
+
+def test_serve_fault_smoke_inprocess():
+    """The verify.sh serve leg: NaN + delayed arrival + straggler chunk
+    under an env spec, survivors bit-identical to the clean run."""
+    out = faults.serve_fault_smoke()
+    assert out["survivors_bit_identical"]
+    assert out["aborted"] == {1: 2}
+    assert len(out["delay_rules_fired"]) >= 2
 
 
 def test_faults_cli_smoke_flag():

@@ -1,0 +1,391 @@
+"""Continuous-batching engine certification (ISSUE 7 acceptance bars).
+
+* Exactness: mid-stream admission/retirement must be invisible in the
+  tokens — every request served by the continuous engine under a
+  staggered arrival trace with slot churn is TOKEN-IDENTICAL to serving
+  its prompt alone, to the fixed-slot scheduler, and across slot counts.
+* Isolation: an injected per-request NaN aborts exactly that request
+  (correct disposition, truncated at the right generation index) while
+  every surviving request stays bit-identical to the fault-free run; a
+  slot that keeps aborting is quarantined (circuit breaker) instead of
+  retrying forever.
+* Overload safety: the bounded admission queue sheds on overflow, the
+  deadline-aware shedder rejects requests that cannot finish in time at
+  the observed decode rate, admitted-but-too-slow requests get
+  ``deadline_miss`` with their partial tokens, and a wall-clock budget
+  drains cleanly.  All timing runs on the deterministic
+  :class:`repro.testing.faults.TickClock`.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.runtime import serving
+from repro.testing import faults
+from repro.train.step import make_serve_step
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = dataclasses.replace(
+        get_config("smollm-135m").reduced(), num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=128)
+    params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params, make_serve_step(cfg)
+
+
+def _mk(cfg):
+    return lambda b, s: T.init_cache(cfg, b, s)
+
+
+def _ragged(cfg):
+    rng = np.random.RandomState(0)
+    prompts = [jnp.asarray(rng.randint(0, cfg.vocab_size, size=n), jnp.int32)
+               for n in (5, 9, 3, 7, 6)]
+    mat, lens = serving.pad_prompts(prompts)
+    return prompts, mat, lens
+
+
+ARRIVALS = [0.0, 0.5, 1.0, 2.5, 4.0]
+
+
+# ---------------------------------------------------------------------------
+# Exactness under churn
+# ---------------------------------------------------------------------------
+
+def test_exact_vs_single_prompt_under_arrival_trace(lm):
+    """ISSUE acceptance: a staggered arrival trace with slot churn (5
+    ragged requests through 2 slots, chunk 3 — requests are admitted
+    mid-stream as slots vacate) must be token-for-token identical to
+    serving each prompt alone."""
+    cfg, params, step = lm
+    N = 6
+    prompts, mat, lens = _ragged(cfg)
+    out = serving.serve_continuous(
+        step, params, _mk(cfg), mat, lens, tokens=N, slots=2, chunk=3,
+        arrivals=ARRIVALS, clock=faults.TickClock())
+    gen = np.asarray(out[0])
+    assert gen.shape == (5, N)
+    assert out.report.engine == "continuous"
+    assert out.report.ok and sorted(out.report.completed) == list(range(5))
+    assert out.report.admitted == 5
+    for i, p in enumerate(prompts):
+        _, _, _, solo = serving.serve_loop(
+            step, params, T.init_cache(cfg, 1, len(p) + N), p[None, :], N,
+            warm=False)
+        np.testing.assert_array_equal(gen[i], np.asarray(solo[0]))
+    # per-request latency recorded for every completed request
+    assert sorted(out.report.latency_s) == list(range(5))
+    assert out.report.sustained_tok_s > 0
+
+
+def test_matches_fixed_scheduler_and_slot_count_invariant(lm):
+    """Same tokens as the fixed-slot scheduler, and invariant to the slot
+    partitioning (2 vs 4 slots) under the same arrival trace."""
+    cfg, params, step = lm
+    N = 6
+    _, mat, lens = _ragged(cfg)
+    fixed, _ = serving.serve_requests(step, params, _mk(cfg), mat, lens,
+                                      tokens=N, slots=2)
+    outs = [serving.serve_continuous(
+        step, params, _mk(cfg), mat, lens, tokens=N, slots=k, chunk=3,
+        arrivals=ARRIVALS, clock=faults.TickClock())[0] for k in (2, 4)]
+    np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(fixed))
+    np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(outs[1]))
+
+
+def test_token_budget_prefix_stable(lm):
+    cfg, params, step = lm
+    _, mat, lens = _ragged(cfg)
+    full = serving.serve_continuous(step, params, _mk(cfg), mat, lens,
+                                    tokens=6, slots=2, chunk=3,
+                                    clock=faults.TickClock())
+    capped = serving.serve_continuous(step, params, _mk(cfg), mat, lens,
+                                      tokens=6, token_budget=3, slots=2,
+                                      chunk=3, clock=faults.TickClock())
+    gen = np.asarray(capped[0])
+    assert gen.shape == (5, 3)
+    assert capped.report.tokens_per_request == 3
+    np.testing.assert_array_equal(gen, np.asarray(full[0])[:, :3])
+
+
+def test_eos_retires_slot_early(lm):
+    """EOS retirement: the row keeps tokens through the FIRST eos
+    occurrence (zeroed after), the request completes, and the vacated
+    slot is refilled — other requests unperturbed."""
+    cfg, params, step = lm
+    N = 6
+    prompts, mat, lens = _ragged(cfg)
+    clean = np.asarray(serving.serve_continuous(
+        step, params, _mk(cfg), mat, lens, tokens=N, slots=2, chunk=3,
+        clock=faults.TickClock())[0])
+    eos = int(clean[0, 2])                  # retire request 0 mid-decode
+    out = serving.serve_continuous(
+        step, params, _mk(cfg), mat, lens, tokens=N, slots=2, chunk=3,
+        eos_id=eos, clock=faults.TickClock())
+    gen = np.asarray(out[0])
+    assert sorted(out.report.completed) == list(range(5))
+    row = clean[0].tolist()
+    cut = row.index(eos) + 1
+    assert gen[0].tolist() == row[:cut] + [0] * (N - cut)
+    for r in range(1, 5):                   # rows without eos: untouched
+        if eos not in clean[r].tolist():
+            np.testing.assert_array_equal(gen[r], clean[r])
+
+
+# ---------------------------------------------------------------------------
+# Failure isolation
+# ---------------------------------------------------------------------------
+
+def test_injected_nan_isolated_to_one_stream(lm):
+    """ISSUE acceptance: a per-request NaN injected mid-decode aborts
+    that request at the right generation index while every surviving
+    request's tokens are BIT-identical to the no-fault run — even though
+    the abort vacates a slot early and reshuffles admission."""
+    cfg, params, step = lm
+    N = 6
+    prompt = serving.random_prompts(7, 4, 5, cfg.vocab_size)
+    lens = jnp.full((4,), 5, jnp.int32)
+    kw = dict(tokens=N, slots=2, chunk=3, arrivals=[0.0, 0.5, 1.0, 1.5])
+    clean = serving.serve_continuous(step, params, _mk(cfg), prompt, lens,
+                                     clock=faults.TickClock(), **kw)
+    with faults.inject(faults.Fault("serve.nan", "nan", rid=1, at=2)):
+        out = serving.serve_continuous(step, params, _mk(cfg), prompt,
+                                       lens, clock=faults.TickClock(), **kw)
+    gen, cg = np.asarray(out[0]), np.asarray(clean[0])
+    assert out.report.aborted == {1: 2}
+    assert not out.report.ok
+    assert out.report.dispositions[1] == "aborted"
+    assert sorted(out.report.completed) == [0, 2, 3]
+    for r in (0, 2, 3):
+        np.testing.assert_array_equal(gen[r], cg[r])
+    np.testing.assert_array_equal(gen[1, :2], cg[1, :2])
+    assert gen[1, 2:].tolist() == [0] * (N - 2)
+
+
+def test_nan_during_prefill_aborts_at_zero(lm):
+    cfg, params, step = lm
+    prompt = serving.random_prompts(8, 2, 5, cfg.vocab_size)
+    lens = jnp.full((2,), 5, jnp.int32)
+    with faults.inject(faults.Fault("serve.nan", "nan", rid=0, at=-2)):
+        # generation index -2 ⇒ global step L-3: mid-prefill
+        out = serving.serve_continuous(step, params, _mk(cfg), prompt,
+                                       lens, tokens=4, slots=2, chunk=3,
+                                       clock=faults.TickClock())
+    assert out.report.aborted == {0: 0}
+    assert np.asarray(out[0][0]).tolist() == [0, 0, 0, 0]
+
+
+def test_circuit_breaker_quarantines_slot(lm):
+    """Two NaN-aborts on the same slot trip the breaker: the slot is
+    quarantined (never refilled), and with no slots left the remaining
+    request is reported unserved instead of retried forever."""
+    cfg, params, step = lm
+    prompt = serving.random_prompts(7, 3, 5, cfg.vocab_size)
+    lens = jnp.full((3,), 5, jnp.int32)
+    with faults.inject(faults.Fault("serve.nan", "nan", rid=0, at=1),
+                       faults.Fault("serve.nan", "nan", rid=1, at=1)):
+        out = serving.serve_continuous(
+            step, params, _mk(cfg), prompt, lens, tokens=6, slots=1,
+            chunk=3, slot_nan_limit=2, clock=faults.TickClock())
+    assert out.report.dispositions == {0: "aborted", 1: "aborted",
+                                       2: "unserved"}
+    assert out.report.quarantined_slots == [0]
+    assert not out.report.ok
+
+
+# ---------------------------------------------------------------------------
+# Overload safety: shedding, deadlines, queue bound, drain
+# ---------------------------------------------------------------------------
+
+def test_deadline_aware_shedding(lm):
+    """Once the EWMA decode rate is established (request 0 warms it), a
+    request whose deadline cannot be met is shed UP FRONT; with a
+    generous deadline the same request is served."""
+    cfg, params, step = lm
+    prompt = serving.random_prompts(10, 2, 5, cfg.vocab_size)
+    lens = jnp.full((2,), 5, jnp.int32)
+    kw = dict(tokens=5, slots=1, chunk=4, arrivals=[0.0, 3.0])
+    # rate = 4 steps/tick; request 1 needs 9 steps ⇒ eta 3 + 2.25 > 3 + 2
+    shed = serving.serve_continuous(
+        step, params, _mk(cfg), prompt, lens, deadlines=[None, 2.0],
+        clock=faults.TickClock(), **kw)
+    assert shed.report.dispositions == {0: "completed", 1: "shed"}
+    assert np.asarray(shed[0][1]).tolist() == [0] * 5      # zeroed row
+    ok = serving.serve_continuous(
+        step, params, _mk(cfg), prompt, lens, deadlines=[None, 50.0],
+        clock=faults.TickClock(), **kw)
+    assert ok.report.dispositions == {0: "completed", 1: "completed"}
+
+
+def test_deadline_miss_mid_serve_keeps_partial_tokens(lm):
+    """An admitted request that blows its deadline mid-decode retires
+    with ``deadline_miss`` and keeps the tokens generated so far (a
+    prefix of the unconstrained run)."""
+    cfg, params, step = lm
+    prompt = serving.random_prompts(11, 1, 5, cfg.vocab_size)
+    lens = jnp.full((1,), 5, jnp.int32)
+    kw = dict(tokens=6, slots=1, chunk=2)
+    full = np.asarray(serving.serve_continuous(
+        step, params, _mk(cfg), prompt, lens, clock=faults.TickClock(),
+        **kw)[0])
+    out = serving.serve_continuous(
+        step, params, _mk(cfg), prompt, lens, deadlines=[3.0],
+        clock=faults.TickClock(), **kw)
+    assert out.report.deadline_miss == {0: 4}
+    assert out.report.dispositions[0] == "deadline_miss"
+    gen = np.asarray(out[0])
+    np.testing.assert_array_equal(gen[0, :4], full[0, :4])
+    assert gen[0, 4:].tolist() == [0, 0]
+
+
+def test_bounded_queue_sheds_overflow(lm):
+    cfg, params, step = lm
+    prompt = serving.random_prompts(7, 4, 5, cfg.vocab_size)
+    lens = jnp.full((4,), 5, jnp.int32)
+    out = serving.serve_continuous(
+        step, params, _mk(cfg), prompt, lens, tokens=6, slots=1, chunk=2,
+        max_queue=1, clock=faults.TickClock())
+    d = out.report.dispositions
+    assert d[0] == "completed"
+    assert [d[r] for r in (1, 2, 3)] == ["shed"] * 3
+    assert out.report.queue_peak == 1
+
+
+def test_time_budget_drains_cleanly(lm):
+    cfg, params, step = lm
+    prompt = serving.random_prompts(10, 3, 5, cfg.vocab_size)
+    lens = jnp.full((3,), 5, jnp.int32)
+    out = serving.serve_continuous(
+        step, params, _mk(cfg), prompt, lens, tokens=4, slots=2,
+        warm=False, time_budget_s=0.0, clock=faults.TickClock())
+    gen, _ = out
+    assert gen.shape == (3, 4)
+    assert out.report.deadline_hit
+    assert out.report.unserved == [0, 1, 2]
+    assert np.asarray(gen).tolist() == [[0] * 4] * 3
+
+
+def test_engine_drain_finishes_in_flight_only(lm):
+    """Explicit drain: in-flight requests finish exactly, queued ones
+    come back unserved."""
+    cfg, params, step = lm
+    N = 6
+    prompts, mat, lens = _ragged(cfg)
+    eng = serving.ContinuousEngine(
+        step, params, _mk(cfg), slots=2, max_seq=int(mat.shape[1]) + N,
+        chunk=3, clock=faults.TickClock())
+    pn, ln = np.asarray(mat), np.asarray(lens)
+    for r in range(5):
+        eng.submit(pn[r, :ln[r]], tokens=N, rid=r)
+    eng._pending.sort(key=lambda q: (q.arrival, q.rid))
+    now = eng._now = eng._clock()
+    eng._ingest(now)
+    eng._admit(now)                          # requests 0 and 1 in flight
+    report = eng.drain()
+    assert sorted(report.completed) == [0, 1]
+    assert sorted(report.unserved) == [2, 3, 4]
+    for i in (0, 1):
+        p = prompts[i]
+        _, _, _, solo = serving.serve_loop(
+            step, params, T.init_cache(cfg, 1, len(p) + N), p[None, :], N,
+            warm=False)
+        assert eng.requests[i].tokens == np.asarray(solo[0]).tolist()
+
+
+# ---------------------------------------------------------------------------
+# API edges
+# ---------------------------------------------------------------------------
+
+def test_submit_validation(lm):
+    cfg, params, step = lm
+    eng = serving.ContinuousEngine(step, params, _mk(cfg), slots=1,
+                                   max_seq=8, warm=False)
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.submit(np.arange(5), tokens=4)   # 5 + 4 > 8
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit(np.zeros((0,)), tokens=2)
+    eng.submit(np.arange(3), tokens=2, rid=7)
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.submit(np.arange(3), tokens=2, rid=7)
+    with pytest.raises(ValueError, match="slot"):
+        serving.ContinuousEngine(step, params, _mk(cfg), slots=0,
+                                 max_seq=8, warm=False)
+
+
+def test_zero_requests(lm):
+    cfg, params, step = lm
+    out = serving.serve_continuous(step, params, _mk(cfg), [], tokens=4)
+    gen, secs = out
+    assert gen.shape == (0, 4) and secs >= 0.0
+    assert out.report.ok and out.report.engine == "continuous"
+
+
+def test_stack_cache_per_slot_positions(lm):
+    """stack_cache gives every leaf a leading slot axis — the scalar
+    cache position becomes per-slot, the enabling fact for mid-stream
+    admission."""
+    cfg, _, _ = lm
+    cache = T.init_cache(cfg, 1, 12)
+    stacked = serving.stack_cache(cache, 3)
+    for base_leaf, slot_leaf in zip(jax.tree.leaves(cache),
+                                    jax.tree.leaves(stacked)):
+        assert slot_leaf.shape == (3,) + base_leaf.shape
+
+
+def test_dispositions_cover_every_request(lm):
+    assert serving.DISPOSITIONS == ("completed", "aborted", "shed",
+                                    "deadline_miss", "unserved")
+    rep = serving.ServeReport(completed=[0], aborted={1: 2}, shed=[3],
+                              deadline_miss={4: 1}, unserved=[5])
+    assert rep.dispositions == {0: "completed", 1: "aborted", 3: "shed",
+                                4: "deadline_miss", 5: "unserved"}
+    assert not rep.ok
+    assert serving.ServeReport(completed=[0]).ok
+
+
+# ---------------------------------------------------------------------------
+# Compressed-graph integration (GraphExecutor.continuous_engine)
+# ---------------------------------------------------------------------------
+
+def test_graph_executor_continuous_engine():
+    """The continuous engine over a compressed artifact graph serves
+    token-identically to the graph's own single-prompt serve loop, and
+    slot_state stacks every per-unit cache leaf (incl. ``{}`` units)."""
+    from repro import runtime
+    from repro.core import compress
+    from repro.models.transformer_host import CostEnv, TransformerHost
+
+    cfg = dataclasses.replace(get_config("smollm-135m").reduced(),
+                              num_layers=4)
+    params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+    host = TransformerHost(cfg, params, env=CostEnv(batch=2, seq=16))
+    res = compress(host, budget_ratio=0.6, P=200)
+    graph = host.lower_plan(res.plan)
+    N, P = 5, 6
+    state = runtime.slot_state(graph, 2, P + N)
+    for base_leaf, slot_leaf in zip(
+            jax.tree.leaves(runtime.init_cache(graph, 1, P + N)),
+            jax.tree.leaves(state)):
+        assert slot_leaf.shape == (2,) + base_leaf.shape
+
+    ex = runtime.GraphExecutor(graph)
+    prompts = serving.random_prompts(3, 3, P, cfg.vocab_size)
+    eng = ex.continuous_engine(slots=2, max_seq=P + N, chunk=3,
+                               clock=faults.TickClock())
+    pn = np.asarray(prompts)
+    for r in range(3):
+        eng.submit(pn[r], tokens=N, arrival=0.5 * r, rid=r)
+    report = eng.run()
+    assert sorted(report.completed) == [0, 1, 2]
+    step, gp = ex.serve_step()
+    for r in range(3):
+        _, _, _, solo = serving.serve_loop(
+            step, gp, ex.init_cache(1, P + N), prompts[r][None, :], N,
+            warm=False)
+        assert eng.requests[r].tokens == np.asarray(solo[0]).tolist()

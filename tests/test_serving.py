@@ -220,3 +220,78 @@ def test_time_budget_drains_cleanly(lm):
     ok = serving.serve_requests(step, params, _mk(cfg), prompt, lens,
                                 tokens=4, slots=1, time_budget_s=60.0)
     assert ok.report.ok and ok.report.rounds == 3
+
+
+def test_deadline_enforced_per_chunk(lm):
+    """ISSUE 7 satellite regression: the wall-clock budget used to be
+    checked only between full decode rounds, so one long round could
+    blow far past it.  With the deterministic TickClock (one tick per
+    clock read) a 12-step round under ``deadline_chunk=4`` must stop
+    after the second segment: the in-flight request keeps its 5 partial
+    tokens as a ``deadline_miss``, the queued request is unserved."""
+    from repro.testing.faults import TickClock
+
+    cfg, params, step = lm
+    rng = np.random.RandomState(12)
+    prompts = [jnp.asarray(rng.randint(0, cfg.vocab_size, size=4),
+                           jnp.int32) for _ in range(2)]
+    mat, lens = serving.pad_prompts(prompts)
+    full, _ = serving.serve_requests(step, params, _mk(cfg), mat, lens,
+                                     tokens=9, slots=1)
+    # clock reads: t0=0; round-0 admission check t=1 (<=2.5); segment
+    # checks t=2 (ok), t=3 (> 2.5 ⇒ stop after 8 of 12 steps)
+    out = serving.serve_requests(step, params, _mk(cfg), mat, lens,
+                                 tokens=9, slots=1, warm=False,
+                                 time_budget_s=2.5, deadline_chunk=4,
+                                 clock=TickClock())
+    gen = np.asarray(out[0])
+    assert out.report.deadline_hit
+    assert out.report.deadline_miss == {0: 5}    # 8 steps - (4-1) prompt
+    assert out.report.unserved == [1]
+    assert out.report.rounds == 1
+    np.testing.assert_array_equal(gen[0, :5], np.asarray(full[0, :5]))
+    assert gen[0, 5:].tolist() == [0] * 4
+    assert gen[1].tolist() == [0] * 9
+
+
+def test_chunked_deadline_path_matches_unchunked(lm):
+    """Cutting a round into deadline segments must not change a single
+    token when the budget is generous."""
+    cfg, params, step = lm
+    prompt = serving.random_prompts(3, 4, 8, cfg.vocab_size)
+    lens = jnp.full((4,), 8, jnp.int32)
+    plain = serving.serve_requests(step, params, _mk(cfg), prompt, lens,
+                                   tokens=5, slots=2)
+    chunked = serving.serve_requests(step, params, _mk(cfg), prompt, lens,
+                                     tokens=5, slots=2, time_budget_s=60.0,
+                                     deadline_chunk=3)
+    np.testing.assert_array_equal(np.asarray(plain[0]),
+                                  np.asarray(chunked[0]))
+    assert chunked.report.ok
+    assert sorted(chunked.report.completed) == sorted(
+        plain.report.completed)
+
+
+def test_legacy_serve_output_shape_pinned(lm):
+    """ISSUE 7 back-compat satellite: PR-5/PR-6 callers unpack
+    ``(gen, seconds)`` and read the PR-6 ServeReport fields; the
+    overload-safety extension must not disturb either."""
+    cfg, params, step = lm
+    prompt = serving.random_prompts(2, 2, 4, cfg.vocab_size)
+    lens = jnp.full((2,), 4, jnp.int32)
+    out = serving.serve_requests(step, params, _mk(cfg), prompt, lens,
+                                 tokens=3, slots=2)
+    assert isinstance(out, tuple) and len(out) == 2
+    gen, seconds = out                                   # tuple unpacking
+    assert gen.shape == (2, 3) and seconds >= 0.0
+    rep = out.report
+    # PR-6 surface, semantics unchanged
+    assert rep.completed == [0, 1]
+    assert rep.aborted == {} and rep.unserved == []
+    assert rep.rounds == 1 and rep.tokens_per_request == 3
+    assert rep.deadline_hit is False and rep.ok
+    # PR-7 fields exist and default empty on the legacy path
+    assert rep.shed == [] and rep.deadline_miss == {}
+    assert rep.quarantined_slots == [] and rep.queue_peak == 0
+    assert rep.engine == "fixed"
+    assert rep.dispositions == {0: "completed", 1: "completed"}
