@@ -5,7 +5,7 @@ PY := python
 ENV := JAX_PLATFORMS=cpu PYTHONPATH=src
 
 .PHONY: verify test bench bench-dp bench-tables bench-serve bench-smoke \
-	fault-smoke serve-fault-smoke
+	fault-smoke serve-fault-smoke dist-fault-smoke
 
 verify:
 	bash scripts/verify.sh
@@ -47,3 +47,10 @@ fault-smoke:
 # bit-identical to the fault-free run.
 serve-fault-smoke:
 	$(ENV) $(PY) -m repro.testing.faults --serve-smoke
+
+# Distributed-build gate (also part of `make verify`): 2 subprocess
+# workers, worker 0 SIGKILLed mid-bucket; a survivor steals the expired
+# lease and the merged tables must be bit-identical to a single-process
+# build.  Plus the serve-failover replay smoke.
+dist-fault-smoke:
+	$(ENV) $(PY) -m repro.launch.distributed --fault-smoke

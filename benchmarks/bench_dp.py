@@ -155,11 +155,11 @@ def main(argv=None):
     conv = conv_tile_sweep(rng)
     report = {"solver": solver, "merged_conv_tiles": conv}
 
-    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=2)
+    from repro.launch.distributed import publish_json
+
+    if publish_json(args.out, report) is not None:
+        print(f"# wrote {args.out}", file=sys.stderr)
     print(json.dumps(report, indent=2))
-    print(f"# wrote {args.out}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -307,11 +307,11 @@ def main(argv=None):
         "kv_parity_rel_delta": delta / scale,
     }
     if not args.smoke:
+        from repro.launch.distributed import publish_json
+
         out = os.path.abspath(args.out)
-        os.makedirs(os.path.dirname(out), exist_ok=True)
-        with open(out, "w") as f:
-            json.dump(report, f, indent=2)
-        print(f"wrote {out}")
+        if publish_json(out, report) is not None:
+            print(f"wrote {out}")
     print(json.dumps(report, indent=2))
 
 

@@ -181,13 +181,13 @@ def main(argv=None):
             print(f"{r[0]},{r[1]:.2f},{r[2]}", flush=True)
         all_rows.extend(rows)
         print(f"# {name} done in {time.perf_counter()-t0:.1f}s", flush=True)
-    os.makedirs("results", exist_ok=True)
-    with open("results/bench.csv", "w") as f:
-        f.write("name,us_per_call,derived\n")
-        for r in all_rows:
-            f.write(f"{r[0]},{r[1]:.2f},{r[2]}\n")
-    with open("results/BENCH_kernels.json", "w") as f:
-        json.dump({r[0]: _json_row(r) for r in all_rows}, f, indent=2)
+    from repro.launch.distributed import publish_json, publish_text
+
+    csv = "name,us_per_call,derived\n" + "".join(
+        f"{r[0]},{r[1]:.2f},{r[2]}\n" for r in all_rows)
+    publish_text("results/bench.csv", csv)
+    publish_json("results/BENCH_kernels.json",
+                 {r[0]: _json_row(r) for r in all_rows})
 
 
 def _json_row(row):

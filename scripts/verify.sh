@@ -28,7 +28,8 @@ for f in $KERNEL_SUITE; do IGNORES="$IGNORES --ignore=$f"; done
 python -m pytest -x -q $IGNORES "$@"
 
 echo "== probe-engine bench smoke (table-build parity + accounting) =="
-python -m benchmarks.bench_tables --smoke > /dev/null
+# --workers 0: the dist-fault-smoke leg below covers the fan-out path.
+python -m benchmarks.bench_tables --smoke --workers 0 > /dev/null
 
 echo "== serve bench smoke (artifact round-trip + KV-cache parity) =="
 python -m benchmarks.bench_serve --smoke > /dev/null
@@ -42,5 +43,9 @@ python -m repro.testing.faults --smoke > /dev/null
 
 echo "== serve fault smoke (continuous engine: NaN + straggler, exact) =="
 python -m repro.testing.faults --serve-smoke > /dev/null
+
+echo "== distributed fault smoke (worker SIGKILL -> lease reassignment; =="
+echo "==   serve failover replay, zero lost requests, bit-identical)    =="
+python -m repro.launch.distributed --fault-smoke > /dev/null
 
 echo "verify: OK"

@@ -84,7 +84,8 @@ def atomic_write_bytes(path: str, data: bytes) -> str:
     return path
 
 
-def append_journal_line(path: str, text: str) -> str:
+def append_journal_line(path: str, text: str, *,
+                        point: str = "journal.append") -> str:
     """Crash-safe append of ONE journal record (write-ahead-log contract).
 
     ``text`` (newlines squashed) is written as a single ``\\n``-terminated
@@ -94,18 +95,20 @@ def append_journal_line(path: str, text: str) -> str:
     :func:`read_journal_lines` truncates away on the next open, so a
     reader never parses half a record and subsequent appends never
     concatenate onto torn bytes.  Shared with the resumable table builds
-    (:class:`repro.core.table_cache.BuildJournal`).
+    (:class:`repro.core.table_cache.BuildJournal`) and the distributed
+    worker shards (:class:`repro.core.dist_build.ShardJournal`, which
+    passes its own fault ``point`` so shard corruption is injectable
+    independently of the build journal's).
     """
     from repro.testing import faults
 
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    data = faults.mangle("journal.append",
-                         (text.replace("\n", " ") + "\n").encode())
+    data = faults.mangle(point, (text.replace("\n", " ") + "\n").encode())
     with open(path, "ab") as f:
         f.write(data)
         f.flush()
         os.fsync(f.fileno())
-    faults.hit("journal.append.done")
+    faults.hit(point + ".done")
     return path
 
 

@@ -102,9 +102,17 @@ def main(argv=None):
                          "retry, then quarantine to the analytic estimate")
     ap.add_argument("--probe-retries", type=int, default=2,
                     help="attempts per failing probe before quarantine")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="fan latency probes out across N subprocess "
+                         "workers with lease-based reassignment (requires "
+                         "--cache-dir; tables stay bit-identical)")
+    ap.add_argument("--work-dir", default=None,
+                    help="shared coordination directory for --workers "
+                         "(default: under --cache-dir)")
     args = ap.parse_args(argv)
 
     from repro.core import ProbeConfig, WallClockOracle, compress
+    from repro.core.dist_build import DistBuildError
 
     host, source = build_host(args.arch, seed=args.seed, batch=args.batch,
                               seq=args.seq, full=args.full,
@@ -112,17 +120,28 @@ def main(argv=None):
     oracle = WallClockOracle() if args.oracle == "wallclock" else None
     probe_config = ProbeConfig(timeout_s=args.probe_timeout,
                                retries=args.probe_retries)
-    res = compress(host, budget_ratio=args.budget_ratio, P=args.P,
-                   method=args.method, latency_oracle=oracle,
-                   importance="magnitude", cache_dir=args.cache_dir,
-                   probe_config=probe_config, resume=args.resume)
+    host_spec = {"factory": "repro.testing.hosts:cli_host",
+                 "kwargs": {"arch": args.arch, "seed": args.seed,
+                            "batch": args.batch, "seq": args.seq,
+                            "full": args.full,
+                            "max_span": args.max_span}}
+    try:
+        res = compress(host, budget_ratio=args.budget_ratio, P=args.P,
+                       method=args.method, latency_oracle=oracle,
+                       importance="magnitude", cache_dir=args.cache_dir,
+                       probe_config=probe_config, resume=args.resume,
+                       workers=args.workers, host_spec=host_spec,
+                       work_dir=args.work_dir)
+    except DistBuildError as e:
+        print(f"[repro.compress] distributed build failed: {e}")
+        raise SystemExit(3)
     if res is None:
         raise SystemExit(
             f"[repro.compress] infeasible: no plan fits "
             f"budget_ratio={args.budget_ratio} for {args.arch}")
     fp = res.save(args.out, extra_meta={"source": source})
     plan = res.plan
-    print(json.dumps({
+    summary = {
         "arch": args.arch,
         "method": args.method,
         "budget_ratio": args.budget_ratio,
@@ -134,7 +153,14 @@ def main(argv=None):
                            if res.tables is not None else 0),
         "artifact": args.out,
         "fingerprint": fp[:16],
-    }, indent=2))
+    }
+    if res.dist_report is not None:
+        rep = res.dist_report
+        summary["dist"] = {"workers": rep.workers, "items": rep.items,
+                           "reassigned": len(rep.reassigned),
+                           "dead_workers": rep.dead_workers,
+                           "cache_hit": rep.cache_hit}
+    print(json.dumps(summary, indent=2))
 
 
 if __name__ == "__main__":

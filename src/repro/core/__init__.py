@@ -13,9 +13,11 @@ from .importance import (ImportanceSpec, measure_importance,
 from .probe_engine import (EngineStats, ProbeCallable, ProbeConfig,
                            ProbeTimeout, layer_latencies,
                            measure_latencies, measure_importances)
-from .tables import Tables, build_tables, one_segment_plan
+from .tables import Tables, build_tables, enumerate_probes, one_segment_plan
 from .compress import CompressResult, compress, original_latency
 from . import table_cache
+from .dist_build import (DistBuildError, DistReport, WorkItem,
+                         dist_build_tables, latency_work_items)
 
 __all__ = [
     "CompressionPlan", "LayerDesc", "Segment", "identity_plan",
@@ -30,7 +32,9 @@ __all__ = [
     "xent_loss", "accuracy_perf", "neg_loss_perf", "distill_loss",
     "EngineStats", "ProbeCallable", "ProbeConfig", "ProbeTimeout",
     "layer_latencies", "measure_latencies", "measure_importances",
-    "Tables", "build_tables", "one_segment_plan",
+    "Tables", "build_tables", "enumerate_probes", "one_segment_plan",
     "CompressResult", "compress", "original_latency",
     "table_cache",
+    "DistBuildError", "DistReport", "WorkItem", "dist_build_tables",
+    "latency_work_items",
 ]

@@ -51,6 +51,8 @@ class CompressResult:
     oracle: LatencyOracle | None = None   # the resolved latency oracle
     host: object = None                   # the host that planned (for lowering)
     params: object = None                 # params the plan was built against
+    dist_report: object = None            # DistReport when the table build
+    #                                       fanned out across workers
 
     @property
     def speedup(self) -> float:
@@ -111,6 +113,9 @@ def compress(
     cache_dir: str | None = None,
     probe_config: probe_engine.ProbeConfig | None = None,
     resume: bool = True,
+    workers: int = 0,
+    host_spec: dict | None = None,
+    work_dir: str | None = None,
 ) -> CompressResult | None:
     """Run LayerMerge (or a baseline) at ``T0 = budget_ratio · T_orig``.
 
@@ -122,6 +127,13 @@ def compress(
     :func:`repro.core.tables.build_tables`: probe retry/timeout/
     quarantine policy, and journal-based resumption of an interrupted
     table build (requires ``cache_dir``).
+
+    ``workers > 0`` fans the latency probes out across subprocess workers
+    (:func:`repro.core.dist_build.dist_build_tables` — requires
+    ``cache_dir`` plus a ``host_spec`` naming a factory that rebuilds
+    this host in another process); the fan-out's :class:`DistReport`
+    lands on ``result.dist_report``.  The merged tables are bit-identical
+    to ``workers=0``, so every downstream number is unchanged.
     """
     oracle = _resolve_oracle(latency_oracle)
     layer_lats = probe_engine.layer_latencies(host, oracle, params,
@@ -135,10 +147,26 @@ def compress(
         return _layer_only(host, T0, P, oracle, importance, base_perf, params,
                            t_orig, layer_lats)
 
-    tables = build_tables(host, method=method, latency_oracle=oracle,
-                          importance=importance, base_perf=base_perf,
-                          params=params, engine=engine, cache_dir=cache_dir,
-                          probe_config=probe_config, resume=resume)
+    dist_report = None
+    if workers > 0:
+        from .dist_build import DistBuildError, dist_build_tables
+
+        if cache_dir is None:
+            raise DistBuildError(
+                "workers > 0 requires cache_dir (worker results merge "
+                "through the build journal)")
+        tables, dist_report = dist_build_tables(
+            host, cache_dir=cache_dir, workers=workers,
+            host_spec=host_spec, method=method, latency_oracle=oracle,
+            importance=importance, base_perf=base_perf, params=params,
+            engine=engine, probe_config=probe_config, resume=resume,
+            work_dir=work_dir)
+    else:
+        tables = build_tables(host, method=method, latency_oracle=oracle,
+                              importance=importance, base_perf=base_perf,
+                              params=params, engine=engine,
+                              cache_dir=cache_dir,
+                              probe_config=probe_config, resume=resume)
     t0 = time.perf_counter()
     res = solve_dp(L, tables.fn(), T0, P, method=method,
                    original_k=host.original_k)
@@ -149,7 +177,7 @@ def compress(
                           original_latency=t_orig,
                           compressed_latency=res.latency,
                           dp_seconds=dp_s, oracle=oracle, host=host,
-                          params=params)
+                          params=params, dist_report=dist_report)
 
 
 def _layer_only(host, T0, P, oracle, importance, base_perf, params, t_orig,

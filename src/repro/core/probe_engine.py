@@ -259,6 +259,25 @@ def _sequential_wallclock(host, seg: Segment, params,
     return None, PROBE_QUARANTINED
 
 
+def probe_segment(host, seg: Segment, params, oracle: LatencyOracle, *,
+                  probe_config: ProbeConfig | None = None,
+                  stats: EngineStats | None = None):
+    """Measure ONE segment — the distributed build's unit of work.
+
+    Returns ``(value | None, provenance_flag)`` exactly as a journal
+    record stores them: analytic oracles evaluate the segment cost
+    directly; wall-clock oracles run the guarded sequential prepare+time
+    path (retry/timeout/quarantine per ``probe_config``), where ``None``
+    means quarantined — the journal replay re-derives the deterministic
+    analytic estimate on the coordinator.
+    """
+    cfg = probe_config or ProbeConfig()
+    stats = stats if stats is not None else EngineStats()
+    if isinstance(oracle, WallClockOracle):
+        return _sequential_wallclock(host, seg, params, oracle, cfg, stats)
+    return oracle.segment_latency(host.segment_cost(seg)), PROBE_MEASURED
+
+
 def measure_latencies(
     host,
     segs: Sequence[Segment],

@@ -51,6 +51,11 @@ Failure semantics (the crash-safety contract)
   can neither poison the caller nor wedge every subsequent build; the
   rebuild re-publishes under the original name.  A stale format version
   is a plain miss (the file is valid, just old).
+* **At-most-once publish** — cache publishes and journal appends are
+  gated on :func:`repro.launch.distributed.is_main`: in a multi-process
+  run only process 0 writes here (workers report results through their
+  own shards in :mod:`repro.core.dist_build`), so concurrent processes
+  can never interleave writes to one cache entry or journal.
 """
 from __future__ import annotations
 
@@ -163,9 +168,19 @@ def quarantine(path: str) -> str | None:
 
 
 def save(cache_dir: str, key: str, tables) -> str:
-    """Atomically publish a built :class:`~repro.core.tables.Tables`."""
-    from repro.checkpoint.ckpt import atomic_write_text
+    """Atomically publish a built :class:`~repro.core.tables.Tables`.
 
+    At-most-once publish: in a multi-process run only the main process
+    (:func:`repro.launch.distributed.is_main`) writes — a worker that
+    reaches this call is a no-op, so a job of any size publishes each
+    cache entry exactly once.
+    """
+    from repro.checkpoint.ckpt import atomic_write_text
+    from repro.launch.distributed import is_main
+
+    path = _path(cache_dir, key)
+    if not is_main():
+        return path
     payload = {
         "format": FORMAT_VERSION,
         "build_seconds_latency": tables.build_seconds_latency,
@@ -183,7 +198,7 @@ def save(cache_dir: str, key: str, tables) -> str:
         ],
     }
     faults.hit("table_cache.publish")
-    return atomic_write_text(_path(cache_dir, key), json.dumps(payload))
+    return atomic_write_text(path, json.dumps(payload))
 
 
 def load(cache_dir: str, key: str):
@@ -274,10 +289,35 @@ class BuildJournal:
 
     def put(self, key: str, value, provenance: str = "measured") -> None:
         from repro.checkpoint.ckpt import append_journal_line
+        from repro.launch.distributed import is_main
 
-        append_journal_line(self.path, json.dumps(
-            {"k": key, "v": value, "p": provenance}))
-        self._records[key] = (value, provenance)
+        if is_main():                     # at-most-once durable journal:
+            append_journal_line(self.path, json.dumps(
+                {"k": key, "v": value, "p": provenance}))
+        self._records[key] = (value, provenance)  # non-main: memory only
+
+    def put_many(self, records) -> int:
+        """Durably append many ``(key, value, provenance)`` records in
+        ONE fsync — the distributed merge path
+        (:mod:`repro.core.dist_build`) lands a whole build's worth of
+        worker results here.  Already-journaled keys are skipped;
+        returns the number appended.  Same at-most-once gate as
+        :meth:`put`."""
+        from repro.launch.distributed import is_main
+
+        fresh = [(k, v, p) for k, v, p in records if k not in self._records]
+        if fresh and is_main():
+            os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+            data = b"".join(
+                (json.dumps({"k": k, "v": v, "p": p}) + "\n").encode()
+                for k, v, p in fresh)
+            with open(self.path, "ab") as f:
+                f.write(data)
+                f.flush()
+                os.fsync(f.fileno())
+        for k, v, p in fresh:
+            self._records[k] = (v, p)
+        return len(fresh)
 
     def discard(self) -> None:
         try:

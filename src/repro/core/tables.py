@@ -150,13 +150,7 @@ def build_tables(
     stats = probe_engine.EngineStats(engine=engine)
 
     # Pass 1 — metadata only: enumerate every (i, j, k) probe.
-    probes: list[tuple[int, int, int, float, tuple[int, ...], Segment]] = []
-    for i, j, opts in enum.all_spans():
-        for k, (val, kept) in opts.items():
-            seg = Segment(i=i, j=j, k=k, kept=kept,
-                          original=(j - i == 1 and k == host.original_k(j)
-                                    and set(kept) == set(seg_layers(i, j))))
-            probes.append((i, j, k, val, kept, seg))
+    probes = enumerate_probes(host, method, enum=enum)
 
     # Pass 2 — latency column through the probe engine.
     t0 = time.perf_counter()
@@ -216,6 +210,27 @@ def build_tables(
         # Only after a durable publish is the journal redundant.
         table_cache.discard_journal(cache_dir, key)
     return tables
+
+
+def enumerate_probes(
+    host, method: str = "layermerge", enum=None,
+) -> list[tuple[int, int, int, float, tuple[int, ...], Segment]]:
+    """Metadata-only enumeration of every ``(i, j, k)`` probe.
+
+    THE probe list: the single-process build above and the distributed
+    work-item manifest (:mod:`repro.core.dist_build`) both derive from
+    this function, which is what makes a worker's bucket list provably
+    the coordinator's.  Each element is ``(i, j, k, value, kept, Segment)``.
+    """
+    enum = enum or host.enumerator(method)
+    probes: list[tuple[int, int, int, float, tuple[int, ...], Segment]] = []
+    for i, j, opts in enum.all_spans():
+        for k, (val, kept) in opts.items():
+            seg = Segment(i=i, j=j, k=k, kept=kept,
+                          original=(j - i == 1 and k == host.original_k(j)
+                                    and set(kept) == set(seg_layers(i, j))))
+            probes.append((i, j, k, val, kept, seg))
+    return probes
 
 
 def seg_layers(i: int, j: int) -> tuple[int, ...]:

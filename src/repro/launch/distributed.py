@@ -1,0 +1,393 @@
+"""Process-aware distributed runtime: init, gated I/O, worker entry point.
+
+``launch/mesh.py`` builds meshes over the devices one controller sees;
+this module adds the *process* layer above it: who am I in a multi-process
+job, who is allowed to publish artifacts, and how CI runs a fleet of
+workers on one machine.  Two modes share every code path:
+
+* **``jax.distributed`` mode** — a real multi-host job calls
+  :func:`init_runtime` with a coordinator address; process identity comes
+  from ``jax.distributed.initialize``.
+* **Subprocess-worker mode (CI)** — the coordinator spawns plain
+  subprocesses with ``REPRO_PROCESS_ID`` / ``REPRO_NUM_PROCESSES`` set
+  (and ``--xla_force_host_platform_device_count`` faking a multi-chip
+  host, like the existing pmap subprocess test).  No coordinator service
+  is needed: coordination happens through a shared work directory
+  (:mod:`repro.core.dist_build`).
+
+:func:`process_index` / :func:`process_count` / :func:`is_main` answer
+identity questions without touching jax (env vars win, then explicit
+:func:`init_runtime` state, then the single-process default), so the
+publish-gating call sites in :mod:`repro.core.table_cache` and
+:mod:`repro.runtime.artifact` stay import-cycle-free and near-free.
+
+Failure semantics (the distributed half of the crash-safety contract)
+---------------------------------------------------------------------
+The fault-tolerant table build this module launches
+(:func:`repro.core.dist_build.dist_build_tables`) makes three promises:
+
+* **Lease timeouts** — every work item (one latency-probe bucket) is
+  claimed by writing a lease file with an expiry ``lease_s`` seconds
+  out (``O_CREAT|O_EXCL`` — claims are atomic).  The lease IS the
+  heartbeat deadline: a worker renews only between probe attempts, so a
+  worker that is SIGKILLed, wedged, or stalled simply stops renewing and
+  its leases expire.
+* **Reassignment** — any live worker that finds an expired lease steals
+  it (atomic ``os.replace`` + read-back verification) and re-executes
+  the item; the steal is recorded in the stealing worker's journal
+  shard.  Execution is therefore *at-least-once* — duplicate results are
+  possible when a straggler finishes after being stolen from — while
+  attribution is *exactly-once*: the merge reads shards in a fixed
+  worker order and keeps the first record per item, so the merged tables
+  are a deterministic function of the shard set and BIT-identical to a
+  single-process build regardless of which workers died when.  Items
+  still unfinished after every worker exited (or whose shard records
+  were corrupted) are re-executed inline by the coordinator, so a build
+  with zero surviving workers still completes.
+* **At-most-once publish** — every durable publish (merged table cache
+  entries, build journals, artifacts, bench JSON) is gated on
+  :func:`is_main`: worker processes write only their own journal shards
+  inside the work directory, and exactly one process — the coordinator,
+  ``process_index() == 0`` — merges and publishes.  Workers are spawned
+  with a non-zero ``REPRO_PROCESS_ID`` precisely so a buggy worker that
+  reaches a publish call writes nothing.
+
+Each spawned worker's combined stdout/stderr is kept at
+``<work_dir>/logs/w<idx>.log`` (:func:`repro.core.dist_build.
+worker_log_path`) — the first place to look when ``DistReport.
+dead_workers`` is non-empty.
+
+The serve-side counterpart (worker loss mid-decode → drain, re-form on
+survivors, replay in-flight requests) lives in
+:func:`repro.runtime.serving.serve_with_failover`.
+
+CLI::
+
+  # one worker of a distributed table build (normally spawned by the
+  # coordinator, but runnable by hand against a shared work dir):
+  python -m repro.launch.distributed --worker --dir WORK \\
+      --host-spec '{"factory": "repro.testing.hosts:tiny_resnet_host"}'
+
+  # deterministic coordinator+2-worker fault smoke (verify.sh leg):
+  python -m repro.launch.distributed --fault-smoke
+"""
+from __future__ import annotations
+
+import json
+import os
+
+_STATE = {"process_id": None, "num_processes": None}
+
+ENV_PROCESS_ID = "REPRO_PROCESS_ID"
+ENV_NUM_PROCESSES = "REPRO_NUM_PROCESSES"
+
+
+def init_runtime(coordinator_address: str | None = None,
+                 num_processes: int | None = None,
+                 process_id: int | None = None,
+                 local_device_ids=None) -> int:
+    """Initialize process identity; returns this process's index.
+
+    With ``coordinator_address`` this is a thin wrapper over
+    ``jax.distributed.initialize`` (real multi-host jobs).  Without it,
+    identity comes from explicit arguments or the ``REPRO_PROCESS_ID`` /
+    ``REPRO_NUM_PROCESSES`` environment (subprocess-worker CI mode),
+    defaulting to the single-process ``(0, 1)``.
+    """
+    if coordinator_address is not None:
+        import jax
+
+        jax.distributed.initialize(
+            coordinator_address=coordinator_address,
+            num_processes=num_processes, process_id=process_id,
+            local_device_ids=local_device_ids)
+        _STATE["process_id"] = jax.process_index()
+        _STATE["num_processes"] = jax.process_count()
+        return _STATE["process_id"]
+    _STATE["process_id"] = (
+        process_id if process_id is not None
+        else int(os.environ.get(ENV_PROCESS_ID, "0")))
+    _STATE["num_processes"] = (
+        num_processes if num_processes is not None
+        else int(os.environ.get(ENV_NUM_PROCESSES, "1")))
+    return _STATE["process_id"]
+
+
+def process_index() -> int:
+    """This process's index in the job (0 = coordinator/main).
+
+    Resolution order: explicit :func:`init_runtime` state, then the
+    ``REPRO_PROCESS_ID`` environment, then 0.  Deliberately does NOT
+    call ``jax.process_index()`` unless :func:`init_runtime` ran — the
+    call sites gating I/O must never trigger a backend init.
+    """
+    if _STATE["process_id"] is not None:
+        return _STATE["process_id"]
+    return int(os.environ.get(ENV_PROCESS_ID, "0"))
+
+
+def process_count() -> int:
+    """Total processes in the job (same resolution as
+    :func:`process_index`)."""
+    if _STATE["num_processes"] is not None:
+        return _STATE["num_processes"]
+    return int(os.environ.get(ENV_NUM_PROCESSES, "1"))
+
+
+def is_main() -> bool:
+    """True iff this process may publish (process index 0).
+
+    THE I/O gate for multi-process runs: artifact saves, table-cache
+    publishes, build-journal appends, and bench-JSON reports all check
+    it, so a job of any size publishes each output exactly once.
+    """
+    return process_index() == 0
+
+
+def publish_text(path: str, text: str) -> str | None:
+    """``is_main``-gated atomic text publish (bench reports, summaries).
+
+    Returns the path, or ``None`` when this process is not the
+    publisher (nothing is written).
+    """
+    if not is_main():
+        return None
+    from repro.checkpoint.ckpt import atomic_write_text
+
+    return atomic_write_text(path, text)
+
+
+def publish_json(path: str, payload) -> str | None:
+    """``is_main``-gated atomic JSON publish."""
+    return publish_text(path, json.dumps(payload, indent=2))
+
+
+def worker_env(worker_id: int, num_workers: int, *,
+               devices: int | None = None, platform: str = "cpu",
+               faults_spec: str | None = None,
+               extra: dict | None = None) -> dict:
+    """Environment for spawning worker ``worker_id`` of ``num_workers``.
+
+    Workers get process index ``worker_id + 1`` (the coordinator is 0),
+    so :func:`is_main` is False in every worker and publish-gated writes
+    are inert there.  ``platform`` defaults to cpu for CI (see
+    :mod:`repro.testing.subproc` for why pinning matters); a real fleet
+    passes its accelerator platform.
+    """
+    from repro.testing.subproc import subprocess_env
+
+    return subprocess_env(devices=devices, platform=platform,
+                          process_id=worker_id + 1,
+                          num_processes=num_workers + 1,
+                          faults_spec=faults_spec, extra=extra)
+
+
+def survivor_mesh(exclude=(), axes: tuple[str, ...] = ("data",)):
+    """Re-form a mesh over the devices that survive a worker loss.
+
+    ``exclude``: device ids to drop (the lost worker's).  The result is
+    a 1-D mesh over the remaining devices on the first axis name (the
+    data/slot axis serving shards over).  Raises when nothing survives.
+    """
+    import jax
+    import numpy as np
+
+    excluded = set(exclude)
+    devs = [d for d in jax.devices() if d.id not in excluded]
+    if not devs:
+        raise RuntimeError("no surviving devices to re-form a mesh on")
+    shape = (len(devs),) + (1,) * (len(axes) - 1)
+    return jax.sharding.Mesh(np.array(devs).reshape(shape), axes)
+
+
+# ---------------------------------------------------------------------------
+# Worker entry point + deterministic fault smoke
+# ---------------------------------------------------------------------------
+
+def _run_worker_cli(args) -> int:
+    from repro.core import dist_build
+
+    init_runtime()
+    host_spec = json.loads(args.host_spec)
+    host, params = dist_build.resolve_host_spec(host_spec)
+    oracle = dist_build.resolve_oracle_spec(json.loads(args.oracle_spec))
+    cfg = dist_build.resolve_probe_spec(
+        json.loads(args.probe_spec) if args.probe_spec else None)
+    try:
+        done = dist_build.run_worker(
+            args.dir, args.worker_id, host, params, oracle,
+            engine=args.engine, method=args.method, probe_config=cfg,
+            lease_s=args.lease_s, deadline_s=args.deadline_s)
+    except dist_build.DistBuildError as e:
+        print(f"worker {args.worker_id}: {e}", flush=True)
+        return 3
+    print(json.dumps({"worker": args.worker_id, "items_done": done}),
+          flush=True)
+    return 0
+
+
+def dist_fault_smoke() -> dict:
+    """Coordinator + 2 workers; worker 0 SIGKILLed mid-bucket (holding a
+    lease); the merged tables must be BIT-identical to a single-process
+    build and the reassignment must be recorded.
+
+    Workers spawn serially (worker 1 starts after worker 0 exits) so the
+    kill is deterministic: worker 0 always claims its second item and
+    dies holding its lease, worker 1 always finds that lease expired and
+    steals it.
+    """
+    import tempfile
+
+    from repro.core import build_tables, dist_build
+    from repro.testing import faults, hosts
+
+    host, params = hosts.tiny_resnet_host()
+    reference = build_tables(host, params=params)
+    with tempfile.TemporaryDirectory() as cache_dir:
+        with faults.inject(faults.Fault("dist.item", "kill-worker",
+                                        nth=2, widx=0)):
+            tables, rep = dist_build.dist_build_tables(
+                host, params=params, cache_dir=cache_dir, workers=2,
+                host_spec={"factory":
+                           "repro.testing.hosts:tiny_resnet_host",
+                           "kwargs": {}},
+                lease_s=0.5, serial_spawn=True)
+    if tables.entries != reference.entries:
+        raise AssertionError("distributed tables diverged from the "
+                             "single-process build")
+    if tables.num_pruned != reference.num_pruned:
+        raise AssertionError("distributed Pareto drops diverged")
+    if 0 not in rep.dead_workers:
+        raise AssertionError(
+            f"worker 0 was expected to die (exit 17), report: "
+            f"{rep.as_dict()}")
+    if not rep.reassigned:
+        raise AssertionError(
+            f"the killed worker's lease was never reassigned: "
+            f"{rep.as_dict()}")
+    return {
+        "items": rep.items,
+        "dead_workers": rep.dead_workers,
+        "reassigned": rep.reassigned,
+        "completed_by": rep.completed_by,
+        "coordinator_items": rep.coordinator_items,
+        "bit_identical": True,
+    }
+
+
+def serve_failover_smoke() -> dict:
+    """Worker loss mid-decode → drain, re-form on survivors, replay: every
+    request ends with a disposition (zero lost) and the generated tokens
+    are BIT-identical to an uninterrupted run."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.runtime import serving
+    from repro.testing import faults
+    from repro.train.step import make_serve_step
+
+    cfg = dataclasses.replace(
+        get_config("smollm-135m").reduced(), num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=128)
+    params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+    step = make_serve_step(cfg)
+
+    def mk(b, s):
+        return T.init_cache(cfg, b, s)
+
+    prompt = serving.random_prompts(0, 5, 5, cfg.vocab_size)
+    lens = jnp.full((5,), 5, jnp.int32)
+    kw = dict(tokens=6, slots=2, chunk=3)
+    clean = serving.serve_continuous(step, params, mk, prompt, lens,
+                                     clock=faults.TickClock(), **kw)
+    with faults.inject(faults.Fault("serve.worker", "raise", nth=3)):
+        out = serving.serve_with_failover(step, params, mk, prompt, lens,
+                                          clock=faults.TickClock(), **kw)
+    rep = out.report
+    if rep.failovers != 1 or not rep.replayed:
+        raise AssertionError(f"expected one failover with replays, got "
+                             f"failovers={rep.failovers} "
+                             f"replayed={rep.replayed}")
+    if sorted(rep.dispositions) != list(range(5)):
+        raise AssertionError(
+            f"request(s) lost in failover: dispositions="
+            f"{sorted(rep.dispositions)}")
+    if not np.array_equal(np.asarray(out[0]), np.asarray(clean[0])):
+        raise AssertionError("replayed tokens diverged from the "
+                             "uninterrupted run")
+    return {"failovers": rep.failovers, "lost_workers": rep.lost_workers,
+            "replayed": rep.replayed, "completed": sorted(rep.completed),
+            "bit_identical": True}
+
+
+def dist_smoke() -> dict:
+    """Clean 2-worker parallel build ≡ single-process build."""
+    import tempfile
+
+    from repro.core import build_tables, dist_build
+    from repro.testing import hosts
+
+    host, params = hosts.tiny_resnet_host()
+    reference = build_tables(host, params=params)
+    with tempfile.TemporaryDirectory() as cache_dir:
+        tables, rep = dist_build.dist_build_tables(
+            host, params=params, cache_dir=cache_dir, workers=2,
+            host_spec={"factory": "repro.testing.hosts:tiny_resnet_host",
+                       "kwargs": {}},
+            lease_s=5.0)
+    if tables.entries != reference.entries:
+        raise AssertionError("distributed tables diverged from the "
+                             "single-process build")
+    return {"items": rep.items, "completed_by": rep.completed_by,
+            "dead_workers": rep.dead_workers, "bit_identical": True}
+
+
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser(prog="python -m repro.launch.distributed")
+    ap.add_argument("--worker", action="store_true",
+                    help="run one distributed-build worker loop")
+    ap.add_argument("--dir", default=None, help="shared work directory")
+    ap.add_argument("--worker-id", type=int, default=0)
+    ap.add_argument("--host-spec", default=None,
+                    help='JSON {"factory": "module:function", "kwargs": {}}')
+    ap.add_argument("--oracle-spec", default='{"cls": "AnalyticTPUOracle"}')
+    ap.add_argument("--probe-spec", default=None,
+                    help="JSON ProbeConfig fields (timeout_s, retries, ...)")
+    ap.add_argument("--engine", default="batched",
+                    choices=("batched", "sequential"))
+    ap.add_argument("--method", default="layermerge")
+    ap.add_argument("--lease-s", type=float, default=30.0)
+    ap.add_argument("--deadline-s", type=float, default=600.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="clean 2-worker build ≡ single-process build")
+    ap.add_argument("--fault-smoke", action="store_true",
+                    help="kill worker 0 mid-bucket; assert bit-identical "
+                         "merged tables + a recorded lease reassignment, "
+                         "then a serve-failover replay with zero lost "
+                         "requests")
+    args = ap.parse_args(argv)
+    if args.worker:
+        if not (args.dir and args.host_spec):
+            ap.error("--worker requires --dir and --host-spec")
+        raise SystemExit(_run_worker_cli(args))
+    if args.fault_smoke:
+        print(json.dumps(dist_fault_smoke(), indent=2))
+        print(json.dumps(serve_failover_smoke(), indent=2))
+        print("DIST_FAULT_SMOKE_OK")
+        return
+    if args.smoke:
+        print(json.dumps(dist_smoke(), indent=2))
+        print("DIST_SMOKE_OK")
+        return
+    ap.print_help()
+
+
+if __name__ == "__main__":
+    main()

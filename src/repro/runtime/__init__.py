@@ -72,8 +72,18 @@ failure contract is explicit:
   shutdown **drains**: in-flight requests finish, waiting ones come
   back ``unserved``.  Per-request latency, queue high-water mark, and
   sustained tok/s land on the same :class:`ServeReport`.
+* The serving layer fails over across hosts: a worker loss mid-decode
+  surfaces as :class:`repro.runtime.serving.WorkerLost`, and
+  :func:`serve_with_failover` harvests the finished requests, re-forms
+  the engine on the surviving capacity, and replays the in-flight
+  requests from their recorded prompts — deterministic decode makes the
+  replayed tokens bit-identical, and the :class:`ServeReport` records
+  the event (``failovers`` / ``lost_workers`` / ``replayed``) so
+  requests never silently vanish.
 * Table builds journal their probes and resume bit-identically — that
-  half of the contract is documented in :mod:`repro.core.table_cache`.
+  half of the contract is documented in :mod:`repro.core.table_cache`;
+  the multi-process fan-out and lease/reassignment contract lives in
+  :mod:`repro.core.dist_build` and :mod:`repro.launch.distributed`.
 """
 from .artifact import (ArtifactError, CompressedArtifact, fingerprint, load,
                        save)
@@ -84,10 +94,11 @@ from .ir import (AttnUnit, ConvUnit, LowRankUnit, PoolUnit, SublayerUnit,
                  UnitGraph, UpsampleUnit, annotate_axes, bind_params,
                  graph_axes, graph_params)
 from .serving import (DISPOSITIONS, ContinuousEngine, ServeOutput,
-                      ServeReport, decode_tok_s, generate_fused,
-                      greedy_token, pad_prompts, ragged_prompts,
-                      random_prompts, serve_continuous, serve_loop,
-                      serve_loop_pertoken, serve_requests, stack_cache)
+                      ServeReport, WorkerLost, decode_tok_s,
+                      generate_fused, greedy_token, pad_prompts,
+                      ragged_prompts, random_prompts, serve_continuous,
+                      serve_loop, serve_loop_pertoken, serve_requests,
+                      serve_with_failover, stack_cache)
 
 __all__ = [
     "ArtifactError", "CompressedArtifact", "fingerprint", "load", "save",
@@ -98,7 +109,8 @@ __all__ = [
     "UnitGraph", "UpsampleUnit", "annotate_axes", "bind_params",
     "graph_axes", "graph_params",
     "DISPOSITIONS", "ContinuousEngine", "ServeOutput", "ServeReport",
-    "decode_tok_s", "generate_fused", "greedy_token", "pad_prompts",
-    "ragged_prompts", "random_prompts", "serve_continuous", "serve_loop",
-    "serve_loop_pertoken", "serve_requests", "stack_cache",
+    "WorkerLost", "decode_tok_s", "generate_fused", "greedy_token",
+    "pad_prompts", "ragged_prompts", "random_prompts", "serve_continuous",
+    "serve_loop", "serve_loop_pertoken", "serve_requests",
+    "serve_with_failover", "stack_cache",
 ]

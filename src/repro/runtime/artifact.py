@@ -183,12 +183,19 @@ def save(path: str, graph: ir.UnitGraph, plan=None,
     """Atomically publish ``graph`` (+ plan + metadata) to ``path``.
 
     Returns the content fingerprint.  A crash mid-write leaves only a
-    ``path + '.tmp'`` orphan, never a half-written artifact.
+    ``path + '.tmp'`` orphan, never a half-written artifact.  In a
+    multi-process run only the main process writes the file
+    (:func:`repro.launch.distributed.is_main` — the at-most-once publish
+    contract); non-main processes still compute and return the
+    fingerprint, so every process agrees on the artifact identity.
     """
     from repro.checkpoint.ckpt import atomic_writer
+    from repro.launch.distributed import is_main
 
     spec, arrays = _payload(graph, plan, meta)
     fp = _digest(spec, arrays)
+    if not is_main():
+        return fp
     with atomic_writer(path) as f:
         np.savez(f, __spec__=np.array(json.dumps(spec)),
                  __fingerprint__=np.array(fp), **arrays)

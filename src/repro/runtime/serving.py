@@ -77,6 +77,20 @@ Failure semantics (the serving half of the crash-safety contract):
   :meth:`ContinuousEngine.drain`) the engine finishes every in-flight
   request, admits nothing new, and reports the still-waiting ones
   ``unserved``.
+* **Cross-host failover** — under a multi-process mesh a serving worker
+  can die mid-decode.  The engine surfaces that as :class:`WorkerLost`
+  (a ``health_check`` callable polled before every chunk, or the
+  deterministic ``serve.worker`` fault point);
+  :func:`serve_with_failover` catches it, harvests every request that
+  already finished, re-forms the engine on the surviving capacity (by
+  default halving the slot count per failover — the stand-in for
+  re-forming the mesh on survivors), and **replays** the in-flight
+  requests from their recorded prompts under their original request
+  ids.  Decode is deterministic and slots are batch-independent, so a
+  replayed request's tokens are bit-identical to an uninterrupted run.
+  The :class:`ServeReport` records the event (``failovers``,
+  ``lost_workers``, ``replayed``) — requests never silently vanish:
+  every submitted rid carries a disposition even after a worker loss.
 * **Reporting** — both engines still unpack as ``(gen, seconds)`` (the
   return is a tuple subclass) but carry a :class:`ServeReport` on
   ``.report``: one disposition per request (:data:`DISPOSITIONS` —
@@ -88,8 +102,9 @@ Deterministic fault hooks (:mod:`repro.testing.faults`): the continuous
 engine calls ``hit('serve.arrival')`` per ingested arrival,
 ``hit('serve.admit')`` per slot admission, and ``hit('serve.chunk')``
 before every chunk dispatch (``delay`` rules there model stragglers);
-declarative ``nan@serve.nan:rid=R,t=G`` rules poison request ``R``'s
-logits at generation index ``G`` inside the jitted chunk.
+``raise@serve.worker`` surfaces as a :class:`WorkerLost` (the failover
+trigger); declarative ``nan@serve.nan:rid=R,t=G`` rules poison request
+``R``'s logits at generation index ``G`` inside the jitted chunk.
 
 The greedy-argmax / prompt-encoding glue the example and the bench used
 to duplicate lives here too: :func:`greedy_token`, :func:`random_prompts`,
@@ -408,6 +423,11 @@ class ServeReport:
     quarantined_slots: list[int] = dataclasses.field(default_factory=list)
     sustained_tok_s: float = 0.0
     engine: str = "fixed"
+    # Cross-host failover accounting (serve_with_failover; default-empty
+    # so every earlier caller keeps working):
+    failovers: int = 0                 # engine re-formations after losses
+    lost_workers: list = dataclasses.field(default_factory=list)
+    replayed: list[int] = dataclasses.field(default_factory=list)
 
     @property
     def ok(self) -> bool:
@@ -435,6 +455,24 @@ class ServeOutput(tuple):
         out = super().__new__(cls, (gen, seconds))
         out.report = report
         return out
+
+
+class WorkerLost(RuntimeError):
+    """A serving worker (process/device) died mid-decode.
+
+    Raised from the engine's chunk dispatch — either the ``health_check``
+    callable reported lost workers, or the deterministic ``serve.worker``
+    fault point fired.  Carries the lost worker ids on ``.lost``.
+    :func:`serve_with_failover` catches it, harvests finished requests,
+    re-forms the engine on surviving capacity, and replays the in-flight
+    requests; an uncaught ``WorkerLost`` from a bare
+    :class:`ContinuousEngine` leaves every unfinished request with
+    ``disposition None`` — visibly incomplete, never silently dropped.
+    """
+
+    def __init__(self, msg: str, lost=()):
+        super().__init__(msg)
+        self.lost = list(lost)
 
 
 # ---------------------------------------------------------------------------
@@ -701,7 +739,8 @@ class ContinuousEngine:
     def __init__(self, step, params, make_cache, *, slots: int,
                  max_seq: int, chunk: int = 8, rules=None, eos_id=None,
                  logit_hook=None, clock=None, max_queue: int | None = None,
-                 slot_nan_limit: int = 2, warm: bool = True):
+                 slot_nan_limit: int = 2, warm: bool = True,
+                 health_check=None):
         if slots < 1:
             raise ValueError(f"need at least one slot, got {slots}")
         if chunk < 1:
@@ -716,6 +755,7 @@ class ContinuousEngine:
         self._virtual = clock is not None
         self._max_queue = max_queue
         self._nan_limit = slot_nan_limit
+        self._health_check = health_check
         with use_rules(rules):
             self._fresh = make_cache(1, max_seq)
             self._cache = stack_cache(self._fresh, slots)
@@ -905,7 +945,27 @@ class ContinuousEngine:
                     poison[b] = i
         return jnp.asarray(feed), jnp.asarray(fp), jnp.asarray(poison)
 
+    def _check_workers(self):
+        """Surface a worker loss BEFORE dispatching the next chunk.
+
+        ``health_check()`` (when given) returns the ids of lost workers
+        (empty/None ⇒ healthy); the ``serve.worker`` fault point injects
+        the same condition deterministically in tests.  Either raises
+        :class:`WorkerLost` — in-flight slots keep their partial state
+        untouched so the failover layer can replay their requests.
+        """
+        try:
+            _faults.hit("serve.worker")
+        except _faults.FaultError as e:
+            raise WorkerLost(str(e)) from e
+        if self._health_check is not None:
+            lost = self._health_check()
+            if lost:
+                raise WorkerLost(f"worker(s) lost: {sorted(lost)}",
+                                 lost=lost)
+
     def _run_chunk(self):
+        self._check_workers()
         _faults.hit("serve.chunk")
         feed, fp, poison = self._build_feed()
         prev, cache, toks, oks = self._chunk_fn(
@@ -1064,3 +1124,128 @@ def serve_continuous(step, params, make_cache, prompts, lengths=None, *,
         tk = eng.requests[r].tokens[:eff]
         gen[r, :len(tk)] = tk
     return ServeOutput(jnp.asarray(gen), seconds, report)
+
+
+def serve_with_failover(step, params, make_cache, prompts, lengths=None, *,
+                        tokens: int, slots: int | None = None,
+                        chunk: int = 8, rules=None, warm: bool = True,
+                        token_budget: int | None = None,
+                        time_budget_s: float | None = None, eos_id=None,
+                        logit_hook=None, arrivals=None, deadlines=None,
+                        max_queue: int | None = None,
+                        slot_nan_limit: int = 2, clock=None,
+                        max_seq: int | None = None, max_failovers: int = 2,
+                        health_check=None, engine_factory=None):
+    """:func:`serve_continuous` with cross-host failover.
+
+    Runs the continuous engine; when a worker loss surfaces
+    (:class:`WorkerLost` — from ``health_check`` or the ``serve.worker``
+    fault point) the coordinator **drains** what finished, **re-forms**
+    the engine on surviving capacity, and **replays** every in-flight
+    request from its recorded prompt under its original rid.  Decode is
+    deterministic and slots are batch-independent, so replayed tokens
+    are bit-identical to an uninterrupted run.
+
+    ``engine_factory(attempt) -> dict`` customizes the re-formed engine
+    (any :class:`ContinuousEngine` keyword, e.g. ``slots``/``rules`` for
+    a survivor mesh from
+    :func:`repro.launch.distributed.survivor_mesh`); the default halves
+    the slot count per failover.  After ``max_failovers`` re-formations
+    the remaining in-flight requests are reported ``unserved`` — every
+    rid always carries a disposition.  The merged report records the
+    history: ``failovers``, ``lost_workers``, ``replayed`` (rids, with
+    repeats if a request was replayed more than once).
+
+    Replay caveat: a replayed request restarts its latency/deadline
+    clock at the re-formed engine's epoch (its original arrival offset
+    is not re-applied), so with ``deadlines=`` a replay gets a fresh
+    deadline rather than an immediate miss.
+    """
+    prompts, lengths = _normalize_requests(prompts, lengths)
+    R, P = prompts.shape
+    eff = tokens if token_budget is None else max(1, min(tokens,
+                                                         token_budget))
+    master = ServeReport(tokens_per_request=eff,
+                         engine="continuous+failover")
+    if R == 0:
+        return ServeOutput(jnp.zeros((0, eff), jnp.int32), 0.0, master)
+    base_slots = min(slots or min(4, R), R)
+    window = max_seq if max_seq is not None else P + eff
+    pn = np.asarray(jax.device_get(prompts))
+    ln = np.asarray(jax.device_get(lengths))
+
+    def default_factory(attempt: int) -> dict:
+        # survivor capacity stand-in: half the slots per failover (slots
+        # are batch-independent, so shrinking never changes tokens)
+        return {"slots": max(1, base_slots >> attempt)}
+
+    factory = engine_factory or default_factory
+    outstanding = list(range(R))
+    tokens_final: dict[int, list[int]] = {}
+    seconds = 0.0
+    attempt = 0
+    while outstanding:
+        kw = dict(factory(attempt))
+        n_slots = max(1, min(int(kw.pop("slots", base_slots)),
+                             len(outstanding)))
+        eng = ContinuousEngine(
+            step, params, make_cache, slots=n_slots,
+            max_seq=kw.pop("max_seq", window), chunk=kw.pop("chunk", chunk),
+            rules=kw.pop("rules", rules), eos_id=kw.pop("eos_id", eos_id),
+            logit_hook=kw.pop("logit_hook", logit_hook),
+            clock=kw.pop("clock", clock),
+            max_queue=kw.pop("max_queue", max_queue),
+            slot_nan_limit=kw.pop("slot_nan_limit", slot_nan_limit),
+            warm=kw.pop("warm", warm),
+            health_check=kw.pop("health_check", health_check), **kw)
+        replaying = attempt > 0
+        for r in outstanding:
+            eng.submit(pn[r, :int(ln[r])], tokens=eff,
+                       arrival=0.0 if (replaying or arrivals is None)
+                       else float(arrivals[r]),
+                       deadline_s=None if deadlines is None
+                       else deadlines[r], rid=r)
+        t0 = time.perf_counter()
+        lost = None
+        try:
+            eng.run(time_budget_s=time_budget_s)
+        except WorkerLost as e:
+            lost = e
+        seconds += time.perf_counter() - t0
+        rep = eng.report
+        master.completed.extend(rep.completed)
+        master.aborted.update(rep.aborted)
+        master.shed.extend(rep.shed)
+        master.deadline_miss.update(rep.deadline_miss)
+        master.unserved.extend(rep.unserved)
+        master.latency_s.update(rep.latency_s)
+        master.queue_peak = max(master.queue_peak, rep.queue_peak)
+        master.admitted += rep.admitted
+        master.deadline_hit = master.deadline_hit or rep.deadline_hit
+        master.quarantined_slots.extend(rep.quarantined_slots)
+        still = []
+        for r in outstanding:
+            req = eng.requests[r]
+            if req.disposition is None:        # in flight at the loss
+                still.append(r)
+            else:
+                tokens_final[r] = list(req.tokens)[:eff]
+        outstanding = still
+        if lost is None:
+            break                              # clean run: all disposed
+        master.failovers += 1
+        master.lost_workers.extend(lost.lost if lost.lost else [attempt])
+        master.replayed.extend(outstanding)
+        attempt += 1
+        if attempt > max_failovers:
+            for r in outstanding:              # give up, but never drop
+                master.unserved.append(r)
+                tokens_final[r] = []
+            outstanding = []
+    gen = np.zeros((R, eff), np.int32)
+    total = 0
+    for r, tk in tokens_final.items():
+        gen[r, :len(tk)] = tk
+        total += len(tk)
+    master.sustained_tok_s = total / max(seconds, 1e-9)
+    return ServeOutput(jnp.asarray(gen), seconds, master)

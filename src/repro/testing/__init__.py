@@ -7,5 +7,14 @@ fault plan is explicitly activated, so production modules may import it
 unconditionally.  (Not imported eagerly here: ``python -m
 repro.testing.faults`` would otherwise re-execute the module under
 runpy and split the fault-plan state across two module objects.)
+
+:mod:`repro.testing.subproc` is THE way tests and smokes build
+environments for child python processes (pinned CPU platform, forced
+host device count, process identity, fault-plan env) — one stdlib-only
+helper instead of a hand-rolled env dict per test file.
+
+:mod:`repro.testing.hosts` holds deterministic host factories that can
+be named across process boundaries (``"module:function"`` specs for the
+distributed build workers) and shared by tests/smokes/benches.
 """
-__all__ = ["faults"]
+__all__ = ["faults", "hosts", "subproc"]

@@ -23,10 +23,21 @@ Design:
   ``"kill"`` (a :class:`FaultKill` — an in-process stand-in for SIGKILL;
   derives :class:`BaseException` so no retry loop may swallow it),
   ``"exit"`` (``os._exit`` — a REAL crash, for subprocess kill-and-resume
-  tests), ``"delay"`` (``time.sleep`` — stragglers/timeouts), and
-  ``"torn"`` (truncate the bytes of the guarded write, then kill at the
-  matching ``<point>.done`` hit — a torn write only matters if the
-  process died before completing it).
+  tests), ``"delay"`` (``time.sleep`` — stragglers/timeouts), ``"torn"``
+  (truncate the bytes of the guarded write, then kill at the matching
+  ``<point>.done`` hit — a torn write only matters if the process died
+  before completing it), and ``"garble"`` (replace a guarded journal
+  line with complete-but-unparsable bytes — a corrupted record, as
+  opposed to a torn one).
+* **Process-level actions** target a *worker subprocess* of the
+  distributed build by index: ``kill-worker:<idx>@<point>``,
+  ``stall-worker:<idx>@<point>~seconds``, ``corrupt-shard:<idx>@<point>``.
+  These never fire in the process holding the plan — the coordinator
+  translates them into each worker's ``REPRO_FAULTS`` environment via
+  :func:`worker_env_spec` (kill-worker → ``exit`` (a real crash, status
+  17), stall-worker → ``delay``, corrupt-shard → ``garble``), so "kill
+  worker 0 at its 2nd claimed item" is one declarative rule on the
+  coordinator.
 * ``REPRO_FAULTS="exit@tables.bucket:3"`` activates a plan from the
   environment — how a *separate process* is crashed for the true
   kill-and-resume smoke (``python -m repro.testing.faults --smoke``,
@@ -52,6 +63,17 @@ Injection points currently wired into the pipeline:
                        request ``R``'s logits at generation index ``G``
                        inside the jitted chunk (read via
                        :func:`serve_nan_spec`, never :func:`hit`)
+``serve.worker``       before each chunk dispatch, raised as a
+                       :class:`~repro.runtime.serving.WorkerLost` (a lost
+                       serving process → drain/re-form/replay failover)
+``dist.claim``         after a distributed worker claims a work-item lease
+``dist.item``          after claim, before execution — a kill here dies
+                       holding the lease with no result (the canonical
+                       mid-bucket worker death)
+``dist.done``          after an item's done marker is written
+``dist.shard.append``  ``mangle`` over a worker's shard-journal line
+                       (``garble``/``torn`` ⇒ corrupt/torn shard records;
+                       ``dist.shard.append.done`` after the fsync)
 =====================  =====================================================
 
 NaN injection for serving cannot go through :func:`hit` (it must run
@@ -71,7 +93,18 @@ import os
 import threading
 import time
 
-ACTIONS = ("raise", "kill", "exit", "delay", "torn", "nan")
+ACTIONS = ("raise", "kill", "exit", "delay", "torn", "nan", "garble",
+           "kill-worker", "stall-worker", "corrupt-shard")
+
+#: Actions that target a worker subprocess (carry a worker index and are
+#: translated into that worker's environment by :func:`worker_env_spec`
+#: instead of firing locally).
+PROCESS_ACTIONS = ("kill-worker", "stall-worker", "corrupt-shard")
+
+#: What a ``garble`` rule leaves on disk: a complete (newline-terminated)
+#: but unparsable journal line — the reader must treat it as corrupt, not
+#: torn.
+GARBLED_LINE = b"#garbled journal record#\n"
 
 
 class FaultError(RuntimeError):
@@ -101,6 +134,7 @@ class Fault:
     exit_code: int = 17     # "exit": status for the hard crash
     rid: int = -1           # "nan": target request id (serve.nan)
     at: int = -1            # "nan": generation index to poison
+    widx: int = -1          # process actions: target worker index
 
     def __post_init__(self):
         if self.action not in ACTIONS:
@@ -127,9 +161,17 @@ class FaultPlan:
         self._lock = threading.Lock()
 
     def _arm(self, point: str) -> Fault | None:
-        """Count one hit of ``point`` and return the rule it arms."""
+        """Count one hit of ``point`` and return the rule it arms.
+
+        Worker-targeted rules (``widx >= 0``) never arm locally: they
+        are directives for :func:`worker_env_spec` to translate into the
+        target worker's environment, and the coordinator hits the same
+        points itself on its inline-fallback path.
+        """
         n = self._counts[point] = self._counts.get(point, 0) + 1
         for rule in self.rules:
+            if rule.widx >= 0:
+                continue
             if rule.point == point and rule.armed(n):
                 self.fired.append((point, n, rule.action))
                 return rule
@@ -168,6 +210,8 @@ class FaultPlan:
                 return data[: rule.keep_bytes]
         if rule is None:
             return data
+        if rule.action == "garble":          # corrupt, not torn: the full
+            return GARBLED_LINE              # line lands, but unparsable
         # non-torn rules on a mangle point behave like hit() rules
         if rule.action == "raise":
             raise FaultError(f"injected failure at {point}")
@@ -196,27 +240,60 @@ def parse_env_spec(spec: str) -> FaultPlan:
 
     Request-targeted serve rules use key=value counts instead:
     ``nan@serve.nan:rid=1,t=2`` poisons request 1's logits at generation
-    index 2 (see :func:`serve_nan_spec`).
+    index 2 (see :func:`serve_nan_spec`).  Process actions carry the
+    target worker index on the action token:
+    ``kill-worker:0@dist.item:2`` kills worker 0 at its 2nd claimed item.
     """
     rules = []
     for item in filter(None, (s.strip() for s in spec.split(";"))):
         action, _, rest = item.partition("@")
         point, _, counts = rest.partition(":")
+        widx = -1
+        base, sep, wid = action.partition(":")
+        if sep and base in PROCESS_ACTIONS:
+            action, widx = base, int(wid)
         if not (action and point):
             raise ValueError(f"bad {ENV_VAR} item {item!r} "
                              "(want action@point[:nth[xtimes][~seconds]])")
         if "=" in counts:                    # key=value form (serve.nan)
             kv = dict(p.split("=", 1) for p in counts.split(","))
-            rules.append(Fault(point=point, action=action,
+            rules.append(Fault(point=point, action=action, widx=widx,
                                rid=int(kv.get("rid", -1)),
                                at=int(kv.get("t", kv.get("at", -1)))))
             continue
         counts, _, seconds = (counts or "1").partition("~")
         nth, _, times = counts.partition("x")
-        rules.append(Fault(point=point, action=action, nth=int(nth or 1),
-                           times=int(times or 1),
+        rules.append(Fault(point=point, action=action, widx=widx,
+                           nth=int(nth or 1), times=int(times or 1),
                            seconds=float(seconds or 0.0)))
     return FaultPlan(*rules)
+
+
+def worker_env_spec(widx: int, plan: FaultPlan | None = None) -> str | None:
+    """The ``REPRO_FAULTS`` spec for worker ``widx``, or ``None``.
+
+    Translates the active plan's process-level rules targeting this
+    worker into worker-local primitives: ``kill-worker`` → ``exit`` (a
+    REAL crash, status 17), ``stall-worker`` → ``delay`` (the worker
+    survives but its leases expire), ``corrupt-shard`` → ``garble`` at
+    ``dist.shard.append`` (the record lands complete but unparsable).
+    The coordinator's spawn path calls this for every worker it starts.
+    """
+    plan = plan if plan is not None else active()
+    if plan is None:
+        return None
+    parts = []
+    for r in plan.rules:
+        if r.widx != widx:
+            continue
+        counts = f"{r.nth}x{r.times}"
+        if r.action == "kill-worker":
+            parts.append(f"exit@{r.point}:{counts}")
+        elif r.action == "stall-worker":
+            parts.append(f"delay@{r.point}:{counts}~{r.seconds}")
+        elif r.action == "corrupt-shard":
+            parts.append(f"garble@{r.point or 'dist.shard.append'}:{counts}")
+    return ";".join(parts) or None
 
 
 def active() -> FaultPlan | None:
@@ -350,21 +427,16 @@ def kill_resume_smoke(kill_at_bucket: int = 4) -> dict:
     ``os._exit`` — no Python cleanup), resume in this process, and verify
     the resumed tables are bit-identical to an uninterrupted build."""
     import glob
-    import subprocess
-    import sys
     import tempfile
 
-    src_root = os.path.dirname(os.path.dirname(os.path.dirname(
-        os.path.abspath(__file__))))
+    from repro.testing.subproc import run_module, subprocess_env
+
     with tempfile.TemporaryDirectory() as d:
-        env = dict(os.environ,
-                   PYTHONPATH=src_root + os.pathsep + os.environ.get(
-                       "PYTHONPATH", ""),
-                   JAX_PLATFORMS=os.environ.get("JAX_PLATFORMS", "cpu"))
-        env[ENV_VAR] = f"exit@tables.bucket:{kill_at_bucket}"
-        r = subprocess.run(
-            [sys.executable, "-m", "repro.testing.faults", "--child", d],
-            env=env, capture_output=True, text=True, timeout=600)
+        env = subprocess_env(
+            platform=os.environ.get("JAX_PLATFORMS", "cpu"),
+            faults_spec=f"exit@tables.bucket:{kill_at_bucket}")
+        r = run_module("repro.testing.faults", "--child", d,
+                       env=env, check=False)
         if r.returncode != 17:
             raise AssertionError(
                 f"child was expected to die at bucket {kill_at_bucket} "

@@ -1,0 +1,60 @@
+"""Deterministic host factories resolvable by name across processes.
+
+The distributed table build (:mod:`repro.core.dist_build`) re-creates the
+host inside each worker process from a JSON ``host spec`` —
+``{"factory": "module:function", "kwargs": {...}}`` — because hosts close
+over live arrays and cannot be shipped over a pipe.  Every factory here
+is seed-deterministic: called with the same kwargs in any process it
+yields a host with the same fingerprint, which is what lets per-worker
+probe results merge into tables bit-identical to a single-process build.
+
+Factories return ``(host, params)``.
+"""
+from __future__ import annotations
+
+
+def tiny_resnet_host(*, num_classes: int = 4, in_hw: int = 8,
+                     width: int = 4, blocks=(2,), batch: int = 4,
+                     max_span=None, seed: int = 0):
+    """The fault-smoke CNN host (same instance the kill-and-resume smoke
+    in :mod:`repro.testing.faults` builds)."""
+    import jax
+
+    from repro.models import cnn, cnn_host, zoo
+
+    net = zoo.tiny_resnet(num_classes=num_classes, in_hw=in_hw,
+                          width=width, blocks=tuple(blocks))
+    params = cnn.init_params(net, jax.random.PRNGKey(seed))
+    return cnn_host.CNNHost(net, params, batch=batch,
+                            max_span=max_span), params
+
+
+def conv_chain_host(*, L: int = 5, max_span: int = 3, width: int = 8,
+                    in_hw: int = 8, k: int = 3, batch: int = 4,
+                    seed: int = 0):
+    """Uniform stride-1 conv chain — maximal shape dedup, the regime the
+    probe engine (and its distributed fan-out) targets."""
+    import jax
+
+    from repro.models import cnn, cnn_host
+    from repro.models.cnn import ConvNet, ConvSpec
+
+    specs = [ConvSpec(3, width, k, 1, act="relu")]
+    specs += [ConvSpec(width, width, k, 1, act="relu")
+              for _ in range(L - 1)]
+    net = ConvNet(tuple(specs), (), in_hw=in_hw, in_ch=3,
+                  head="classifier", num_classes=4)
+    params = cnn.init_params(net, jax.random.PRNGKey(seed))
+    return cnn_host.CNNHost(net, params, batch=batch,
+                            max_span=max_span), params
+
+
+def cli_host(*, arch: str, seed: int = 0, batch: int = 8, seq: int = 128,
+             full: bool = False, max_span=None):
+    """Adapter for the ``python -m repro.compress`` arch zoo, so CLI
+    builds (``--workers N``) distribute through the same spec protocol."""
+    from repro.compress import build_host
+
+    host, _source = build_host(arch, seed=seed, batch=batch, seq=seq,
+                               full=full, max_span=max_span)
+    return host, host.params

@@ -1,0 +1,109 @@
+"""Shared subprocess environment construction for multi-process tests.
+
+Every subprocess-based test and smoke in this repo (forced-host-device
+pmap tests, kill-and-resume fault smokes, distributed worker spawns)
+needs the same carefully-pinned child environment:
+
+* ``JAX_PLATFORMS=cpu`` — children simulate devices via XLA flags, so
+  cpu is always the right platform, and it MUST be pinned explicitly:
+  on hosts with libtpu installed an unset platform sends backend init
+  into ~30-retry GCP metadata fetches (minutes per subprocess);
+* ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — the CI
+  stand-in for a multi-chip host;
+* an absolute ``PYTHONPATH`` pointing at this repo's ``src`` (children
+  are often spawned with a minimal env and an arbitrary cwd).
+
+This module is THE single place that knowledge lives; test files and
+production spawn paths (:mod:`repro.launch.distributed`) import it
+instead of re-deriving the dict.  It is stdlib-only.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+#: Absolute path of the ``src`` tree this module was imported from —
+#: what children need on PYTHONPATH to import ``repro``.
+SRC_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+#: Repo root (``src``'s parent) — the default child cwd, so relative
+#: paths inside children (e.g. ``results/``) resolve the same way the
+#: parent's do.
+REPO_ROOT = os.path.dirname(SRC_ROOT)
+
+
+def subprocess_env(*, devices: int | None = None, platform: str = "cpu",
+                   process_id: int | None = None,
+                   num_processes: int | None = None,
+                   faults_spec: str | None = None,
+                   extra: dict | None = None) -> dict:
+    """The pinned child environment for a subprocess test/worker.
+
+    ``devices`` forces ``--xla_force_host_platform_device_count``;
+    ``process_id``/``num_processes`` set the ``REPRO_PROCESS_ID`` /
+    ``REPRO_NUM_PROCESSES`` variables consumed by
+    :mod:`repro.launch.distributed` (subprocess-worker CI mode);
+    ``faults_spec`` sets ``REPRO_FAULTS``; ``extra`` merges last.
+    """
+    env = {
+        "PYTHONPATH": SRC_ROOT + (
+            os.pathsep + os.environ["PYTHONPATH"]
+            if os.environ.get("PYTHONPATH") else ""),
+        "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+        "HOME": os.environ.get("HOME", "/root"),
+        "JAX_PLATFORMS": platform,
+    }
+    if devices is not None:
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={devices}")
+    if process_id is not None:
+        env["REPRO_PROCESS_ID"] = str(process_id)
+    if num_processes is not None:
+        env["REPRO_NUM_PROCESSES"] = str(num_processes)
+    if faults_spec is not None:
+        env["REPRO_FAULTS"] = faults_spec
+    if extra:
+        env.update(extra)
+    return env
+
+
+def run_code(code: str, *, devices: int | None = None, timeout: float = 600,
+             check: bool = True, env: dict | None = None,
+             cwd: str | None = None) -> subprocess.CompletedProcess:
+    """Run a dedented Python snippet in a pinned child interpreter.
+
+    The device count is forced through the environment (not an in-code
+    ``os.environ`` mutation), so the snippet may import jax on line one.
+    With ``check`` (default) a non-zero exit raises with the child's
+    tail of stdout/stderr in the message.
+    """
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout,
+        env=env if env is not None else subprocess_env(devices=devices),
+        cwd=cwd or REPO_ROOT)
+    if check and r.returncode != 0:
+        raise AssertionError(
+            f"subprocess exited {r.returncode}:\n"
+            f"{r.stdout[-2000:]}{r.stderr[-4000:]}")
+    return r
+
+
+def run_module(module: str, *args: str, devices: int | None = None,
+               timeout: float = 600, check: bool = True,
+               env: dict | None = None,
+               cwd: str | None = None) -> subprocess.CompletedProcess:
+    """``python -m module args...`` under the pinned child environment."""
+    r = subprocess.run(
+        [sys.executable, "-m", module, *args],
+        capture_output=True, text=True, timeout=timeout,
+        env=env if env is not None else subprocess_env(devices=devices),
+        cwd=cwd or REPO_ROOT)
+    if check and r.returncode != 0:
+        raise AssertionError(
+            f"{module} exited {r.returncode}:\n"
+            f"{r.stdout[-2000:]}{r.stderr[-4000:]}")
+    return r

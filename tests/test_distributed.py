@@ -1,29 +1,12 @@
 """Distribution-layer tests — run in subprocesses with forced host device
 counts (the main test process must keep seeing 1 device)."""
-import subprocess
-import sys
-import textwrap
-
 import pytest
 
-# The children simulate host devices via XLA_FLAGS, so cpu is always the
-# right platform — and it must be pinned explicitly: on hosts with libtpu
-# installed, an unset platform sends backend init into ~30-retry GCP
-# metadata fetches (minutes per subprocess).
-ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
-       "JAX_PLATFORMS": "cpu"}
+from repro.testing.subproc import run_code, run_module
 
 
 def run_sub(code, devices=8, timeout=600):
-    pre = textwrap.dedent(f"""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
-    """)
-    r = subprocess.run([sys.executable, "-c", pre + textwrap.dedent(code)],
-                       capture_output=True, text=True, env=ENV,
-                       cwd="/root/repo", timeout=timeout)
-    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-4000:]
-    return r.stdout
+    return run_code(code, devices=devices, timeout=timeout).stdout
 
 
 def test_flash_decode_lse_combine():
@@ -127,11 +110,7 @@ def test_compressed_allreduce_matches_exact():
 def test_dryrun_single_cell_end_to_end():
     """The dry-run driver itself: one full cell at 512 devices, both meshes
     (this is the minimum multi-pod acceptance check inside CI)."""
-    r = subprocess.run(
-        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "smollm-135m",
-         "--shape", "decode_32k", "--mesh", "both", "--out",
-         "/tmp/dryrun_test"],
-        capture_output=True, text=True, env=ENV, cwd="/root/repo",
-        timeout=1200)
-    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    r = run_module("repro.launch.dryrun", "--arch", "smollm-135m",
+                   "--shape", "decode_32k", "--mesh", "both", "--out",
+                   "/tmp/dryrun_test", timeout=1200)
     assert "0 failures" in r.stdout

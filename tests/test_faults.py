@@ -20,8 +20,6 @@ Every recovery path the pipeline claims is exercised here under
 import dataclasses
 import json
 import os
-import subprocess
-import sys
 
 import jax
 import numpy as np
@@ -35,6 +33,7 @@ from repro.core.probe_engine import (PROBE_MEASURED, PROBE_QUARANTINED,
                                      PROBE_RETIMED)
 from repro.models import cnn, cnn_host, zoo
 from repro.testing import faults
+from repro.testing.subproc import run_module
 
 
 @pytest.fixture(scope="module")
@@ -456,10 +455,5 @@ def test_serve_fault_smoke_inprocess():
 
 
 def test_faults_cli_smoke_flag():
-    env = {"PYTHONPATH": "src", "PATH": os.environ.get("PATH", ""),
-           "JAX_PLATFORMS": "cpu"}
-    r = subprocess.run(
-        [sys.executable, "-m", "repro.testing.faults", "--smoke"],
-        capture_output=True, text=True, env=env, cwd="/root/repo",
-        timeout=600)
+    r = run_module("repro.testing.faults", "--smoke", timeout=600)
     assert "FAULT_SMOKE_OK" in r.stdout, r.stdout + r.stderr

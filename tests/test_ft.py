@@ -1,8 +1,6 @@
 """Fault-tolerance tests: failure-restart, resume, elastic reshard,
 straggler watchdog — the contracts the 1000-node deployment relies on."""
 import dataclasses
-import subprocess
-import sys
 import textwrap
 
 import jax
@@ -11,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import ckpt as C
+from repro.testing.subproc import run_code
 from repro.configs import get_config
 from repro.data.pipeline import GlobalBatcher, SyntheticTokens
 from repro.models import transformer as T
@@ -115,8 +114,6 @@ def test_elastic_reshard_restore(tmp_path):
     tree = {"w": jnp.arange(32.0).reshape(8, 4), "b": jnp.ones(4)}
     C.save(str(tmp_path), 1, tree)
     code = textwrap.dedent(f"""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.checkpoint import ckpt as C
@@ -130,10 +127,5 @@ def test_elastic_reshard_restore(tmp_path):
             np.asarray(out["w"]), np.arange(32.0).reshape(8, 4))
         print("ELASTIC_OK")
     """)
-    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-           # without a pinned platform, libtpu hosts stall in TPU metadata
-           # fetches; the child only ever uses simulated host devices.
-           "JAX_PLATFORMS": "cpu"}
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, env=env, cwd="/root/repo", timeout=300)
+    r = run_code(code, devices=8, timeout=300)
     assert "ELASTIC_OK" in r.stdout, r.stdout + r.stderr

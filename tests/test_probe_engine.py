@@ -4,8 +4,6 @@ bit-identical to the sequential reference under the analytic oracle
 oracle, and the vmapped Dirac-masked importance batch must reproduce the
 scalar Eq. 4 fine-tune exactly.  Plus: cache round-trips, mixed
 conv/attn/pool barrier hosts, and the pmap-sharded fine-tune path."""
-import subprocess
-import sys
 import textwrap
 
 import jax
@@ -13,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.testing.subproc import run_code
 from repro.core import (AnalyticTPUOracle, ImportanceSpec, WallClockOracle,
                         accuracy_perf, build_tables, compress,
                         layer_latencies, original_latency, solve_dp,
@@ -186,8 +185,6 @@ def test_pmap_sharded_finetune_subprocess():
     """With >1 local device the batched fine-tune pmap-shards the probe
     axis; results must match the single-device vmap path."""
     code = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
         import jax, jax.numpy as jnp, numpy as np
         from repro.core.importance import (ImportanceSpec, _adam_finetune,
                                            adam_finetune_batched, xent_loss,
@@ -214,12 +211,7 @@ def test_pmap_sharded_finetune_subprocess():
                 jax.tree.map(lambda t: t, out))
         print("PMAP_FT_OK")
     """)
-    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-           # without a pinned platform, libtpu hosts stall in TPU metadata
-           # fetches; the child only ever uses simulated host devices.
-           "JAX_PLATFORMS": "cpu"}
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, env=env, cwd="/root/repo", timeout=300)
+    r = run_code(code, devices=2, timeout=300)
     assert "PMAP_FT_OK" in r.stdout, r.stdout + r.stderr
 
 

@@ -57,11 +57,10 @@ def test_depth_correct_extrapolation():
 
 def test_rules_divisibility_fallback():
     """GQA kv heads < TP shards must fall back to replication."""
-    import subprocess
     import textwrap
+
+    from repro.testing.subproc import run_code
     code = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax
         from jax.sharding import PartitionSpec as P
         from repro.sharding.rules import make_rules
@@ -74,12 +73,7 @@ def test_rules_divisibility_fallback():
         assert r.spec(("experts", "ffn"), (8, 128)) == P("model", None)
         print("RULES_OK")
     """)
-    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-           # without a pinned platform, libtpu hosts stall in TPU metadata
-           # fetches; the child only ever uses simulated host devices.
-           "JAX_PLATFORMS": "cpu"}
-    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, cwd="/root/repo", timeout=300, env=env)
+    res = run_code(code, devices=8, timeout=300)
     assert "RULES_OK" in res.stdout, res.stdout + res.stderr
 
 

@@ -17,6 +17,8 @@ import os
 import subprocess
 import sys
 
+from repro.testing.subproc import subprocess_env
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -30,8 +32,7 @@ from repro.models import cnn, cnn_host, zoo
 from repro.models import transformer as T
 from repro.models.transformer_host import CostEnv, TransformerHost
 
-_SUBPROC_ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                "JAX_PLATFORMS": "cpu"}
+_SUBPROC_ENV = subprocess_env()
 
 CNN_ZOO = {
     "tiny_resnet": lambda: zoo.tiny_resnet(num_classes=4, in_hw=8, width=4,

@@ -350,6 +350,121 @@ def test_dispositions_cover_every_request(lm):
 
 
 # ---------------------------------------------------------------------------
+# Cross-host failover (ISSUE 8: worker loss, replay, zero lost requests)
+# ---------------------------------------------------------------------------
+
+def test_worker_loss_failover_replays_bit_identical(lm):
+    """ISSUE acceptance: a worker loss mid-decode triggers one failover;
+    every request ends with a disposition (zero lost), the replayed
+    requests are recorded, and the tokens are BIT-identical to an
+    uninterrupted run."""
+    cfg, params, step = lm
+    prompt = serving.random_prompts(0, 5, 5, cfg.vocab_size)
+    lens = jnp.full((5,), 5, jnp.int32)
+    kw = dict(tokens=6, slots=2, chunk=3)
+    clean = serving.serve_continuous(step, params, _mk(cfg), prompt, lens,
+                                     clock=faults.TickClock(), **kw)
+    with faults.inject(faults.Fault("serve.worker", "raise", nth=3)):
+        out = serving.serve_with_failover(step, params, _mk(cfg), prompt,
+                                          lens, clock=faults.TickClock(),
+                                          **kw)
+    rep = out.report
+    assert rep.engine == "continuous+failover"
+    assert rep.failovers == 1 and len(rep.lost_workers) == 1
+    assert rep.replayed                      # in-flight requests replayed
+    assert sorted(rep.dispositions) == list(range(5))   # zero lost
+    assert sorted(rep.completed) == list(range(5))
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(clean[0]))
+
+
+def test_worker_loss_uncaught_leaves_no_disposition(lm):
+    """A bare engine surfaces the loss as WorkerLost (with .lost ids from
+    the health check); unfinished requests stay disposition-None —
+    visibly incomplete, never silently completed."""
+    cfg, params, step = lm
+    eng = serving.ContinuousEngine(
+        step, params, _mk(cfg), slots=1, max_seq=16, chunk=3,
+        clock=faults.TickClock(), health_check=lambda: [2])
+    eng.submit(np.arange(1, 6), tokens=4, rid=0)
+    with pytest.raises(serving.WorkerLost) as ei:
+        eng.run()
+    assert ei.value.lost == [2]
+    assert eng.requests[0].disposition is None
+
+
+def test_failover_exhaustion_reports_unserved(lm):
+    """Losses beyond max_failovers stop the retry loop; the remaining
+    requests come back ``unserved`` — every rid still has a disposition."""
+    cfg, params, step = lm
+    prompt = serving.random_prompts(1, 3, 5, cfg.vocab_size)
+    lens = jnp.full((3,), 5, jnp.int32)
+    with faults.inject(faults.Fault("serve.worker", "raise", nth=1,
+                                    times=99)):
+        out = serving.serve_with_failover(
+            step, params, _mk(cfg), prompt, lens, tokens=6, slots=2,
+            chunk=3, max_failovers=1, clock=faults.TickClock())
+    rep = out.report
+    assert rep.failovers == 2                # initial + one re-formation
+    assert sorted(rep.dispositions) == [0, 1, 2]
+    assert sorted(rep.unserved) == [0, 1, 2]
+    assert np.asarray(out[0]).tolist() == [[0] * 6] * 3
+
+
+def test_health_check_failover_and_survivor_slots(lm):
+    """A health_check that reports a loss once drives the same failover
+    path as the fault hook; the re-formed engine runs on fewer slots
+    (survivor capacity) and still completes everything identically."""
+    cfg, params, step = lm
+    prompt = serving.random_prompts(2, 4, 5, cfg.vocab_size)
+    lens = jnp.full((4,), 5, jnp.int32)
+    kw = dict(tokens=6, slots=2, chunk=3)
+    clean = serving.serve_continuous(step, params, _mk(cfg), prompt, lens,
+                                     clock=faults.TickClock(), **kw)
+    calls = {"n": 0}
+
+    def flaky_health():
+        calls["n"] += 1
+        return [1] if calls["n"] == 2 else []
+
+    seen_slots = []
+
+    def factory(attempt):
+        kws = {"slots": max(1, 2 >> attempt)}
+        seen_slots.append(kws["slots"])
+        if attempt > 0:
+            kws["health_check"] = lambda: []     # survivors are healthy
+        return kws
+
+    out = serving.serve_with_failover(
+        step, params, _mk(cfg), prompt, lens, health_check=flaky_health,
+        engine_factory=factory, clock=faults.TickClock(), **kw)
+    rep = out.report
+    assert rep.failovers == 1 and rep.lost_workers == [1]
+    assert seen_slots == [2, 1]
+    assert sorted(rep.completed) == list(range(4))
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(clean[0]))
+
+
+def test_failover_clean_run_untouched(lm):
+    """No loss ⇒ serve_with_failover is serve_continuous with a different
+    engine tag: same tokens, no failover bookkeeping."""
+    cfg, params, step = lm
+    _, mat, lens = _ragged(cfg)
+    clean = serving.serve_continuous(step, params, _mk(cfg), mat, lens,
+                                     tokens=6, slots=2, chunk=3,
+                                     arrivals=ARRIVALS,
+                                     clock=faults.TickClock())
+    out = serving.serve_with_failover(step, params, _mk(cfg), mat, lens,
+                                      tokens=6, slots=2, chunk=3,
+                                      arrivals=ARRIVALS,
+                                      clock=faults.TickClock())
+    rep = out.report
+    assert rep.failovers == 0 and not rep.replayed and not rep.lost_workers
+    assert rep.ok and sorted(rep.completed) == list(range(5))
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(clean[0]))
+
+
+# ---------------------------------------------------------------------------
 # Compressed-graph integration (GraphExecutor.continuous_engine)
 # ---------------------------------------------------------------------------
 
