@@ -140,6 +140,87 @@ def conv_tile_sweep(rng, *, ks=(5,), strides=(1, 2),
     return rows
 
 
+def depthwise_tile_sweep(rng, *, ks=(3, 5), strides=(1, 2),
+                         tiles=((8, None), (None, None)), hw=56, c=32):
+    """The canonical depthwise (stride, k) × (tile_ho, tile_wo) sweep.
+
+    MobileNetV2's merged segments are depthwise; each row times the jitted
+    ``lax`` grouped conv this host would otherwise run (``lax_us`` — the
+    deleted fallback path), certifies the Pallas depthwise kernel against
+    the oracle in interpret mode, reports the traffic model's DMA-halo
+    bytes reclaimed, and records the v5e roofline's predicted speedup of
+    the DMA-halo model over the lax-gather traffic (compiled Pallas timing
+    needs a real TPU; the analytic ratio is what the DP's table sees).
+    Shared by this bench and ``benchmarks/run.py`` so the two never drift.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro import kernels
+    from repro.core.latency import AnalyticTPUOracle, CostBreakdown
+    from repro.kernels.depthwise_conv import choose_tiles_grouped
+    from repro.kernels.merged_conv import input_traffic_model
+    from repro.kernels.ops import channel_tile
+
+    def timed_us(fn, n=10):
+        jax.block_until_ready(fn())
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(fn())
+        return (time.perf_counter() - t0) / n * 1e6
+
+    oracle_v5e = AnalyticTPUOracle()
+    rows = []
+    for stride in strides:
+        for k in ks:
+            x = jnp.asarray(rng.standard_normal((1, hw, hw, c)), jnp.float32)
+            wt = jnp.asarray(rng.standard_normal((k, k, 1, c)) * 0.1,
+                             jnp.float32)
+            b = jnp.asarray(rng.standard_normal(c), jnp.float32)
+            oracle = kernels.apply_activation(
+                kernels.depthwise_conv_ref(x, wt, b, stride=stride), "relu6")
+            f = jax.jit(lambda x=x, wt=wt, b=b, s=stride:
+                        kernels.depthwise_conv_ref(x, wt, b, stride=s))
+            lax_us = timed_us(f)
+            bg = channel_tile(c, None)
+            a_ho, a_wo = choose_tiles_grouped(hw, hw, 1, 1, k, k, stride, 4,
+                                              bgroups=bg)
+            ho = (hw - k) // stride + 1
+            wo = (hw - k) // stride + 1
+            flops = 2.0 * ho * wo * c * k * k
+            fixed = (k * k * c + ho * wo * c) * 4.0
+            for tile_ho, tile_wo in tiles:
+                t0 = time.perf_counter()
+                y = kernels.depthwise_conv_op(
+                    x, wt, b, stride=stride, activation="relu6",
+                    tile_ho=tile_ho, tile_wo=tile_wo, interpret=True)
+                dt = time.perf_counter() - t0
+                traffic = input_traffic_model(hw, hw, c, k, k, stride, 4,
+                                              tile_ho=tile_ho or a_ho,
+                                              tile_wo=tile_wo or a_wo,
+                                              groups=c)
+                lat_gather = oracle_v5e.segment_latency(CostBreakdown(
+                    flops, fixed + traffic["gather_bytes"]))
+                lat_dma = oracle_v5e.segment_latency(CostBreakdown(
+                    flops, fixed + traffic["dma_bytes"]
+                    + traffic["relayout_bytes"]))
+                rows.append({
+                    "shape": f"n1_h{hw}w{hw}_c{c}_dw_k{k}",
+                    "stride": stride,
+                    "k": k,
+                    "tile_ho": tile_ho or a_ho,
+                    "tile_wo": tile_wo or a_wo,
+                    "auto": tile_ho is None,
+                    "lax_us": lax_us,
+                    "interpret_s": dt,
+                    "halo_bytes_saved": traffic["halo_bytes_saved"],
+                    "dma_bytes": traffic["dma_bytes"],
+                    "relayout_bytes": traffic["relayout_bytes"],
+                    "predicted_speedup_v5e": lat_gather / lat_dma,
+                    "maxdiff_vs_oracle": float(jnp.abs(y - oracle).max()),
+                })
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -153,7 +234,9 @@ def main(argv=None):
         bench_solver(128, 8192, scalar=args.full, rng=rng),
     ]
     conv = conv_tile_sweep(rng)
-    report = {"solver": solver, "merged_conv_tiles": conv}
+    dw = depthwise_tile_sweep(rng)
+    report = {"solver": solver, "merged_conv_tiles": conv,
+              "depthwise_conv_tiles": dw}
 
     from repro.launch.distributed import publish_json
 

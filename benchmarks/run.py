@@ -87,12 +87,16 @@ def bench_conv_sweep():
     For each point: jnp-oracle wall time on this host, interpret-mode
     max|Δ| vs the oracle, and the input-HBM bytes the zero-copy DMA halos
     reclaim over the deleted host-side gather (``halo_bytes_saved``).
-    Delegates to the canonical sweep in ``bench_dp.conv_tile_sweep`` so the
-    two benches cannot drift; this wrapper only formats the CSV rows.
+    Depthwise rows (``conv_sweep_dw``) additionally time the jitted lax
+    grouped conv the executor used to fall back to (``lax_us``) and
+    record the v5e roofline's predicted speedup of the DMA-halo traffic
+    model over the lax-gather one.  Delegates to the canonical sweeps in
+    ``bench_dp`` so the two benches cannot drift; this wrapper only
+    formats the CSV rows.
     """
     import numpy as np
 
-    from bench_dp import conv_tile_sweep
+    from bench_dp import conv_tile_sweep, depthwise_tile_sweep
 
     rows = []
     for r in conv_tile_sweep(np.random.default_rng(7), ks=(3, 5, 7),
@@ -104,6 +108,18 @@ def bench_conv_sweep():
             r["oracle_us"],
             f"halo_bytes_saved={r['halo_bytes_saved']:.0f};"
             f"dma_bytes={r['dma_bytes']:.0f};"
+            f"interpret_maxdiff={r['maxdiff_vs_oracle']:.2e}"))
+    for r in depthwise_tile_sweep(np.random.default_rng(7), ks=(3, 5),
+                                  strides=(1, 2),
+                                  tiles=((8, None), (None, None))):
+        rows.append((
+            f"conv_sweep_dw,s{r['stride']}_k{r['k']}_tile{r['tile_ho']}"
+            f"x{r['tile_wo']}{'_auto' if r['auto'] else ''}",
+            r["lax_us"],
+            f"predicted_speedup_v5e={r['predicted_speedup_v5e']:.3f};"
+            f"halo_bytes_saved={r['halo_bytes_saved']:.0f};"
+            f"dma_bytes={r['dma_bytes']:.0f};"
+            f"relayout_bytes={r['relayout_bytes']:.0f};"
             f"interpret_maxdiff={r['maxdiff_vs_oracle']:.2e}"))
     return rows
 

@@ -17,7 +17,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # Pallas code; the tier-1 pass below skips these files so nothing runs
 # twice and the union still covers the whole suite.
 KERNEL_SUITE="tests/test_kernels.py tests/test_merged_conv_general.py \
-    tests/test_fastpath.py"
+    tests/test_depthwise_conv.py tests/test_fastpath.py"
 
 echo "== interpret-mode kernel equivalence (Pallas vs jnp oracles) =="
 python -m pytest -q $KERNEL_SUITE

@@ -149,14 +149,18 @@ def conv2d_cost(h: int, w: int, cin: int, cout: int, k: int, stride: int = 1,
                 batch: int = 1) -> CostBreakdown:
     """Analytic cost of one (possibly merged) conv layer.
 
-    Activation traffic models the zero-copy DMA kernel: the input is read
-    out of HBM exactly once plus the ``k−1`` halo rows/cols re-read at tile
-    seams (the planner's tiling decides how many seams there are).  The
-    host-side halo-gather term the PR-1 kernel paid — a full extra
-    input-sized HBM write + read whenever more than one row tile was
-    needed — is gone, so the DP's latency table reflects the reclaimed
-    bandwidth.  Depthwise merged layers still run through ``lax`` and keep
-    the plain one-read model.
+    Activation traffic models the zero-copy DMA kernels — dense
+    (``merged_conv``) and depthwise/grouped (``depthwise_conv``) alike:
+    the input is read out of HBM exactly once plus the ``⌊(k−1)/s⌋``
+    per-phase halo rows/cols re-read at tile seams (the planner's tiling
+    decides how many seams there are; the depthwise grid's channel
+    blocking does not change aggregate input traffic).  Stride-``s``
+    segments additionally pay the one-off phase-major relayout transpose
+    (``relayout_bytes``).  The host-side halo-gather term the PR-1 kernel
+    paid — a full extra input-sized HBM write + read whenever more than
+    one row tile was needed — is gone, as is the lax gather model the
+    depthwise branch used while depthwise units bypassed Pallas, so the
+    DP's latency table reflects the reclaimed bandwidth on both paths.
     """
     ho, wo = -(-h // stride), -(-w // stride)
     if depthwise:
@@ -166,13 +170,15 @@ def conv2d_cost(h: int, w: int, cin: int, cout: int, k: int, stride: int = 1,
         flops = 2.0 * batch * ho * wo * cin * cout * k * k
         wbytes = cin * cout * k * k * dtype_bytes
     in_bytes = float(h * w * cin * dtype_bytes)
-    if not depthwise and k > 1:
+    if k > 1 or stride > 1:
         # layering note: the kernel package never imports core, so this
         # lazy import of its tile planner cannot cycle.
         from repro.kernels.merged_conv import input_traffic_model
         traffic = input_traffic_model(h + k - 1, w + k - 1, cin, k, k,
-                                      stride, dtype_bytes)
-        in_bytes = max(in_bytes, traffic["dma_bytes"])
+                                      stride, dtype_bytes,
+                                      groups=cin if depthwise else 1)
+        in_bytes = (max(in_bytes, traffic["dma_bytes"])
+                    + traffic["relayout_bytes"])
     abytes = batch * (in_bytes + ho * wo * cout * dtype_bytes)
     return CostBreakdown(flops, wbytes + abytes)
 

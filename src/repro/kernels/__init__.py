@@ -7,17 +7,45 @@ merged_conv_op(...)``) instead of deep-importing ``kernels.ops`` /
 kernel on TPU and to the matching ``*_ref`` jnp oracle elsewhere; the
 oracles are exported too — they are the semantic ground truth the
 equivalence suites compare against.
+
+Merged-segment convs and the phase-major layout contract
+--------------------------------------------------------
+Both conv kernels (``merged_conv_op`` for dense segments,
+``depthwise_conv_op`` for depthwise/grouped ones) share one input
+layout for stride-``s`` segments: the NHWC image is relaid
+**phase-major** before the ``pallas_call`` —
+
+    ``x_pm[n, p, q, t, r, c] = x[n, s·t + p, s·r + q, c]``
+
+with ``p < min(s, k_h)``, ``q < min(s, k_w)`` — so each kernel tap
+``(u, v)`` reads a *contiguous* per-phase window
+``x_pm[n, u % s, v % s, u//s : u//s + tile_ho, v//s : v//s + tile_wo]``
+instead of a strided gather.  DMA windows from HBM are therefore plain
+rectangular slices, phase selection inside the kernel is a static VMEM
+slice, and at ``s == 1`` the relayout is the identity (bit-for-bit the
+dense path).  ``merged_conv.phase_major`` / ``phase_extents`` implement
+the contract; ``input_traffic_model`` charges the one XLA transpose a
+stride-``s`` segment pays as ``relayout_bytes``.
+
+The depthwise/grouped kernel blocks the *channel* axis jointly with the
+input (grid ``(batch, ho-tiles, wo-tiles, group-blocks)``, per-group
+fp32 accumulators) — see ``depthwise_conv.py`` for the grid and
+accumulator design.  ``depthwise_conv_ref`` is its certification
+oracle.
 """
 from . import ops, ref
-from .ops import (channel_tile, flash_attention_op, force_backend,
-                  merged_conv_op, merged_ffn_op, rglru_scan_op, rmsnorm_op)
-from .ref import (apply_activation, flash_attention_ref, merged_conv_ref,
-                  merged_ffn_ref, rglru_scan_ref, rmsnorm_ref)
+from .ops import (channel_tile, depthwise_conv_op, flash_attention_op,
+                  force_backend, merged_conv_op, merged_ffn_op,
+                  rglru_scan_op, rmsnorm_op)
+from .ref import (apply_activation, depthwise_conv_ref, flash_attention_ref,
+                  merged_conv_ref, merged_ffn_ref, rglru_scan_ref,
+                  rmsnorm_ref)
 
 __all__ = [
     "ops", "ref",
-    "channel_tile", "flash_attention_op", "force_backend",
-    "merged_conv_op", "merged_ffn_op", "rglru_scan_op", "rmsnorm_op",
-    "apply_activation", "flash_attention_ref", "merged_conv_ref",
-    "merged_ffn_ref", "rglru_scan_ref", "rmsnorm_ref",
+    "channel_tile", "depthwise_conv_op", "flash_attention_op",
+    "force_backend", "merged_conv_op", "merged_ffn_op", "rglru_scan_op",
+    "rmsnorm_op",
+    "apply_activation", "depthwise_conv_ref", "flash_attention_ref",
+    "merged_conv_ref", "merged_ffn_ref", "rglru_scan_ref", "rmsnorm_ref",
 ]

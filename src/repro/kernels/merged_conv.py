@@ -12,36 +12,55 @@ latency table models).
 Grid: ``(batch, ho-tiles, wo-tiles, cout-tiles)`` with the channel axis
 innermost so one input tile serves every output-channel block.
 
-Zero-copy halos.  The input stays HBM-resident (``memory_space=ANY``); each
-grid step DMAs its halo'd input window straight into VMEM scratch with
-``pltpu.make_async_copy`` over ``pl.ds`` row/col windows::
+Phase-major input layout (the stride-s contract, shared with the
+depthwise kernel in :mod:`repro.kernels.depthwise_conv`).  A stride-s
+VALID conv reads, for output row ``t`` and tap ``u``, input row
+``s·t + u`` — row *phase* ``u mod s``, phase-local index ``t + u//s``.
+The wrapper therefore re-lays the image out **phase-major** before the
+kernel::
+
+    x (N, H, W, C)  →  x_pm (N, pʜ, p𝑤, H/s, W/s, C)
+    x_pm[n, p, q, t, r, c] = x[n, s·t + p, s·r + q, c]
+
+(pʜ = min(s, k_h), p𝑤 = min(s, k_w): taps can only touch the first
+``k`` phases, so unused phases are never laid out or copied.)  Under
+this layout each tap ``(u, v)`` of each tile is a *contiguous* window —
+``x_pm[p, q][t₀ + u//s : t₀ + u//s + tile_ho, …]`` — so phase selection
+is a static VMEM slice instead of the former reshape-and-index
+decimation, and the tile's DMA is one rectangular window per step
+covering every phase at once.  For s = 1 the layout is the identity
+(pʜ = p𝑤 = 1) and the kernel degenerates bit-for-bit to the dense path;
+the relayout itself is one XLA transpose (HBM read + write of the
+image) charged by :func:`input_traffic_model` as ``relayout_bytes`` and
+priced by ``conv2d_cost`` — only strided segments pay it.
+
+Zero-copy halos.  The phase-major input stays HBM-resident
+(``memory_space=ANY``); each grid step DMAs its halo'd window straight
+into VMEM scratch with ``pltpu.make_async_copy`` over ``pl.ds``
+windows::
 
     step t   (co == 0):  start DMA[t+1] → slot (t+1)%2     (prefetch)
                          wait  DMA[t]   ← slot t%2
     step t   (co  > 0):  reuse slot t%2 (already resident)
 
-    HBM x ───DMA──▶ VMEM xs[2, Hi, Wi, Cin]   (double-buffered)
+    HBM x_pm ───DMA──▶ VMEM xs[2, pʜ, p𝑤, tile_ho+δʜ, tile_wo+δ𝑤, Cin]
     HBM w ──spec──▶ VMEM (kh, kw, Cin, bCout)
                     fp32 acc (tile_ho·tile_wo, bCout) ──▶ out block
 
-The former host-side halo'd-row-tile gather (one extra input-sized HBM
-copy per call whenever more than one row tile was needed) is gone: input
-HBM traffic per call is one read of the image plus the ``k−1`` halo
-rows/cols re-read at tile seams (see :func:`input_traffic_model`).
+where ``δʜ = (k_h−1)//s`` / ``δ𝑤 = (k_w−1)//s`` are the per-phase halo
+extents.  Input HBM traffic per call is one read of the image plus the
+halo rows/cols re-read at tile seams (see :func:`input_traffic_model`).
 
-Strided segments run on the MXU via phase selection: the scratch window
-holds the dense input rows/cols and each tap slices the stride-s phase by
-a reshape-and-index (``(s·t, …) → (t, s, …)[:, 0]``), so the output index
-map stays blocked and static while the MXU contraction sees only the
-decimated elements — no jnp-oracle fallback for stride > 1.
-
-VMEM per step (bounded by :func:`choose_tiles` regardless of image size):
-double-buffered input scratch ``2·(s·tile_ho + k_h − 1)·(s·tile_wo +
-k_w − 1)·Cin``, weight block ``k²·Cin·bCout``, fp32 accumulator + output
-block ``tile_ho·tile_wo·bCout``.  Very wide single-row images (panorama /
-NLP-grid) shrink ``tile_wo`` instead of overflowing VMEM.  Bias add and
-the boundary activation σ_j run in the kernel epilogue (fp32, before the
-store), eliminating the extra HBM round-trip the unfused epilogue paid.
+VMEM per step (bounded by :func:`choose_tiles` regardless of image
+size): double-buffered input scratch ``2·pʜ·p𝑤·(tile_ho + δʜ)·
+(tile_wo + δ𝑤)·Cin`` — never larger than the dense-window bound
+``2·(s·tile_ho + k_h − 1)·(s·tile_wo + k_w − 1)·Cin`` the planner
+accounts — plus the weight block ``k²·Cin·bCout`` and the fp32
+accumulator + output block ``tile_ho·tile_wo·bCout``.  Very wide
+single-row images (panorama / NLP-grid) shrink ``tile_wo`` instead of
+overflowing VMEM.  Bias add and the boundary activation σ_j run in the
+kernel epilogue (fp32, before the store), eliminating the extra HBM
+round-trip the unfused epilogue paid.
 """
 from __future__ import annotations
 
@@ -60,13 +79,52 @@ from .ref import apply_activation
 _VMEM_BUDGET = 6 * 2 ** 20
 
 
+def phase_extents(kh: int, kw: int, stride: int) -> tuple[int, int, int, int]:
+    """``(pʜ, p𝑤, δʜ, δ𝑤)`` of the phase-major layout: phases touched per
+    spatial axis (``min(s, k)``) and per-phase halo extents
+    (``(k−1)//s``).  For s = 1 this is ``(1, 1, k_h−1, k_w−1)`` — the
+    dense window."""
+    s = max(stride, 1)
+    return min(s, kh), min(s, kw), (kh - 1) // s, (kw - 1) // s
+
+
+def phase_major(x, kh: int, kw: int, stride: int, hs: int, ws: int):
+    """Lay an NHWC image out phase-major: ``(N, pʜ, p𝑤, hs, ws, C)``.
+
+    ``hs``/``ws`` are the per-phase spatial extents the kernel's tiling
+    requires; the image is zero-padded up to ``(s·hs, s·ws)`` first
+    (ragged last tiles / s∤H).  One XLA transpose — the only HBM
+    relayout a strided segment pays; s = 1 is a free reshape.
+    """
+    n, h, w, c = x.shape
+    s = max(stride, 1)
+    ph, pw, _, _ = phase_extents(kh, kw, s)
+    pad_h, pad_w = s * hs - h, s * ws - w
+    assert pad_h >= 0 and pad_w >= 0, (x.shape, hs, ws, s)
+    if pad_h or pad_w:
+        x = jnp.pad(x, ((0, 0), (0, pad_h), (0, pad_w), (0, 0)))
+    x = x.reshape(n, hs, s, ws, s, c).transpose(0, 2, 4, 1, 3, 5)
+    return x[:, :ph, :pw]
+
+
+def _round8(t: int, cap: int) -> int:
+    """Clamp a tile extent to [1, cap], preferring multiples of 8."""
+    t = max(min(t, cap), 1)
+    if t < cap and t > 8:
+        t -= t % 8
+    return t
+
+
 def choose_tiles(h: int, w: int, cin: int, kh: int, kw: int, stride: int,
                  itemsize: int, bcout: int = 128,
                  budget_bytes: float = _VMEM_BUDGET) -> tuple[int, int]:
     """2-D ``(tile_ho, tile_wo)`` VMEM planner for the merged conv.
 
-    Accounts the whole per-step working set: double-buffered input scratch
-    ``2·(s·tho + k_h − 1)·(s·two + k_w − 1)·Cin·itemsize``, the weight
+    Accounts the whole per-step working set: double-buffered input
+    scratch via the dense-window bound ``2·(s·tho + k_h − 1)·(s·two +
+    k_w − 1)·Cin·itemsize`` (an upper bound on the phase-major scratch
+    ``2·pʜ·p𝑤·(tho + δʜ)·(two + δ𝑤)·Cin`` actually allocated — equal
+    whenever ``s | k−1``, e.g. every odd kernel at stride 2), the weight
     block ``k_h·k_w·Cin·bCout·itemsize`` and the fp32 accumulator plus
     output block ``tho·two·bCout·(4 + itemsize)``.  Starts from the full
     output width and grows the row tile; only when a single full-width
@@ -79,45 +137,59 @@ def choose_tiles(h: int, w: int, cin: int, kh: int, kw: int, stride: int,
     fixed = kh * kw * cin * bcout * itemsize          # weight block
     acc_b = bcout * (4 + itemsize)                    # per output element
 
-    def round8(t, cap):
-        t = max(min(t, cap), 1)
-        if t < cap and t > 8:
-            t -= t % 8
-        return t
-
     # Single full-width output row: does it fit?
     shi1 = s + kh - 1
     a_w = 2 * shi1 * s * cin * itemsize + acc_b
     b_w = fixed + 2 * shi1 * (kw - 1) * cin * itemsize
     if a_w * wo + b_w > budget_bytes:
         tile_wo = int((budget_bytes - b_w) // a_w)
-        return 1, round8(tile_wo, wo)
+        return 1, _round8(tile_wo, wo)
 
     # Full width fits: grow the row tile.
     swi = s * wo + kw - 1
     a_h = 2 * s * swi * cin * itemsize + wo * acc_b
     b_h = fixed + 2 * (kh - 1) * swi * cin * itemsize
     tile_ho = int((budget_bytes - b_h) // a_h)
-    return round8(tile_ho, ho), wo
+    return _round8(tile_ho, ho), wo
 
 
 def input_traffic_model(h: int, w: int, cin: int, kh: int, kw: int,
                         stride: int, itemsize: int,
                         tile_ho: int | None = None,
                         tile_wo: int | None = None,
-                        bcout: int = 128) -> dict[str, float]:
+                        bcout: int = 128,
+                        groups: int = 1) -> dict[str, float]:
     """Per-image input HBM bytes of the DMA kernel vs the PR-1 host gather.
 
-    ``dma_bytes`` is what the zero-copy kernel moves: every halo'd tile
-    window read once straight out of the HBM-resident image (one image
-    read plus the ``k−1`` seam rows/cols).  ``gather_bytes`` is what the
-    deleted host-side gather paid whenever more than one row tile was
-    needed: read the image, write the halo'd row-tile tensor, read it back
-    in the kernel.  ``saved_bytes`` is the reclaimed bandwidth.
+    ``dma_bytes`` is what the zero-copy kernel moves: every tile's
+    phase-major halo'd window read once straight out of the HBM-resident
+    image (one image read plus the halo rows/cols re-read at tile seams).
+    The total is *group-blocking invariant*: the depthwise/grouped kernel
+    DMAs each spatial window once per channel block, but each block
+    carries only its own channels, so the aggregate equals the dense
+    kernel's — ``groups`` only affects which tile planner picks the
+    default tiles.  ``relayout_bytes`` is the one-off phase-major
+    transpose strided segments pay (HBM read + write of the padded
+    image; zero at stride 1).  ``gather_bytes`` is what the deleted
+    host-side gather paid whenever more than one row tile was needed:
+    read the image, write the halo'd row-tile tensor, read it back in
+    the kernel.  ``saved_bytes`` is the reclaimed bandwidth net of the
+    relayout.
     """
     s = max(stride, 1)
     if tile_ho is None or tile_wo is None:
-        a_ho, a_wo = choose_tiles(h, w, cin, kh, kw, s, itemsize, bcout)
+        if groups > 1:
+            # grouped/depthwise path: channel-blocked tiles from the
+            # grouped planner (cost queries are always pure depthwise,
+            # cin_g = cout_g = 1; the layering note in conv2d_cost
+            # applies — kernels never import core, no cycle)
+            from .depthwise_conv import choose_tiles_grouped
+            from .ops import channel_tile
+            a_ho, a_wo = choose_tiles_grouped(
+                h, w, 1, 1, kh, kw, s, itemsize,
+                bgroups=channel_tile(groups, None))
+        else:
+            a_ho, a_wo = choose_tiles(h, w, cin, kh, kw, s, itemsize, bcout)
         tile_ho = tile_ho or a_ho
         tile_wo = tile_wo or a_wo
     ho = max((h - kh) // s + 1, 1)
@@ -125,17 +197,27 @@ def input_traffic_model(h: int, w: int, cin: int, kh: int, kw: int,
     tile_ho = max(1, min(tile_ho, ho))
     tile_wo = max(1, min(tile_wo, wo))
     n_th, n_tw = -(-ho // tile_ho), -(-wo // tile_wo)
-    tile_hi = s * (tile_ho - 1) + kh
-    tile_wi = s * (tile_wo - 1) + kw
+    ph, pw, dh, dw = phase_extents(kh, kw, s)
+    tile_elems = ph * pw * (tile_ho + dh) * (tile_wo + dw)
     image = h * w * cin * itemsize
-    dma = n_th * n_tw * tile_hi * tile_wi * cin * itemsize
+    dma = n_th * n_tw * tile_elems * cin * itemsize
+    relayout = 0.0
+    if s > 1:
+        hs = max(n_th * tile_ho + dh, -(-h // s))
+        ws = max(n_tw * tile_wo + dw, -(-w // s))
+        relayout = 2.0 * s * hs * s * ws * cin * itemsize
     # PR-1 path: stride-1 only, full-width row tiles; xt was materialized
     # (and re-read) whenever n_th > 1.
+    tile_hi = s * (tile_ho - 1) + kh
     xt = n_th * tile_hi * w * cin * itemsize
     gather = image + 2 * xt if n_th > 1 else xt
     return {"image_bytes": float(image), "dma_bytes": float(dma),
+            "relayout_bytes": float(relayout),
             "gather_bytes": float(gather),
-            "saved_bytes": float(gather - dma),
+            # halo-gather traffic reclaimed (dense and depthwise rows
+            # alike; group-blocking invariant), before the relayout charge
+            "halo_bytes_saved": float(gather - dma),
+            "saved_bytes": float(gather - dma - relayout),
             "tile_ho": tile_ho, "tile_wo": tile_wo}
 
 
@@ -144,9 +226,7 @@ def _kernel(x_hbm, w_ref, b_ref, o_ref, xs, sem, *, kh: int, kw: int,
     tho, two, bcout = o_ref.shape
     cin = w_ref.shape[2]
     s = stride
-    tile_hi = s * (tho - 1) + kh
-    tile_wi = s * (two - 1) + kw
-    swi = xs.shape[2]
+    shp, swp = xs.shape[3], xs.shape[4]       # per-phase halo'd tile extents
     bb, th, tw, co = (pl.program_id(i) for i in range(4))
     step = (bb * n_th + th) * n_tw + tw
     n_steps = pl.num_programs(0) * n_th * n_tw
@@ -155,10 +235,9 @@ def _kernel(x_hbm, w_ref, b_ref, o_ref, xs, sem, *, kh: int, kw: int,
         b2 = step_idx // (n_th * n_tw)
         r = step_idx % (n_th * n_tw)
         return pltpu.make_async_copy(
-            x_hbm.at[b2, pl.ds((r // n_tw) * tho * s, tile_hi),
-                     pl.ds((r % n_tw) * two * s, tile_wi), :],
-            xs.at[slot, pl.ds(0, tile_hi), pl.ds(0, tile_wi), :],
-            sem.at[slot])
+            x_hbm.at[b2, :, :, pl.ds((r // n_tw) * tho, shp),
+                     pl.ds((r % n_tw) * two, swp), :],
+            xs.at[slot], sem.at[slot])
 
     @pl.when((step == 0) & (co == 0))
     def _():                                   # pipeline prologue
@@ -175,13 +254,11 @@ def _kernel(x_hbm, w_ref, b_ref, o_ref, xs, sem, *, kh: int, kw: int,
     acc = jnp.zeros((tho * two, bcout), jnp.float32)
     for u in range(kh):
         for v in range(kw):
-            # Phase selection: slice the dense window, then keep phase 0 of
-            # each stride-s group via reshape-and-index (no strided loads;
-            # garbage beyond the DMA'd region lands only in dropped phases).
-            blk = xs[step % 2, pl.ds(u, s * tho)]        # (s·tho, swi, Cin)
-            rows = blk.reshape(tho, s, swi, cin)[:, 0]   # (tho, swi, Cin)
-            xsel = rows[:, v:v + s * two]                # (tho, s·two, Cin)
-            xsel = xsel.reshape(tho, two, s, cin)[:, :, 0]
+            # Phase-major tap selection: tap (u, v) is the contiguous
+            # window [u//s : u//s + tho, v//s : v//s + two] of phase
+            # (u % s, v % s) — a static VMEM slice, no reshape-and-index.
+            xsel = xs[step % 2, u % s, v % s, pl.ds(u // s, tho),
+                      pl.ds(v // s, two), :]              # (tho, two, Cin)
             acc = acc + jnp.dot(
                 xsel.reshape(tho * two, cin).astype(jnp.float32),
                 w_ref[u, v].astype(jnp.float32),
@@ -199,7 +276,9 @@ def merged_conv(x, w, b=None, *, stride: int = 1, bcout: int = 128,
 
     VALID convolution with ``stride`` on both spatial axes.  ``tile_ho`` /
     ``tile_wo`` are the output tile dims (default: the 2-D VMEM planner);
-    ``b``/``activation`` fuse the segment epilogue.
+    ``b``/``activation`` fuse the segment epilogue.  The input is laid
+    out phase-major (see module docstring) before the kernel; at stride 1
+    that is a free reshape.
     """
     n, h, wdt, cin = x.shape
     kh, kw, _, cout = w.shape
@@ -218,21 +297,15 @@ def merged_conv(x, w, b=None, *, stride: int = 1, bcout: int = 128,
     tile_wo = max(1, min(tile_wo, wo))
     n_th, n_tw = -(-ho // tile_ho), -(-wo // tile_wo)
     ho_p, wo_p = n_th * tile_ho, n_tw * tile_wo
-    tile_hi = s * (tile_ho - 1) + kh
-    tile_wi = s * (tile_wo - 1) + kw
-    # Scratch is padded so every tap's dense slice stays in bounds; the
-    # DMA fills only the (tile_hi, tile_wi) window, and elements beyond it
-    # are never selected (they fall in dropped stride phases).
-    shi = s * tile_ho + kh - 1
-    swi = s * tile_wo + kw - 1
+    ph, pw, dh, dw = phase_extents(kh, kw, s)
+    shp, swp = tile_ho + dh, tile_wo + dw     # per-phase halo'd tile extents
 
-    # Ragged last tiles: zero-pad the image so every DMA window is full
-    # (static copy sizes); the garbage output rows/cols are sliced off.
-    # Unlike the deleted gather this touches HBM only when ragged.
-    pad_h = max(0, (n_th - 1) * tile_ho * s + tile_hi - h)
-    pad_w = max(0, (n_tw - 1) * tile_wo * s + tile_wi - wdt)
-    if pad_h or pad_w:
-        x = jnp.pad(x, ((0, 0), (0, pad_h), (0, pad_w), (0, 0)))
+    # Phase-major relayout; per-phase extents padded so every DMA window
+    # is full (static copy sizes) — ragged last tiles read zero rows/cols
+    # whose outputs are sliced off below.
+    hs = max(n_th * tile_ho + dh, -(-h // s))
+    ws = max(n_tw * tile_wo + dw, -(-wdt // s))
+    x = phase_major(x, kh, kw, s, hs, ws)
 
     bias = jnp.zeros((1, cout), x.dtype) if b is None else b.reshape(1, cout)
 
@@ -242,7 +315,7 @@ def merged_conv(x, w, b=None, *, stride: int = 1, bcout: int = 128,
                           n_tw=n_tw, activation=activation),
         grid=grid,
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.ANY),     # HBM-resident image
+            pl.BlockSpec(memory_space=pltpu.ANY),     # HBM phase-major image
             pl.BlockSpec((kh, kw, cin, bcout),
                          lambda bb, th, tw, co: (0, 0, 0, co)),
             pl.BlockSpec((1, bcout), lambda bb, th, tw, co: (0, co)),
@@ -250,7 +323,7 @@ def merged_conv(x, w, b=None, *, stride: int = 1, bcout: int = 128,
         out_specs=pl.BlockSpec((None, tile_ho, tile_wo, bcout),
                                lambda bb, th, tw, co: (bb, th, tw, co)),
         out_shape=jax.ShapeDtypeStruct((n, ho_p, wo_p, cout), x.dtype),
-        scratch_shapes=[pltpu.VMEM((2, shi, swi, cin), x.dtype),
+        scratch_shapes=[pltpu.VMEM((2, ph, pw, shp, swp, cin), x.dtype),
                         pltpu.SemaphoreType.DMA((2,))],
         interpret=interpret,
     )(x, w, bias)

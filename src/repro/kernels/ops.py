@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .depthwise_conv import choose_group_block, depthwise_conv
 from .flash_attention import flash_attention
 from .merged_conv import merged_conv
 from .merged_ffn import merged_ffn
@@ -121,6 +122,36 @@ def merged_conv_op(x, w, b=None, *, stride: int = 1,
     if pc:
         y = y[..., :cout]
     return y
+
+
+def depthwise_conv_op(x, w, b=None, *, stride: int = 1,
+                      groups: int | None = None,
+                      activation: str | None = None,
+                      tile_ho: int | None = None, tile_wo: int | None = None,
+                      bgroups: int | None = None, interpret: bool = False):
+    """Grouped/depthwise merged-segment conv (VALID, stride ``s``) with
+    fused bias + boundary activation.
+
+    ``groups`` is the ``feature_group_count``; it defaults to the
+    depthwise reading ``Cin // Cin_g`` from the HWIO weight shape
+    (``Cin_g = w.shape[2]``), so plain depthwise calls pass just
+    ``(x, w, b, stride=s)``.  ``bgroups`` (groups per grid step) defaults
+    to ``choose_group_block`` — a lane-friendly channel tile for
+    depthwise shapes, one group per step for ``Cin_g > 1``.  The group
+    axis is padded up inside the kernel wrapper; no fallback to lax on
+    the TPU path.
+    """
+    if groups is None:
+        groups = x.shape[-1] // w.shape[2]
+    if not (_use_pallas() or interpret):
+        y = ref.depthwise_conv_ref(x, w, b, stride=stride, groups=groups)
+        return ref.apply_activation(y, activation)
+    cin_g = w.shape[2]
+    cout_g = w.shape[3] // groups
+    bg = choose_group_block(groups, cin_g, cout_g, bgroups)
+    return depthwise_conv(x, w, b, stride=stride, groups=groups, bgroups=bg,
+                          tile_ho=tile_ho, tile_wo=tile_wo,
+                          activation=activation, interpret=interpret)
 
 
 def rglru_scan_op(a, b, *, interpret: bool = False):

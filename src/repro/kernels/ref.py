@@ -36,6 +36,25 @@ def merged_conv_ref(x, w, b=None, stride: int = 1):
     return y.astype(x.dtype)
 
 
+def depthwise_conv_ref(x, w, b=None, stride: int = 1,
+                       groups: int | None = None):
+    """VALID NHWC grouped conv + bias — depthwise when ``groups == Cin``.
+
+    ``w`` is HWIO ``(kh, kw, Cin/g, Cout)``; ``groups`` defaults to the
+    depthwise reading ``Cin // Cin_g``.  Certification oracle for the
+    Pallas ``depthwise_conv`` kernel (tests only off-TPU dispatch).
+    """
+    if groups is None:
+        groups = x.shape[-1] // w.shape[2]
+    y = lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32), (stride, stride),
+        "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
 def apply_activation(y, name=None):
     """Boundary activation σ_j of a merged segment (oracle for the fused
     kernel epilogue); fp32 math regardless of storage dtype."""

@@ -115,7 +115,11 @@ class CNNHost:
         kept = set(seg.kept)
         dw = all(self.net.spec(l).depthwise for l in seg.layers
                  if l in kept and self.net.spec(l).kind == "conv") and kept
-        return ("conv", h, w, cin, cout, K, S, bool(dw), self.batch,
+        # feature_group_count rides in the signature explicitly: depthwise
+        # segments bucket by their group count (= cin under the phase-major
+        # grouped kernel), never alongside dense segments of equal shape.
+        groups = cin if dw else 1
+        return ("conv", h, w, cin, cout, K, S, bool(dw), groups, self.batch,
                 self.dtype_bytes)
 
     def segment_probe(self, seg: Segment, params=None) -> ProbeCallable:
@@ -151,10 +155,11 @@ class CNNHost:
         @jax.jit
         def fn(x, wgt, b):
             xp = jnp.pad(x, ((0, 0), (lo, hi), (lo, hi), (0, 0))) if K > 1 else x
-            if dw:
-                return cnn._conv(xp, wgt, stride, True) + b
             # Time the segment exactly as it deploys: through the Pallas
-            # fast path on TPU (strided segments included), oracle off-TPU.
+            # fast path on TPU (strided and depthwise segments included),
+            # oracle off-TPU.
+            if dw:
+                return kernels.depthwise_conv_op(xp, wgt, b, stride=stride)
             return kernels.merged_conv_op(xp, wgt, b, stride=stride)
         return ProbeCallable(fn, (x, wgt, b))
 

@@ -96,7 +96,7 @@ def _execute_cnn(graph: ir.UnitGraph, x):
             if K > 1:
                 x = jnp.pad(x, ((0, 0), (lo, hi), (lo, hi), (0, 0)))
             if u.depthwise:
-                x = _cnn._conv(x, w, u.stride, True) + b
+                x = kernels.depthwise_conv_op(x, w, b, stride=u.stride)
             else:
                 x = kernels.merged_conv_op(x, w, b, stride=u.stride)
             if u.add_from is not None:
