@@ -32,6 +32,7 @@ bench-serve:
 bench-smoke:
 	$(ENV) $(PY) -m benchmarks.bench_tables --smoke
 	$(ENV) $(PY) -m benchmarks.bench_serve --smoke
+	$(ENV) $(PY) -m benchmarks.bench_serve --smoke --quantize w8a8
 	$(ENV) XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 		$(PY) -m benchmarks.bench_serve --smoke --mesh --model-par 2
 

@@ -221,10 +221,121 @@ def depthwise_tile_sweep(rng, *, ks=(3, 5), strides=(1, 2),
     return rows
 
 
+def quant_kernel_sweep(rng, *, modes=("int8", "w8a8"), ks=(3, 5),
+                       strides=(1, 2), hw=28, cin=32, cout=64):
+    """Quantized merged-kernel sweep: certification + traffic accounting.
+
+    One row per (kernel, stride, k, mode): interpret-mode max|Δ| against
+    the fp32 oracle *asserted* within the rigorous
+    :func:`repro.kernels.quant.error_budget`, HBM weight bytes saved by
+    the narrow storage (scales included — the honest number), and the
+    v5e roofline's predicted segment speedup from the narrower weight
+    traffic (``w_bytes``/``act_bytes`` through the same
+    ``conv2d_cost``/``matmul_cost`` the DP's sibling derivation uses, so
+    the bench reports exactly what the planner sees).
+    """
+    import jax.numpy as jnp
+    from repro import kernels
+    from repro.core.latency import (AnalyticTPUOracle, conv2d_cost,
+                                    matmul_cost)
+    from repro.kernels import quant
+
+    oracle = AnalyticTPUOracle()
+    rows = []
+    for stride in strides:
+        for k in ks:
+            for mode in modes:
+                x = jnp.asarray(rng.standard_normal((1, hw, hw, cin)),
+                                jnp.float32)
+                wt = jnp.asarray(
+                    rng.standard_normal((k, k, cin, cout)) * 0.1,
+                    jnp.float32)
+                wq, ws = quant.quantize_weight(wt, mode, axis=3)
+                lo, hi = (k - 1) // 2, k - 1 - (k - 1) // 2
+                xp = jnp.pad(x, ((0, 0), (lo, hi), (lo, hi), (0, 0)))
+                aq = mode if mode == "w8a8" else "none"
+                t0 = time.perf_counter()
+                y = kernels.merged_conv_op(xp, wq, None, stride=stride,
+                                           w_scale=ws, act_quant=aq,
+                                           interpret=True)
+                dt = time.perf_counter() - t0
+                yf = kernels.merged_conv_ref(xp, wt, None, stride=stride)
+                maxdiff = float(jnp.abs(y - yf).max())
+                budget = quant.error_budget(
+                    mode, fan_in=k * k * cin,
+                    x_absmax=float(jnp.abs(x).max()),
+                    w_absmax=float(jnp.abs(wt).max()))
+                assert maxdiff <= budget, (mode, k, stride, maxdiff, budget)
+                wbytes_fp = wt.size * 4
+                wbytes_q = wq.size + ws.size * 4
+                cost_fp = conv2d_cost(hw, hw, cin, cout, k, stride,
+                                      dtype_bytes=4)
+                cost_q = conv2d_cost(hw, hw, cin, cout, k, stride,
+                                     dtype_bytes=4, w_bytes=1,
+                                     act_bytes=1 if aq == "w8a8" else None)
+                rows.append({
+                    "kernel": "merged_conv",
+                    "shape": f"h{hw}w{hw}_cin{cin}cout{cout}_k{k}",
+                    "stride": stride, "k": k, "mode": mode,
+                    "interpret_s": dt,
+                    "maxdiff_vs_fp32": maxdiff,
+                    "error_budget": budget,
+                    "within_budget": True,
+                    "weight_bytes_fp32": wbytes_fp,
+                    "weight_bytes_quant": wbytes_q,
+                    "weight_bytes_saved": wbytes_fp - wbytes_q,
+                    "predicted_speedup_v5e":
+                        oracle.segment_latency(cost_fp)
+                        / oracle.segment_latency(cost_q),
+                })
+    # merged rank-FFN (the transformer units the DP quantizes)
+    d, r, tok = 256, 64, 32
+    for mode in modes:
+        x = jnp.asarray(rng.standard_normal((1, tok, d)), jnp.float32)
+        u = jnp.asarray(rng.standard_normal((d, r)) * 0.1, jnp.float32)
+        v = jnp.asarray(rng.standard_normal((r, d)) * 0.1, jnp.float32)
+        uq, us = quant.quantize_weight(u, mode, axis=1)
+        vq, vs = quant.quantize_weight(v, mode, axis=1)
+        aq = mode if mode == "w8a8" else "none"
+        t0 = time.perf_counter()
+        y = kernels.merged_ffn_op(x, uq, vq, u_scale=us, v_scale=vs,
+                                  act_quant=aq, interpret=True)
+        dt = time.perf_counter() - t0
+        yq = kernels.merged_ffn_qref(x, uq, vq, us, vs, act_quant=aq)
+        maxdiff = float(jnp.abs(y - yq).max())
+        wbytes_fp = (u.size + v.size) * 4
+        wbytes_q = uq.size + vq.size + (us.size + vs.size) * 4
+        ab = 1 if aq == "w8a8" else None
+        cost_fp = (matmul_cost(tok, d, r, dtype_bytes=4)
+                   + matmul_cost(tok, r, d, dtype_bytes=4))
+        cost_q = (matmul_cost(tok, d, r, dtype_bytes=4, w_bytes=1,
+                              act_bytes=ab)
+                  + matmul_cost(tok, r, d, dtype_bytes=4, w_bytes=1,
+                                act_bytes=ab))
+        rows.append({
+            "kernel": "merged_ffn",
+            "shape": f"tok{tok}_d{d}_r{r}",
+            "mode": mode,
+            "interpret_s": dt,
+            "maxdiff_vs_qref": maxdiff,
+            "weight_bytes_fp32": wbytes_fp,
+            "weight_bytes_quant": wbytes_q,
+            "weight_bytes_saved": wbytes_fp - wbytes_q,
+            "predicted_speedup_v5e":
+                oracle.segment_latency(cost_fp)
+                / oracle.segment_latency(cost_q),
+        })
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="also time the scalar reference at (L=128, P=8192)")
+    ap.add_argument("--quantize", action="store_true",
+                    help="add the quantized merged-kernel sweep "
+                         "(certification vs fp32 budgets + weight-traffic "
+                         "accounting; also merged into BENCH_kernels.json)")
     ap.add_argument("--out", default="results/BENCH_dp.json")
     args = ap.parse_args(argv)
     rng = np.random.default_rng(0)
@@ -237,11 +348,29 @@ def main(argv=None):
     dw = depthwise_tile_sweep(rng)
     report = {"solver": solver, "merged_conv_tiles": conv,
               "depthwise_conv_tiles": dw}
+    if args.quantize:
+        report["quantized_kernels"] = quant_kernel_sweep(rng)
 
     from repro.launch.distributed import publish_json
 
     if publish_json(args.out, report) is not None:
         print(f"# wrote {args.out}", file=sys.stderr)
+    if args.quantize:
+        # merge the quantized rows into the kernel-bench ledger too, so
+        # one file tracks every kernel's certification + perf trajectory
+        kpath = "results/BENCH_kernels.json"
+        try:
+            with open(kpath) as f:
+                ledger = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            ledger = {}
+        for row in report["quantized_kernels"]:
+            key = (f"quant_sweep,{row['kernel']}_{row['mode']}"
+                   + (f"_s{row['stride']}k{row['k']}"
+                      if "stride" in row else ""))
+            ledger[key] = row
+        if publish_json(kpath, ledger) is not None:
+            print(f"# merged quantized rows into {kpath}", file=sys.stderr)
     print(json.dumps(report, indent=2))
 
 

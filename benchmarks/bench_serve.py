@@ -17,6 +17,13 @@ both stacks:
   per-request latency p50/p99 (submission → retirement, queueing
   included) and sustained tok/s across the whole trace.
 
+``--quantize {int8,w8a8}`` adds a DP-planned quantized leg on its own
+weight-traffic-bound decode instance: compress with precision
+candidates, assert the planner picked quantized units and that their
+narrow weights (+ scales) at least HALVE the weight bytes, then serve
+the reloaded v3 artifact and report measured decode tok/s next to the
+predicted v5e speedup.
+
 Writes ``results/BENCH_serve.json`` with throughput for every protocol
 plus ``mesh_info`` when ``--mesh`` shards the run over the host devices
 (``data × model`` logical mesh; run under
@@ -184,6 +191,78 @@ def _continuous_report(step, params, make_cache, cfg, N, slots, n_prompts,
     }
 
 
+def _quantized_report(mode, N):
+    """DP-planned quantized serve leg, end to end on its own instance.
+
+    The main bench model is op-overhead-bound at CPU-toy sizes, where
+    quantization (correctly) never wins the DP — so this leg runs a
+    weight-traffic-bound, decode-shaped instance (wide d_model, batch 1)
+    where narrow weights genuinely move the roofline.  It compresses
+    with ``--quantize``, asserts the DP picked quantized units, publishes
+    and reloads the v3 artifact, serves it through the shared executor,
+    and reports weight bytes (fp32 vs narrow+scales, quantized units
+    only — the honest reduction), predicted v5e speedup, and measured
+    decode tok/s.  The ≥2× weight-byte reduction is asserted, so the
+    quantized serve path is CI-gated wherever this leg runs.
+    """
+    cfg = dataclasses.replace(get_config("smollm-135m").reduced(),
+                              d_model=256, d_ff=1024, head_dim=64,
+                              num_heads=4, num_kv_heads=4)
+    params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+    host = TransformerHost(cfg, params, env=CostEnv(batch=1, seq=32))
+    res_fp = compress(host, budget_ratio=0.45, P=300)
+    res_q = compress(host, budget_ratio=0.45, P=300, quantize=mode)
+    assert res_q is not None and res_fp is not None
+    qsegs = [s for s in res_q.plan.segments if s.quant != "none"]
+    assert qsegs, "quantized leg: DP must pick at least one quantized unit"
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "bench_lm_q.npz")
+        fp = res_q.save(path)
+        art = runtime.load(path)
+        assert art.fingerprint == fp and art.plan == res_q.plan
+
+    # weight bytes of the quantized units vs the SAME plan lowered fp
+    fp_plan = dataclasses.replace(
+        res_q.plan, segments=tuple(dataclasses.replace(s, quant="none")
+                                   for s in res_q.plan.segments))
+    g_fp = host.lower_plan(fp_plan)
+    bytes_fp = bytes_q = 0
+    for uf, uq in zip(g_fp.units, art.graph.units):
+        if getattr(uq, "quant", "none") == "none":
+            continue
+        bytes_fp += sum(v.size * v.dtype.itemsize
+                        for v in jax.tree_util.tree_leaves(uf.params))
+        bytes_q += sum(v.size * v.dtype.itemsize
+                       for v in jax.tree_util.tree_leaves(uq.params))
+    reduction = bytes_fp / max(bytes_q, 1)
+    assert reduction >= 2.0, \
+        f"quantized units must at least halve weight bytes: {reduction:.2f}x"
+
+    ex = art.executor(None)
+    step_q, gp = ex.serve_step()
+    P = 8
+    prompt = serving.random_prompts(3, 1, P, cfg.vocab_size)
+    _, dec_q, _, _ = serving.serve_loop(step_q, gp, ex.init_cache(1, P + N),
+                                        prompt, N)
+    return {
+        "mode": mode,
+        "instance": {"layers": cfg.num_layers, "d_model": cfg.d_model,
+                     "d_ff": cfg.d_ff, "batch": 1, "seq": 32,
+                     "budget_ratio": 0.45},
+        "quantized_units": len(qsegs),
+        "weight_bytes_fp32": bytes_fp,
+        "weight_bytes_quant": bytes_q,
+        "weight_bytes_saved": bytes_fp - bytes_q,
+        "weight_byte_reduction": reduction,
+        "predicted_speedup_v5e": res_q.speedup,
+        "predicted_speedup_v5e_fp_same_budget": res_fp.speedup,
+        "decode_s": dec_q,
+        "decode_tok_s": serving.decode_tok_s(N - 1, 1, dec_q),
+        "artifact_fingerprint": fp[:16],
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -198,6 +277,11 @@ def main(argv=None):
     ap.add_argument("--tokens", type=int, default=None)
     ap.add_argument("--prompts", type=int, default=None,
                     help="ragged prompts for the batched-scheduler leg")
+    ap.add_argument("--quantize", choices=["none", "int8", "w8a8"],
+                    default="none",
+                    help="add a DP-planned quantized serve leg on a "
+                         "weight-bound instance (asserts ≥2× weight-byte "
+                         "reduction; reports measured decode tok/s)")
     ap.add_argument("--trace", choices=["none", "poisson"],
                     default="poisson",
                     help="arrival trace for the continuous-engine leg")
@@ -285,6 +369,13 @@ def main(argv=None):
     n_units = len(art.graph.units)
     assert n_units < n_orig, "compressed chain must be shallower"
 
+    # DP-planned quantized leg (own weight-bound instance; single-device
+    # — scales shard like any param, but the gate here is the precision
+    # path, which --mesh does not change)
+    quantized = None
+    if args.quantize != "none":
+        quantized = _quantized_report(args.quantize, N)
+
     report = {
         "instance": {"layers": cfg.num_layers, "d_model": cfg.d_model,
                      "batch": B, "prompt": P, "tokens": N,
@@ -300,6 +391,7 @@ def main(argv=None):
         "compressed": comp,
         "batched": batched,
         "continuous": continuous,
+        "quantized": quantized,
         "measured_decode_speedup":
             orig["decode_s"] / max(comp["decode_s"], 1e-9),
         "jit_loop_speedup_compressed": comp["jit_loop_speedup"],

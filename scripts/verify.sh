@@ -17,7 +17,8 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # Pallas code; the tier-1 pass below skips these files so nothing runs
 # twice and the union still covers the whole suite.
 KERNEL_SUITE="tests/test_kernels.py tests/test_merged_conv_general.py \
-    tests/test_depthwise_conv.py tests/test_fastpath.py"
+    tests/test_depthwise_conv.py tests/test_fastpath.py \
+    tests/test_quant_kernels.py"
 
 echo "== interpret-mode kernel equivalence (Pallas vs jnp oracles) =="
 python -m pytest -q $KERNEL_SUITE
@@ -33,6 +34,9 @@ python -m benchmarks.bench_tables --smoke --workers 0 > /dev/null
 
 echo "== serve bench smoke (artifact round-trip + KV-cache parity) =="
 python -m benchmarks.bench_serve --smoke > /dev/null
+
+echo "== quantized serve smoke (DP-planned w8a8 leg, >=2x weight bytes) =="
+python -m benchmarks.bench_serve --smoke --quantize w8a8 > /dev/null
 
 echo "== serve bench smoke, sharded (forced host devices, data x model) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \

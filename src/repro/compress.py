@@ -81,6 +81,12 @@ def main(argv=None):
                     choices=("analytic", "wallclock"))
     ap.add_argument("--P", type=int, default=200,
                     help="latency discretization steps (Algorithm 1)")
+    ap.add_argument("--quantize", default="none",
+                    choices=("none", "int8", "w8a8"),
+                    help="let the DP pick per-unit precision: widens the "
+                         "tables with int8-weight (int8) or int8-weight+"
+                         "activation (w8a8) candidates; chosen segments "
+                         "lower to narrow-weight units (artifact v3)")
     ap.add_argument("--out", required=True, help="artifact path (.npz)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--batch", type=int, default=8)
@@ -131,7 +137,7 @@ def main(argv=None):
                        importance="magnitude", cache_dir=args.cache_dir,
                        probe_config=probe_config, resume=args.resume,
                        workers=args.workers, host_spec=host_spec,
-                       work_dir=args.work_dir)
+                       work_dir=args.work_dir, quantize=args.quantize)
     except DistBuildError as e:
         print(f"[repro.compress] distributed build failed: {e}")
         raise SystemExit(3)
@@ -149,6 +155,9 @@ def main(argv=None):
         "kept_layers": len(plan.C),
         "segments": len(plan.segments),
         "predicted_speedup": round(res.speedup, 3),
+        "quantize": args.quantize,
+        "quantized_units": sum(1 for s in plan.segments
+                               if s.quant != "none"),
         "flagged_probes": (len(res.tables.provenance)
                            if res.tables is not None else 0),
         "artifact": args.out,

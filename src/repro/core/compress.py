@@ -78,6 +78,8 @@ class CompressResult:
             "compressed_latency": self.compressed_latency,
             "predicted_speedup": self.speedup,
             "method": self.plan.method,
+            "quantized_units": sum(1 for s in self.plan.segments
+                                   if s.quant != "none"),
             # Latency entries that were NOT clean first-shot measurements
             # ("retimed"/"quarantined") — deployers can see exactly which
             # numbers the plan rests on (empty list: all clean).
@@ -116,6 +118,7 @@ def compress(
     workers: int = 0,
     host_spec: dict | None = None,
     work_dir: str | None = None,
+    quantize: str | None = None,
 ) -> CompressResult | None:
     """Run LayerMerge (or a baseline) at ``T0 = budget_ratio · T_orig``.
 
@@ -134,6 +137,13 @@ def compress(
     this host in another process); the fan-out's :class:`DistReport`
     lands on ``result.dist_report``.  The merged tables are bit-identical
     to ``workers=0``, so every downstream number is unchanged.
+
+    ``quantize`` ('int8' | 'w8a8') widens every span's candidate row with
+    derived precision siblings (:func:`repro.core.tables.
+    quant_sibling_entries`), so the DP co-optimizes merge structure ×
+    per-unit precision under the one budget; segments it picks quantized
+    lower to narrow-weight units.  ``None``/'none' leaves tables, DP
+    visit order, and plans bit-identical to an fp-only run.
     """
     oracle = _resolve_oracle(latency_oracle)
     layer_lats = probe_engine.layer_latencies(host, oracle, params,
@@ -144,6 +154,9 @@ def compress(
     L = len(host.descs())
 
     if method == "layeronly":
+        if quantize and quantize != "none":
+            raise ValueError("quantize is a merged-segment feature; "
+                             "method='layeronly' has no merged units")
         return _layer_only(host, T0, P, oracle, importance, base_perf, params,
                            t_orig, layer_lats)
 
@@ -161,12 +174,18 @@ def compress(
             importance=importance, base_perf=base_perf, params=params,
             engine=engine, probe_config=probe_config, resume=resume,
             work_dir=work_dir)
+        # Precision siblings are derived AFTER the distributed merge: the
+        # worker manifest/journal stay fp-only, so fan-out bit-identity
+        # (and resume) are untouched by quantization.
+        from .tables import with_quant_siblings
+        tables = with_quant_siblings(tables, host, quantize)
     else:
         tables = build_tables(host, method=method, latency_oracle=oracle,
                               importance=importance, base_perf=base_perf,
                               params=params, engine=engine,
                               cache_dir=cache_dir,
-                              probe_config=probe_config, resume=resume)
+                              probe_config=probe_config, resume=resume,
+                              quantize=quantize)
     t0 = time.perf_counter()
     res = solve_dp(L, tables.fn(), T0, P, method=method,
                    original_k=host.original_k)

@@ -33,8 +33,20 @@ from .plan import CompressionPlan, Segment
 
 NEG = -math.inf
 
-# TableFn: (i, j) -> {k: (importance I[i,j,k], latency T[i,j,k], kept ids)}
+# TableFn: (i, j) -> {k: (importance I[i,j,k], latency T[i,j,k], kept ids)}.
+# The per-segment candidate axis is widened for precision planning: a key
+# is either the plain merged-size int ``k`` (fp) or a ``(k, mode)`` tuple
+# naming a quantized sibling (mode ∈ repro.kernels.quant.MODES).  Every
+# solver splits keys through :func:`split_key`; fp-only tables keep int
+# keys and visit order, so their plans stay bit-identical.
 TableFn = Callable[[int, int], Mapping[int, tuple[float, float, tuple[int, ...]]]]
+
+
+def split_key(key) -> tuple[int, str]:
+    """``(k, quant-mode)`` from a table option key (int k ⇒ fp 'none')."""
+    if isinstance(key, tuple):
+        return int(key[0]), key[1]
+    return int(key), "none"
 
 
 @dataclasses.dataclass
@@ -75,6 +87,7 @@ class _FlatSpanOpts:
     imp: np.ndarray         # float64 (n,) importance I[i,j,k]
     lat: np.ndarray         # float64 (n,) true latency T[i,j,k]
     kept: list              # tuple[int, ...] per candidate
+    quant: list             # str quant mode per candidate ('none' for fp)
     offsets: np.ndarray     # int64 (L + 2,)
 
 
@@ -85,15 +98,18 @@ def _flatten_span_opts(L: int, table: TableFn) -> _FlatSpanOpts:
     imp: list[float] = []
     lat: list[float] = []
     kept: list = []
+    quant: list = []
     offsets = np.zeros(L + 2, dtype=np.int64)
     for l in range(1, L + 1):
         for i in range(l):
-            for k, (iv, tv, kv) in table(i, l).items():
+            for key, (iv, tv, kv) in table(i, l).items():
+                k, mode = split_key(key)
                 lp.append(i)
                 ks.append(k)
                 imp.append(iv)
                 lat.append(tv)
                 kept.append(kv)
+                quant.append(mode)
         offsets[l + 1] = len(lp)
     return _FlatSpanOpts(
         lp=np.asarray(lp, dtype=np.int32),
@@ -101,6 +117,7 @@ def _flatten_span_opts(L: int, table: TableFn) -> _FlatSpanOpts:
         imp=np.asarray(imp, dtype=np.float64),
         lat=np.asarray(lat, dtype=np.float64),
         kept=kept,
+        quant=quant,
         offsets=offsets)
 
 
@@ -181,7 +198,8 @@ def solve_dp(
         lat, kept = float(flat.lat[ci]), flat.kept[ci]
         orig = (original_k is not None and l - lp == 1
                 and k == original_k(l) and set(kept) == {l})
-        segs_rev.append((Segment(i=lp, j=l, k=k, kept=kept, original=orig), lat))
+        segs_rev.append((Segment(i=lp, j=l, k=k, kept=kept, original=orig,
+                                 quant=flat.quant[ci]), lat))
         l, t = lp, t - int(td_all[ci])
     return _build_result(L, T0, P, M, segs_rev, method)
 
@@ -203,14 +221,15 @@ def solve_dp_reference(
 
     M = np.full((L + 1, P + 1), NEG, dtype=np.float64)
     M[0, :] = 0.0
-    back: dict[tuple[int, int], tuple[int, int, int, float, tuple[int, ...]]] = {}
+    back: dict[tuple[int, int], tuple] = {}
 
     for l in range(1, L + 1):
         for lp in range(l):
             opts = span_opts.get((lp, l))
             if not opts:
                 continue
-            for k, (imp, lat, kept) in opts.items():
+            for key, (imp, lat, kept) in opts.items():
+                k, mode = split_key(key)
                 td = _discretize(lat, unit)
                 if td > P:
                     continue
@@ -221,7 +240,7 @@ def solve_dp_reference(
                     cand = prev + imp
                     if cand > M[l, t]:
                         M[l, t] = cand
-                        back[(l, t)] = (lp, k, td, lat, kept)
+                        back[(l, t)] = (lp, k, td, lat, kept, mode)
 
     if M[L, P] == NEG:
         return None
@@ -229,10 +248,11 @@ def solve_dp_reference(
     segs_rev: list[tuple[Segment, float]] = []
     l, t = L, P
     while l > 0:
-        lp, k, td, lat, kept = back[(l, t)]
+        lp, k, td, lat, kept, mode = back[(l, t)]
         orig = (original_k is not None and l - lp == 1
                 and k == original_k(l) and set(kept) == {l})
-        segs_rev.append((Segment(i=lp, j=l, k=k, kept=kept, original=orig), lat))
+        segs_rev.append((Segment(i=lp, j=l, k=k, kept=kept, original=orig,
+                                 quant=mode), lat))
         l, t = lp, t - td
     return _build_result(L, T0, P, M, segs_rev, method)
 
@@ -312,10 +332,12 @@ def brute_force(
             return
         for j in range(pos + 1, L + 1):
             opts = table(pos, j)
-            for k, (i_val, lat, kept) in opts.items():
+            for key, (i_val, lat, kept) in opts.items():
+                k, mode = split_key(key)
                 td = _discretize(lat, unit)
                 if used + td <= P:
-                    segs.append(Segment(i=pos, j=j, k=k, kept=kept))
+                    segs.append(Segment(i=pos, j=j, k=k, kept=kept,
+                                        quant=mode))
                     rec(j, used + td, imp + i_val, segs)
                     segs.pop()
 

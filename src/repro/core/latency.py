@@ -146,7 +146,8 @@ class WallClockOracle(LatencyOracle):
 
 def conv2d_cost(h: int, w: int, cin: int, cout: int, k: int, stride: int = 1,
                 depthwise: bool = False, dtype_bytes: int = 2,
-                batch: int = 1) -> CostBreakdown:
+                batch: int = 1, w_bytes: int | None = None,
+                act_bytes: int | None = None) -> CostBreakdown:
     """Analytic cost of one (possibly merged) conv layer.
 
     Activation traffic models the zero-copy DMA kernels — dense
@@ -161,37 +162,52 @@ def conv2d_cost(h: int, w: int, cin: int, cout: int, k: int, stride: int = 1,
     one row tile was needed — is gone, as is the lax gather model the
     depthwise branch used while depthwise units bypassed Pallas, so the
     DP's latency table reflects the reclaimed bandwidth on both paths.
+
+    ``w_bytes``/``act_bytes`` split the weight vs. activation byte
+    widths for quantized units (int8 weights: ``w_bytes=1``; w8a8 also
+    ``act_bytes=1``).  Both default to ``dtype_bytes`` — the historical
+    single-scalar behavior, bit-identical.
     """
+    wb = dtype_bytes if w_bytes is None else w_bytes
+    ab = dtype_bytes if act_bytes is None else act_bytes
     ho, wo = -(-h // stride), -(-w // stride)
     if depthwise:
         flops = 2.0 * batch * ho * wo * cin * k * k
-        wbytes = cin * k * k * dtype_bytes
+        wbytes = cin * k * k * wb
     else:
         flops = 2.0 * batch * ho * wo * cin * cout * k * k
-        wbytes = cin * cout * k * k * dtype_bytes
-    in_bytes = float(h * w * cin * dtype_bytes)
+        wbytes = cin * cout * k * k * wb
+    in_bytes = float(h * w * cin * ab)
     if k > 1 or stride > 1:
         # layering note: the kernel package never imports core, so this
         # lazy import of its tile planner cannot cycle.
         from repro.kernels.merged_conv import input_traffic_model
         traffic = input_traffic_model(h + k - 1, w + k - 1, cin, k, k,
-                                      stride, dtype_bytes,
+                                      stride, ab,
                                       groups=cin if depthwise else 1)
         in_bytes = (max(in_bytes, traffic["dma_bytes"])
                     + traffic["relayout_bytes"])
-    abytes = batch * (in_bytes + ho * wo * cout * dtype_bytes)
+    abytes = batch * (in_bytes + ho * wo * cout * ab)
     return CostBreakdown(flops, wbytes + abytes)
 
 
-def matmul_cost(m: int, kdim: int, n: int, dtype_bytes: int = 2) -> CostBreakdown:
+def matmul_cost(m: int, kdim: int, n: int, dtype_bytes: int = 2,
+                w_bytes: int | None = None,
+                act_bytes: int | None = None) -> CostBreakdown:
+    """``(m, kdim) @ (kdim, n)``; the ``(kdim, n)`` operand is the weight
+    (``w_bytes``), the ``(m, kdim)`` input and ``(m, n)`` output are
+    activations (``act_bytes``); both default to ``dtype_bytes``."""
+    wb = dtype_bytes if w_bytes is None else w_bytes
+    ab = dtype_bytes if act_bytes is None else act_bytes
     flops = 2.0 * m * kdim * n
-    bytes_ = (m * kdim + kdim * n + m * n) * dtype_bytes
+    bytes_ = m * kdim * ab + kdim * n * wb + m * n * ab
     return CostBreakdown(flops, bytes_)
 
 
 def rank_ffn_cost(tokens: int, d: int, rank: int,
-                  dtype_bytes: int = 2) -> CostBreakdown:
+                  dtype_bytes: int = 2, w_bytes: int | None = None,
+                  act_bytes: int | None = None) -> CostBreakdown:
     """Merged rank-``r`` residual layer: ``x + (x·U)·V`` (two thin GEMMs)."""
     r = min(rank, d)
-    return (matmul_cost(tokens, d, r, dtype_bytes)
-            + matmul_cost(tokens, r, d, dtype_bytes))
+    return (matmul_cost(tokens, d, r, dtype_bytes, w_bytes, act_bytes)
+            + matmul_cost(tokens, r, d, dtype_bytes, w_bytes, act_bytes))

@@ -55,6 +55,9 @@ class Segment:
     kept: tuple[int, ...]       # Ĉ_ijk — kept layer indices within (i, j]
     original: bool = False      # True ⇔ singleton kept exactly as in the source
                                 # network (no activation removed)
+    quant: str = "none"         # per-unit precision the DP chose for the
+                                # merged weights: 'none' | 'int8' | 'w8a8'
+                                # | 'fp8' (orthogonal to `original`)
 
     @property
     def layers(self) -> tuple[int, ...]:
@@ -122,7 +125,8 @@ class CompressionPlan:
             "method": self.method,
             "segments": [
                 {"i": s.i, "j": s.j, "k": s.k, "kept": list(s.kept),
-                 "original": s.original}
+                 "original": s.original,
+                 **({"quant": s.quant} if s.quant != "none" else {})}
                 for s in self.segments
             ],
         }, indent=2)
@@ -134,7 +138,8 @@ class CompressionPlan:
             num_layers=d["num_layers"],
             segments=tuple(
                 Segment(i=s["i"], j=s["j"], k=s["k"], kept=tuple(s["kept"]),
-                        original=s.get("original", False))
+                        original=s.get("original", False),
+                        quant=s.get("quant", "none"))
                 for s in d["segments"]),
             objective=d.get("objective", 0.0),
             latency=d.get("latency", 0.0),

@@ -100,8 +100,18 @@ def pareto_prune_options(
     so swapping a dominated pick for its dominator keeps feasibility and
     does not lower the objective.  Pruning therefore preserves the DP's
     optimum exactly while shrinking the candidate set it sweeps.
+
+    Keys may be plain ints or ``(k, quant-mode)`` precision siblings (see
+    :data:`repro.core.dp.TableFn`); the tie-break key normalizes both so
+    mixed tables sort deterministically — fp before quantized at equal
+    ``(T, I, k)``, identical order to before on fp-only tables.
     """
-    ordered = sorted(opts.items(), key=lambda kv: (kv[1][1], -kv[1][0], kv[0]))
+    def keyf(kv):
+        from .dp import split_key
+        k, mode = split_key(kv[0])
+        return (kv[1][1], -kv[1][0], k, mode != "none", mode)
+
+    ordered = sorted(opts.items(), key=keyf)
     out: dict[int, tuple[float, float, tuple[int, ...]]] = {}
     best_i = _NEG
     for k, (imp, lat, kept) in ordered:

@@ -144,6 +144,18 @@ def cache_key(host, oracle, method: str, importance, *,
     return h.hexdigest()
 
 
+def _key_sort(k) -> tuple[int, str]:
+    """Deterministic sort key over mixed int / ``(k, mode)`` option keys.
+
+    The compress pipeline only ever caches fp tables (precision siblings
+    are derived after the cache publish — :mod:`repro.core.tables`), but
+    direct ``save``/``load`` callers may hold widened tables; both key
+    shapes round-trip (ints as-is, tuples as 2-element JSON lists)."""
+    if isinstance(k, tuple):
+        return int(k[0]), str(k[1])
+    return int(k), ""
+
+
 def _path(cache_dir: str, key: str) -> str:
     return os.path.join(cache_dir, f"tables_{key}.json")
 
@@ -192,8 +204,10 @@ def save(cache_dir: str, key: str, tables) -> str:
                        in sorted(tables.provenance.items())],
         "spans": [
             {"i": i, "j": j,
-             "opts": [{"k": k, "imp": imp, "lat": lat, "kept": list(kept)}
-                      for k, (imp, lat, kept) in sorted(row.items())]}
+             "opts": [{"k": list(k) if isinstance(k, tuple) else k,
+                       "imp": imp, "lat": lat, "kept": list(kept)}
+                      for k, (imp, lat, kept)
+                      in sorted(row.items(), key=lambda kv: _key_sort(kv[0]))]}
             for (i, j), row in sorted(tables.entries.items())
         ],
     }
@@ -221,7 +235,8 @@ def load(cache_dir: str, key: str):
             return None                       # valid but stale: plain miss
         entries = {
             (sp["i"], sp["j"]): {
-                o["k"]: (o["imp"], o["lat"], tuple(o["kept"]))
+                (tuple(o["k"]) if isinstance(o["k"], list) else o["k"]):
+                    (o["imp"], o["lat"], tuple(o["kept"]))
                 for o in sp["opts"]}
             for sp in payload["spans"]
         }

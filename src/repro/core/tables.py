@@ -82,6 +82,67 @@ def pareto_prune(
     return out, dropped
 
 
+# Relative importance penalty a precision sibling carries: strictly below
+# its fp twin, so the DP prefers fp whenever the budget is slack and only
+# trades precision when latency binds (the pair is mutually non-dominated:
+# the sibling has strictly lower latency, marginally lower importance).
+QUANT_IMPORTANCE_PENALTY = 1e-4
+
+
+def quant_sibling_entries(host, entries, quantize: str,
+                          ) -> tuple[dict, int]:
+    """Widen per-span candidate rows with ``(k, mode)`` precision siblings.
+
+    Each fp entry whose segment the host can quantize (``host.
+    segment_cost(seg, quant=mode)`` returns a cost; ``None`` marks
+    barrier/ineligible segments) gains one sibling keyed ``(k, mode)``:
+
+    * ``T_q = T_fp × (analytic quantized / analytic fp latency)`` — the
+      narrow-byte ratio the v5e roofline predicts, applied
+      multiplicatively so wall-clock-measured fp entries keep their
+      measurement and only the *relative* precision effect is modeled;
+    * ``I_q = I_fp − |I_fp|·penalty − ε`` (strictly below the fp twin).
+
+    Siblings are derived, not probed: the probe manifest, the build
+    journal, and the on-disk cache all stay fp-only, so resume/dist
+    builds remain bit-identical and fp-only runs never see widened keys.
+    """
+    if not quantize or quantize == "none":
+        return entries, 0
+    from repro.kernels.quant import MODES
+    if quantize not in MODES:
+        raise ValueError(f"unknown quantization mode {quantize!r}")
+    ora = AnalyticTPUOracle()
+    added = 0
+    out: dict = {}
+    for (i, j), row in entries.items():
+        new_row = dict(row)
+        for key, (imp, lat, kept) in row.items():
+            if isinstance(key, tuple):
+                continue                      # already a sibling
+            seg = Segment(i=i, j=j, k=key, kept=kept)
+            cost_q = host.segment_cost(seg, quant=quantize)
+            if cost_q is None:
+                continue
+            lat_f = ora.segment_latency(host.segment_cost(seg))
+            lat_q = ora.segment_latency(cost_q)
+            if not lat_q < lat_f:
+                continue                      # no predicted win → no sibling
+            imp_q = imp - abs(imp) * QUANT_IMPORTANCE_PENALTY - 1e-12
+            new_row[(key, quantize)] = (imp_q, lat * (lat_q / lat_f), kept)
+            added += 1
+        out[(i, j)] = new_row
+    return out, added
+
+
+def with_quant_siblings(tables: Tables, host, quantize: str | None) -> Tables:
+    """Return ``tables`` widened with precision siblings (no-op for fp)."""
+    if not quantize or quantize == "none":
+        return tables
+    entries, _added = quant_sibling_entries(host, tables.entries, quantize)
+    return dataclasses.replace(tables, entries=entries)
+
+
 def build_tables(
     host,
     *,
@@ -96,6 +157,7 @@ def build_tables(
     cache_dir: str | None = None,
     probe_config: probe_engine.ProbeConfig | None = None,
     resume: bool = True,
+    quantize: str | None = None,
 ) -> Tables:
     """Construct both lookup tables for ``host`` (Algorithm 2, lines 1-8).
 
@@ -118,6 +180,11 @@ def build_tables(
     failing buckets; non-default provenance lands in
     ``Tables.provenance`` and survives the cache and artifact round-trip.
     ``resume=False`` discards any stale journal and starts clean.
+
+    ``quantize`` (``'int8'``/``'w8a8'``) widens each span's candidate row
+    with derived ``(k, mode)`` precision siblings after the fp build — see
+    :func:`quant_sibling_entries`; ``None``/``'none'`` leaves the tables
+    (and therefore the DP's plans) bit-identical to an fp-only build.
     """
     oracle = latency_oracle or AnalyticTPUOracle()
 
@@ -137,7 +204,7 @@ def build_tables(
                 if progress:
                     progress(f"tables: cache hit ({cached.num_entries} "
                              "entries)")
-                return cached
+                return with_quant_siblings(cached, host, quantize)
             if not resume:
                 table_cache.discard_journal(cache_dir, key)
             journal = table_cache.BuildJournal(cache_dir, key)
@@ -209,7 +276,10 @@ def build_tables(
         table_cache.save(cache_dir, key, tables)
         # Only after a durable publish is the journal redundant.
         table_cache.discard_journal(cache_dir, key)
-    return tables
+    # Precision siblings are injected after the (fp-only) cache publish:
+    # the cache, the journal, and the probe manifest never see widened
+    # keys, so fp and quantized builds share one cached table.
+    return with_quant_siblings(tables, host, quantize)
 
 
 def enumerate_probes(

@@ -32,20 +32,50 @@ input (grid ``(batch, ho-tiles, wo-tiles, group-blocks)``, per-group
 fp32 accumulators) — see ``depthwise_conv.py`` for the grid and
 accumulator design.  ``depthwise_conv_ref`` is its certification
 oracle.
+
+Quantization contract (int8 / w8a8 / fp8 scaffolding)
+-----------------------------------------------------
+All three merged kernels accept narrow weights with per-channel fp32
+scales (:mod:`repro.kernels.quant` is the ONE rounding semantics —
+symmetric, zero-point-free, ``q·scale ≈ w``):
+
+* **Scale layout** — conv weights quantize along the HWIO output-channel
+  axis (``w_scale: (Cout,)``); low-rank factors along their output
+  column (``u_scale: (R,)``, ``v_scale: (D,)``).  Because each scale is
+  constant over its contraction, kernels apply it AFTER the fp32
+  accumulation — mathematically identical to per-weight dequant before
+  the dot, with the narrow blocks riding the same zero-copy DMA/halo
+  pipeline as fp weights.
+* **w8a8** — the ``*_op`` entry point quantizes the activation
+  per-tensor at the call site and folds its scale into the weight scale,
+  so kernels always see ONE scale operand; the FFN keeps the fp
+  activation panel for an exact residual add.
+* **Error budgets** — quantized outputs are certified against the plain
+  fp32 oracles within :func:`repro.kernels.quant.error_budget` — a
+  rigorous worst-case bound (half-ulp per weight times the reduction
+  fan-in), not a tuned tolerance.  ``*_qref`` dequantizing oracles give
+  the off-TPU dispatch path and tight (reassociation-only) agreement
+  with the kernels.
+* **Provenance** — scales are DATA: lowered units carry them in
+  ``params`` (annotated axes, sharded/fingerprinted like weights) with a
+  ``quant`` static record naming the mode — see
+  :mod:`repro.runtime.ir`; artifact format v3.
 """
-from . import ops, ref
+from . import ops, quant, ref
 from .ops import (channel_tile, depthwise_conv_op, flash_attention_op,
                   force_backend, merged_conv_op, merged_ffn_op,
                   rglru_scan_op, rmsnorm_op)
-from .ref import (apply_activation, depthwise_conv_ref, flash_attention_ref,
-                  merged_conv_ref, merged_ffn_ref, rglru_scan_ref,
+from .ref import (apply_activation, depthwise_conv_qref, depthwise_conv_ref,
+                  flash_attention_ref, merged_conv_qref, merged_conv_ref,
+                  merged_ffn_qref, merged_ffn_ref, rglru_scan_ref,
                   rmsnorm_ref)
 
 __all__ = [
-    "ops", "ref",
+    "ops", "quant", "ref",
     "channel_tile", "depthwise_conv_op", "flash_attention_op",
     "force_backend", "merged_conv_op", "merged_ffn_op", "rglru_scan_op",
     "rmsnorm_op",
-    "apply_activation", "depthwise_conv_ref", "flash_attention_ref",
-    "merged_conv_ref", "merged_ffn_ref", "rglru_scan_ref", "rmsnorm_ref",
+    "apply_activation", "depthwise_conv_qref", "depthwise_conv_ref",
+    "flash_attention_ref", "merged_conv_qref", "merged_conv_ref",
+    "merged_ffn_qref", "merged_ffn_ref", "rglru_scan_ref", "rmsnorm_ref",
 ]

@@ -115,9 +115,16 @@ def choose_tiles_grouped(h: int, w: int, cin_g: int, cout_g: int,
     return _round8(tile_ho, ho), wo
 
 
-def _kernel(x_hbm, w_ref, b_ref, o_ref, xs, sem, *, kh: int, kw: int,
+def _kernel(x_hbm, w_ref, b_ref, *rest, kh: int, kw: int,
             stride: int, n_th: int, n_tw: int, n_tc: int, cin_g: int,
-            cout_g: int, activation: str | None):
+            cout_g: int, activation: str | None, quant: bool = False):
+    # Quantized path: one extra (1, bc) fp32 per-output-channel weight
+    # scale operand, applied after the fp32 accumulation (see
+    # merged_conv._kernel — same contract, group-blocked layout).
+    if quant:
+        ws_ref, o_ref, xs, sem = rest
+    else:
+        ws_ref, (o_ref, xs, sem) = None, rest
     tho, two, bc = o_ref.shape
     bgroups = bc // cout_g
     bcin = bgroups * cin_g
@@ -178,6 +185,8 @@ def _kernel(x_hbm, w_ref, b_ref, o_ref, xs, sem, *, kh: int, kw: int,
                         for g in range(bgroups)]
                 acc = acc + (blks[0] if bgroups == 1
                              else jnp.concatenate(blks, axis=1))
+    if ws_ref is not None:
+        acc = acc * ws_ref[0].astype(jnp.float32)        # dequant epilogue
     acc = acc + b_ref[0].astype(jnp.float32)             # (bc,) broadcast
     # fused epilogue: σ_j on the fp32 accumulator, shared with the oracle
     acc = apply_activation(acc, activation)
@@ -187,7 +196,8 @@ def _kernel(x_hbm, w_ref, b_ref, o_ref, xs, sem, *, kh: int, kw: int,
 def depthwise_conv(x, w, b=None, *, stride: int = 1, groups: int,
                    bgroups: int = 1, tile_ho: int | None = None,
                    tile_wo: int | None = None,
-                   activation: str | None = None, interpret: bool = False):
+                   activation: str | None = None, w_scale=None,
+                   out_dtype=None, interpret: bool = False):
     """x: (N, H, W, Cin); w: (kh, kw, Cin/g, Cout) → (N, Ho, Wo, Cout).
 
     VALID grouped convolution with ``feature_group_count = groups`` and
@@ -197,7 +207,10 @@ def depthwise_conv(x, w, b=None, *, stride: int = 1, groups: int,
     group axis is zero-padded up to a ``bgroups`` multiple here, and the
     padded output channels sliced back off.  ``tile_ho``/``tile_wo``
     default to :func:`choose_tiles_grouped`; ``b``/``activation`` fuse
-    the segment epilogue.
+    the segment epilogue.  ``w_scale``/``out_dtype``: quantized-weight
+    path, same contract as :func:`repro.kernels.merged_conv.merged_conv`
+    (``w_scale`` is per-output-channel ``(Cout,)``, re-laid group-blocked
+    alongside the bias).
     """
     n, h, wdt, cin = x.shape
     kh, kw, cin_g, cout = w.shape
@@ -233,9 +246,14 @@ def depthwise_conv(x, w, b=None, *, stride: int = 1, groups: int,
     if pad_g:
         w4 = jnp.pad(w4, ((0, 0), (0, 0), (0, pad_g), (0, 0), (0, 0)))
     w4 = w4.reshape(kh, kw, g_p, cin_g * cout_g)
-    bias = jnp.zeros((groups, cout_g), x.dtype) if b is None \
+    bias = jnp.zeros((groups, cout_g), jnp.float32) if b is None \
         else b.reshape(groups, cout_g)
     bias = jnp.pad(bias, ((0, pad_g), (0, 0))).reshape(1, g_p * cout_g)
+    if w_scale is not None:
+        # per-cout scale follows the bias's group-blocked layout
+        scale_b = w_scale.astype(jnp.float32).reshape(groups, cout_g)
+        scale_b = jnp.pad(scale_b,
+                          ((0, pad_g), (0, 0))).reshape(1, g_p * cout_g)
 
     # Phase-major relayout (shared contract with merged_conv; free at
     # stride 1, one XLA transpose otherwise).
@@ -246,26 +264,32 @@ def depthwise_conv(x, w, b=None, *, stride: int = 1, groups: int,
     bcin = bgroups * cin_g
     bc = bgroups * cout_g
     n_tc = g_p // bgroups
+    odt = jnp.dtype(out_dtype) if out_dtype is not None else x.dtype
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.ANY),     # HBM phase-major image
+        pl.BlockSpec((kh, kw, bgroups, cin_g * cout_g),
+                     lambda bb, th, tw, tc: (0, 0, tc, 0)),
+        pl.BlockSpec((1, bc), lambda bb, th, tw, tc: (0, tc)),
+    ]
+    operands = [x, w4, bias]
+    if w_scale is not None:
+        in_specs.append(pl.BlockSpec((1, bc),
+                                     lambda bb, th, tw, tc: (0, tc)))
+        operands.append(scale_b)
     grid = (n, n_th, n_tw, n_tc)
     out = pl.pallas_call(
         functools.partial(_kernel, kh=kh, kw=kw, stride=s, n_th=n_th,
                           n_tw=n_tw, n_tc=n_tc, cin_g=cin_g, cout_g=cout_g,
-                          activation=activation),
+                          activation=activation, quant=w_scale is not None),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.ANY),     # HBM phase-major image
-            pl.BlockSpec((kh, kw, bgroups, cin_g * cout_g),
-                         lambda bb, th, tw, tc: (0, 0, tc, 0)),
-            pl.BlockSpec((1, bc), lambda bb, th, tw, tc: (0, tc)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((None, tile_ho, tile_wo, bc),
                                lambda bb, th, tw, tc: (bb, th, tw, tc)),
-        out_shape=jax.ShapeDtypeStruct((n, ho_p, wo_p, g_p * cout_g),
-                                       x.dtype),
+        out_shape=jax.ShapeDtypeStruct((n, ho_p, wo_p, g_p * cout_g), odt),
         scratch_shapes=[pltpu.VMEM((2, ph, pw, shp, swp, bcin), x.dtype),
                         pltpu.SemaphoreType.DMA((2,))],
         interpret=interpret,
-    )(x, w4, bias)
+    )(*operands)
     if (ho_p, wo_p) != (ho, wo) or g_p != groups:
         out = out[:, :ho, :wo, :cout]
     return out

@@ -221,8 +221,18 @@ def input_traffic_model(h: int, w: int, cin: int, kh: int, kw: int,
             "tile_ho": tile_ho, "tile_wo": tile_wo}
 
 
-def _kernel(x_hbm, w_ref, b_ref, o_ref, xs, sem, *, kh: int, kw: int,
-            stride: int, n_th: int, n_tw: int, activation: str | None):
+def _kernel(x_hbm, w_ref, b_ref, *rest, kh: int, kw: int,
+            stride: int, n_th: int, n_tw: int, activation: str | None,
+            quant: bool = False):
+    # Quantized path: one extra (1, bCout) fp32 scale operand (per-output-
+    # channel symmetric weight scale; w8a8 folds the activation scale in
+    # at the ops layer).  Applied AFTER the fp32 accumulation — exactly
+    # equal to dequantizing each weight before the dot, since the scale
+    # is constant over the (kh, kw, Cin) contraction.
+    if quant:
+        ws_ref, o_ref, xs, sem = rest
+    else:
+        ws_ref, (o_ref, xs, sem) = None, rest
     tho, two, bcout = o_ref.shape
     cin = w_ref.shape[2]
     s = stride
@@ -263,6 +273,8 @@ def _kernel(x_hbm, w_ref, b_ref, o_ref, xs, sem, *, kh: int, kw: int,
                 xsel.reshape(tho * two, cin).astype(jnp.float32),
                 w_ref[u, v].astype(jnp.float32),
                 preferred_element_type=jnp.float32)
+    if ws_ref is not None:
+        acc = acc * ws_ref[0].astype(jnp.float32)        # dequant epilogue
     acc = acc + b_ref[0].astype(jnp.float32)             # (bCout,) broadcast
     # fused epilogue: σ_j on the fp32 accumulator, shared with the oracle
     acc = apply_activation(acc, activation)
@@ -271,7 +283,8 @@ def _kernel(x_hbm, w_ref, b_ref, o_ref, xs, sem, *, kh: int, kw: int,
 
 def merged_conv(x, w, b=None, *, stride: int = 1, bcout: int = 128,
                 tile_ho: int | None = None, tile_wo: int | None = None,
-                activation: str | None = None, interpret: bool = False):
+                activation: str | None = None, w_scale=None,
+                out_dtype=None, interpret: bool = False):
     """x: (N, H, W, Cin); w: (kh, kw, Cin, Cout) → (N, Ho, Wo, Cout).
 
     VALID convolution with ``stride`` on both spatial axes.  ``tile_ho`` /
@@ -279,6 +292,13 @@ def merged_conv(x, w, b=None, *, stride: int = 1, bcout: int = 128,
     ``b``/``activation`` fuse the segment epilogue.  The input is laid
     out phase-major (see module docstring) before the kernel; at stride 1
     that is a free reshape.
+
+    Quantized weights: pass ``w`` narrow (int8 / fp8) with ``w_scale`` —
+    a per-output-channel ``(Cout,)`` fp32 scale applied in the fp32
+    epilogue.  w8a8 additionally passes ``x`` int8 with the activation
+    scale pre-folded into ``w_scale``; set ``out_dtype`` to keep the
+    output fp.  The narrow blocks ride the same zero-copy DMA pipeline
+    (VMEM scratch takes its dtype from ``x``).
     """
     n, h, wdt, cin = x.shape
     kh, kw, _, cout = w.shape
@@ -307,24 +327,34 @@ def merged_conv(x, w, b=None, *, stride: int = 1, bcout: int = 128,
     ws = max(n_tw * tile_wo + dw, -(-wdt // s))
     x = phase_major(x, kh, kw, s, hs, ws)
 
-    bias = jnp.zeros((1, cout), x.dtype) if b is None else b.reshape(1, cout)
+    bias = (jnp.zeros((1, cout), jnp.float32) if b is None
+            else b.reshape(1, cout))
+    odt = jnp.dtype(out_dtype) if out_dtype is not None else x.dtype
+
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.ANY),     # HBM phase-major image
+        pl.BlockSpec((kh, kw, cin, bcout),
+                     lambda bb, th, tw, co: (0, 0, 0, co)),
+        pl.BlockSpec((1, bcout), lambda bb, th, tw, co: (0, co)),
+    ]
+    operands = [x, w, bias]
+    if w_scale is not None:
+        in_specs.append(pl.BlockSpec((1, bcout),
+                                     lambda bb, th, tw, co: (0, co)))
+        operands.append(w_scale.reshape(1, cout).astype(jnp.float32))
 
     grid = (n, n_th, n_tw, cout // bcout)
     out = pl.pallas_call(
         functools.partial(_kernel, kh=kh, kw=kw, stride=s, n_th=n_th,
-                          n_tw=n_tw, activation=activation),
+                          n_tw=n_tw, activation=activation,
+                          quant=w_scale is not None),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.ANY),     # HBM phase-major image
-            pl.BlockSpec((kh, kw, cin, bcout),
-                         lambda bb, th, tw, co: (0, 0, 0, co)),
-            pl.BlockSpec((1, bcout), lambda bb, th, tw, co: (0, co)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((None, tile_ho, tile_wo, bcout),
                                lambda bb, th, tw, co: (bb, th, tw, co)),
-        out_shape=jax.ShapeDtypeStruct((n, ho_p, wo_p, cout), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((n, ho_p, wo_p, cout), odt),
         scratch_shapes=[pltpu.VMEM((2, ph, pw, shp, swp, cin), x.dtype),
                         pltpu.SemaphoreType.DMA((2,))],
         interpret=interpret,
-    )(x, w, bias)
+    )(*operands)
     return out[:, :ho, :wo] if (ho_p, wo_p) != (ho, wo) else out

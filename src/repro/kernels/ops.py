@@ -17,7 +17,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from . import ref
+from . import quant, ref
 from .depthwise_conv import choose_group_block, depthwise_conv
 from .flash_attention import flash_attention
 from .merged_conv import merged_conv
@@ -47,9 +47,20 @@ def _pad_to(x, axis, mult):
 
 # ---------------------------------------------------------------------------
 
-def merged_ffn_op(x, u, v, *, interpret: bool = False):
-    """(..., D) rank-r residual; pads tokens/rank/features to 128."""
+def merged_ffn_op(x, u, v, *, u_scale=None, v_scale=None,
+                  act_quant: str = "none", interpret: bool = False):
+    """(..., D) rank-r residual; pads tokens/rank/features to 128.
+
+    Quantized factors: ``u_scale`` (per-rank-column) + ``v_scale``
+    (per-output-column) mark ``u``/``v`` as narrow (int8/fp8);
+    ``act_quant="w8a8"`` additionally quantizes the activation panel
+    per-tensor at the call site (its scale folds into ``u_scale`` —
+    the kernel sees ONE scale pair; the residual stays exact fp).
+    """
     if not (_use_pallas() or interpret):
+        if u_scale is not None:
+            return ref.merged_ffn_qref(x, u, v, u_scale, v_scale,
+                                       act_quant=act_quant)
         return ref.merged_ffn_ref(x, u, v)
     shape = x.shape
     d = shape[-1]
@@ -57,13 +68,21 @@ def merged_ffn_op(x, u, v, *, interpret: bool = False):
     x2 = x.reshape(n, d)
     x2, _ = _pad_to(x2, 0, 128)       # token rows
     x2, pd = _pad_to(x2, 1, 128)      # feature dim
-    u_p, _ = _pad_to(u, 1, 128)       # rank
+    u_p, pr = _pad_to(u, 1, 128)      # rank
     v_p, _ = _pad_to(v, 0, 128)
     if pd:
         u_p = jnp.pad(u_p, ((0, pd), (0, 0)))
         v_p = jnp.pad(v_p, ((0, 0), (0, pd)))
     bm = 256 if x2.shape[0] % 256 == 0 else 128
-    y = merged_ffn(x2, u_p, v_p, bm=bm, interpret=interpret)
+    us = vs = xq = None
+    if u_scale is not None:
+        us = jnp.pad(u_scale.astype(jnp.float32), (0, pr))
+        vs = jnp.pad(v_scale.astype(jnp.float32), (0, pd))
+        if act_quant == "w8a8":
+            xq, x_scale = quant.quantize_int8(x2)
+            us = us * x_scale
+    y = merged_ffn(x2, u_p, v_p, bm=bm, u_scale=us, v_scale=vs, xq=xq,
+                   interpret=interpret)
     return y[:n, :d].reshape(shape)
 
 
@@ -100,7 +119,8 @@ def channel_tile(cout: int, requested: int | None) -> int:
 def merged_conv_op(x, w, b=None, *, stride: int = 1,
                    activation: str | None = None,
                    tile_ho: int | None = None, tile_wo: int | None = None,
-                   bcout: int | None = None, interpret: bool = False):
+                   bcout: int | None = None, w_scale=None,
+                   act_quant: str = "none", interpret: bool = False):
     """Merged-segment conv (VALID, stride ``s``) with fused bias + boundary
     activation.
 
@@ -108,17 +128,33 @@ def merged_conv_op(x, w, b=None, *, stride: int = 1,
     tile) default to the kernel's 2-D VMEM planner; pass explicit values to
     sweep.  Strided segments run through the Pallas kernel too — no
     jnp-oracle fallback on TPU.
+
+    Quantized weights: ``w_scale`` (per-output-channel, ``(Cout,)``)
+    marks ``w`` as narrow (int8/fp8); ``act_quant="w8a8"`` quantizes the
+    activation per-tensor here, folding its scale into ``w_scale`` so
+    the kernel applies ONE scale in the fp32 epilogue.
     """
     if not (_use_pallas() or interpret):
-        y = ref.merged_conv_ref(x, w, b, stride=stride)
+        if w_scale is not None:
+            y = ref.merged_conv_qref(x, w, b, w_scale, stride=stride,
+                                     act_quant=act_quant)
+        else:
+            y = ref.merged_conv_ref(x, w, b, stride=stride)
         return ref.apply_activation(y, activation)
     cout = w.shape[-1]
     bc = channel_tile(cout, bcout)
     w_p, pc = _pad_to(w, 3, bc)
     b_p = None if b is None else jnp.pad(b, (0, pc))
+    ws = out_dtype = None
+    if w_scale is not None:
+        ws = jnp.pad(w_scale.astype(jnp.float32), (0, pc))
+        out_dtype = x.dtype
+        if act_quant == "w8a8":
+            x, x_scale = quant.quantize_int8(x)
+            ws = ws * x_scale
     y = merged_conv(x, w_p, b_p, stride=stride, bcout=bc, tile_ho=tile_ho,
-                    tile_wo=tile_wo, activation=activation,
-                    interpret=interpret)
+                    tile_wo=tile_wo, activation=activation, w_scale=ws,
+                    out_dtype=out_dtype, interpret=interpret)
     if pc:
         y = y[..., :cout]
     return y
@@ -128,7 +164,8 @@ def depthwise_conv_op(x, w, b=None, *, stride: int = 1,
                       groups: int | None = None,
                       activation: str | None = None,
                       tile_ho: int | None = None, tile_wo: int | None = None,
-                      bgroups: int | None = None, interpret: bool = False):
+                      bgroups: int | None = None, w_scale=None,
+                      act_quant: str = "none", interpret: bool = False):
     """Grouped/depthwise merged-segment conv (VALID, stride ``s``) with
     fused bias + boundary activation.
 
@@ -139,19 +176,32 @@ def depthwise_conv_op(x, w, b=None, *, stride: int = 1,
     to ``choose_group_block`` — a lane-friendly channel tile for
     depthwise shapes, one group per step for ``Cin_g > 1``.  The group
     axis is padded up inside the kernel wrapper; no fallback to lax on
-    the TPU path.
+    the TPU path.  ``w_scale``/``act_quant``: quantized path, same
+    contract as :func:`merged_conv_op`.
     """
     if groups is None:
         groups = x.shape[-1] // w.shape[2]
     if not (_use_pallas() or interpret):
-        y = ref.depthwise_conv_ref(x, w, b, stride=stride, groups=groups)
+        if w_scale is not None:
+            y = ref.depthwise_conv_qref(x, w, b, w_scale, stride=stride,
+                                        groups=groups, act_quant=act_quant)
+        else:
+            y = ref.depthwise_conv_ref(x, w, b, stride=stride, groups=groups)
         return ref.apply_activation(y, activation)
     cin_g = w.shape[2]
     cout_g = w.shape[3] // groups
     bg = choose_group_block(groups, cin_g, cout_g, bgroups)
+    ws = out_dtype = None
+    if w_scale is not None:
+        ws = w_scale.astype(jnp.float32)
+        out_dtype = x.dtype
+        if act_quant == "w8a8":
+            x, x_scale = quant.quantize_int8(x)
+            ws = ws * x_scale
     return depthwise_conv(x, w, b, stride=stride, groups=groups, bgroups=bg,
                           tile_ho=tile_ho, tile_wo=tile_wo,
-                          activation=activation, interpret=interpret)
+                          activation=activation, w_scale=ws,
+                          out_dtype=out_dtype, interpret=interpret)
 
 
 def rglru_scan_op(a, b, *, interpret: bool = False):

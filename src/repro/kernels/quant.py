@@ -1,0 +1,155 @@
+"""Shared symmetric quantization primitives — ONE rounding semantics.
+
+Every quantized path in the repo routes through this module: the int8
+gradient compression in :mod:`repro.optim.compress` (per-tensor) and the
+quantized merged Pallas kernels (per-channel weight scales).  Keeping a
+single clip-round definition means the DP planner's error budgets, the
+kernels' dequant epilogues, and the gradient all-reduce all agree on what
+"int8" means bit for bit.
+
+Scale layout contract
+---------------------
+Symmetric, zero-point-free: ``x ≈ q.astype(f32) * scale`` with
+``scale = max(amax, 1e-30) / 127`` (int8) so ``q ∈ [-127, 127]``.
+
+* per-tensor (``axis=None``): ``scale`` is a scalar — identical semantics
+  to the original ``optim/compress.py`` helpers.
+* per-channel (``axis=i``): ``scale`` has shape ``(x.shape[i],)`` — one
+  scale per slice along axis ``i``.  Merged-conv weights quantize along
+  the output-channel axis (HWIO axis 3), low-rank factors along their
+  contraction-output axis, so the kernel can apply the scale AFTER the
+  fp32 accumulation (mathematically identical to dequantizing each weight
+  before the dot, since the scale is constant over the contraction).
+
+fp8 (``float8_e4m3fn``) uses the same machinery with ``amax / 448`` (the
+e4m3 finite max); rounding is the hardware cast's round-to-nearest-even.
+This is scaffolding for real-TPU fp8 MXU dots — numerics are exercised in
+interpret mode today, see ROADMAP's real-TPU item.
+
+Error budgets
+-------------
+``error_budget(w, mode, fan_in, x_absmax)`` returns a rigorous worst-case
+absolute output-error bound for a dot/conv reduction of ``fan_in`` terms:
+each int8 weight carries ≤ ``scale/2`` absolute error, so the output
+error is ≤ ``fan_in · x_absmax · max(w_scale)/2``; w8a8 adds the
+activation-quantization term ``fan_in · (w_absmax·x_scale/2 +
+x_scale·w_scale/4)``.  fp8-e4m3 has ≤ 2^-4 relative error per weight
+(3 mantissa bits ⇒ half-ulp 2^-4), giving ``fan_in · x_absmax ·
+w_absmax · 2^-4``.  Certification tests assert |quantized − fp32 ref| is
+within these budgets — they are bounds, not tolerances tuned to pass.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT8_QMAX = 127.0
+FP8_E4M3_MAX = 448.0
+
+#: Quantization modes understood by the planner/kernels.  "none" = fp.
+MODES = ("none", "int8", "w8a8", "fp8")
+
+#: Modes where the WEIGHT operand is narrow (all non-fp modes).
+WEIGHT_NARROW = ("int8", "w8a8", "fp8")
+
+#: Modes where the ACTIVATION operand is narrow too.
+ACT_NARROW = ("w8a8",)
+
+
+def _amax(x, axis):
+    a = jnp.abs(x).astype(jnp.float32)
+    if axis is None:
+        return jnp.max(a)
+    reduce_axes = tuple(i for i in range(x.ndim) if i != axis % x.ndim)
+    return jnp.max(a, axis=reduce_axes)
+
+
+def quantize_int8(x, axis: int | None = None):
+    """Symmetric int8: returns ``(q, scale)``.
+
+    ``axis=None`` → per-tensor scalar scale (bit-identical to the
+    historical ``optim.compress.quantize_int8``); ``axis=i`` → one scale
+    per slice along axis ``i`` (shape ``(x.shape[i],)``).
+    """
+    amax = _amax(x, axis)
+    scale = jnp.maximum(amax, 1e-30) / INT8_QMAX
+    if axis is None:
+        div = scale
+    else:
+        shape = [1] * x.ndim
+        shape[axis % x.ndim] = -1
+        div = scale.reshape(shape)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / div), -INT8_QMAX,
+                 INT8_QMAX)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q, scale, axis: int | None = None):
+    y = q.astype(jnp.float32)
+    if axis is None:
+        return y * scale
+    shape = [1] * q.ndim
+    shape[axis % q.ndim] = -1
+    return y * scale.reshape(shape)
+
+
+def quantize_fp8(x, axis: int | None = None):
+    """Symmetric float8_e4m3fn: returns ``(q, scale)`` — same scale layout
+    as int8; the cast's round-to-nearest-even does the rounding."""
+    amax = _amax(x, axis)
+    scale = jnp.maximum(amax, 1e-30) / FP8_E4M3_MAX
+    if axis is None:
+        div = scale
+    else:
+        shape = [1] * x.ndim
+        shape[axis % x.ndim] = -1
+        div = scale.reshape(shape)
+    q = (x.astype(jnp.float32) / div).astype(jnp.float8_e4m3fn)
+    return q, scale
+
+
+def dequantize(q, scale, axis: int | None = None):
+    """Dequantize any narrow dtype (int8 or fp8): ``q.astype(f32)*scale``."""
+    return dequantize_int8(q, scale, axis)
+
+
+def quantize_weight(w, mode: str, axis: int):
+    """Quantize a weight tensor per-channel along ``axis`` for ``mode``.
+
+    Returns ``(q, scale)``; mode "none" returns ``(w, None)``.
+    """
+    if mode == "none":
+        return w, None
+    if mode in ("int8", "w8a8"):
+        return quantize_int8(w, axis=axis)
+    if mode == "fp8":
+        return quantize_fp8(w, axis=axis)
+    raise ValueError(f"unknown quantization mode {mode!r}")
+
+
+def error_budget(mode: str, *, fan_in: int, x_absmax: float,
+                 w_absmax: float) -> float:
+    """Worst-case |quantized − fp32| bound for one output of a reduction
+    over ``fan_in`` multiply-accumulates (see module docstring)."""
+    if mode == "none":
+        return 0.0
+    w_scale = max(w_absmax, 1e-30) / INT8_QMAX
+    if mode == "int8":
+        return fan_in * x_absmax * (w_scale / 2.0)
+    if mode == "w8a8":
+        x_scale = max(x_absmax, 1e-30) / INT8_QMAX
+        return fan_in * (x_absmax * w_scale / 2.0
+                         + w_absmax * x_scale / 2.0
+                         + x_scale * w_scale / 4.0)
+    if mode == "fp8":
+        return fan_in * x_absmax * w_absmax * 2.0 ** -4
+    raise ValueError(f"unknown quantization mode {mode!r}")
+
+
+def weight_bytes(mode: str) -> int | None:
+    """Weight byte width for the cost model (None = host default fp)."""
+    return 1 if mode in WEIGHT_NARROW else None
+
+
+def act_bytes(mode: str) -> int | None:
+    """Activation byte width for the cost model (None = host default fp)."""
+    return 1 if mode in ACT_NARROW else None

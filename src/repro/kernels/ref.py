@@ -55,6 +55,52 @@ def depthwise_conv_ref(x, w, b=None, stride: int = 1,
     return y.astype(x.dtype)
 
 
+def merged_ffn_qref(x, uq, vq, u_scale, v_scale, *, act_quant="none"):
+    """Dequantizing oracle for the quantized ``merged_ffn`` path.
+
+    ``uq``/``vq`` are narrow (int8/fp8) with per-channel scales over the
+    rank / output-embed axes.  w8a8 fake-quantizes the activation for the
+    two dots only — the residual add stays the exact fp ``x`` (matching
+    the kernel, which keeps the fp panel for the epilogue).  Certification
+    against the *fp32* oracle :func:`merged_ffn_ref` is bounded by
+    :func:`repro.kernels.quant.error_budget`.
+    """
+    from . import quant
+    u = quant.dequantize(uq, u_scale, axis=1)
+    v = quant.dequantize(vq, v_scale, axis=1)
+    xd = x
+    if act_quant == "w8a8":
+        xq, xs = quant.quantize_int8(x)
+        xd = quant.dequantize(xq, xs)
+    h = jnp.dot(xd.astype(jnp.float32), u)
+    y = jnp.dot(h, v)
+    return (x.astype(jnp.float32) + y).astype(x.dtype)
+
+
+def merged_conv_qref(x, wq, b, w_scale, *, stride: int = 1,
+                     act_quant: str = "none"):
+    """Dequantizing oracle for the quantized ``merged_conv`` path
+    (``wq`` narrow HWIO, ``w_scale`` per-output-channel, axis 3)."""
+    from . import quant
+    w = quant.dequantize(wq, w_scale, axis=3)
+    if act_quant == "w8a8":
+        xq, xs = quant.quantize_int8(x)
+        x = quant.dequantize(xq, xs)
+    return merged_conv_ref(x, w, b, stride=stride)
+
+
+def depthwise_conv_qref(x, wq, b, w_scale, *, stride: int = 1,
+                        groups: int | None = None,
+                        act_quant: str = "none"):
+    """Dequantizing oracle for the quantized grouped/depthwise path."""
+    from . import quant
+    w = quant.dequantize(wq, w_scale, axis=3)
+    if act_quant == "w8a8":
+        xq, xs = quant.quantize_int8(x)
+        x = quant.dequantize(xq, xs)
+    return depthwise_conv_ref(x, w, b, stride=stride, groups=groups)
+
+
 def apply_activation(y, name=None):
     """Boundary activation σ_j of a merged segment (oracle for the fused
     kernel epilogue); fp32 math regardless of storage dtype."""

@@ -52,6 +52,12 @@ class CNNHost:
     batch: int = 8                    # batch size for cost/latency accounting
     dtype_bytes: int = 2
     max_span: int | None = None
+    # Split weight- vs. activation-byte widths for the cost model; None
+    # defaults to ``dtype_bytes`` (the historical single-scalar behavior,
+    # bit-identical).  Per-segment quantization overrides both via
+    # ``segment_cost(seg, quant=...)``.
+    w_bytes: int | None = None
+    act_bytes: int | None = None
 
     def __post_init__(self):
         self._descs = self.net.layer_descs(self.params)
@@ -75,12 +81,23 @@ class CNNHost:
         return 1
 
     # -- latency ----------------------------------------------------------------
-    def segment_cost(self, seg: Segment) -> CostBreakdown:
-        """Analytic cost of the merged segment at its true input shape."""
+    def segment_cost(self, seg: Segment, quant: str = "none"
+                     ) -> CostBreakdown | None:
+        """Analytic cost of the merged segment at its true input shape.
+
+        ``quant`` (or ``seg.quant``) prices the segment at narrow byte
+        widths — int8/fp8 weights, int8 activations under 'w8a8'.
+        Returns ``None`` when a quantized cost is requested for a
+        segment the quantized kernels cannot execute (non-conv barrier
+        units), which is how the table builder skips ineligible spans.
+        """
+        q = quant if quant != "none" else seg.quant
         h, w, cin = self._shapes[seg.i]
         _, _, cout = self._shapes[seg.j]
         s_last = self.net.spec(seg.j)
         if s_last.kind != "conv":
+            if q != "none":
+                return None
             if s_last.kind == "attn":
                 n = h * w
                 c = cin
@@ -93,8 +110,11 @@ class CNNHost:
         kept = set(seg.kept)
         dw = all(self.net.spec(l).depthwise for l in seg.layers
                  if l in kept and self.net.spec(l).kind == "conv") and kept
+        wb = kernels.quant.weight_bytes(q) or self.w_bytes
+        ab = kernels.quant.act_bytes(q) or self.act_bytes
         return conv2d_cost(h, w, cin, cout, K, stride=S, depthwise=bool(dw),
-                           dtype_bytes=self.dtype_bytes, batch=self.batch)
+                           dtype_bytes=self.dtype_bytes, batch=self.batch,
+                           w_bytes=wb, act_bytes=ab)
 
     def probe_signature(self, seg: Segment):
         """Shape signature bucketing this segment's latency probe.
@@ -110,7 +130,8 @@ class CNNHost:
         s_last = self.net.spec(seg.j)
         if s_last.kind != "conv":
             return (s_last.kind, h, w, cin, s_last.k, s_last.stride,
-                    self.batch, self.dtype_bytes)
+                    self.batch, self.dtype_bytes, self.w_bytes,
+                    self.act_bytes)
         K, S = cnn.segment_geometry(self.net, seg)
         kept = set(seg.kept)
         dw = all(self.net.spec(l).depthwise for l in seg.layers
@@ -120,7 +141,7 @@ class CNNHost:
         # grouped kernel), never alongside dense segments of equal shape.
         groups = cin if dw else 1
         return ("conv", h, w, cin, cout, K, S, bool(dw), groups, self.batch,
-                self.dtype_bytes)
+                self.dtype_bytes, self.w_bytes, self.act_bytes)
 
     def segment_probe(self, seg: Segment, params=None) -> ProbeCallable:
         """Jitted merged-segment forward as (fn, args) — AOT-lowerable."""
@@ -225,8 +246,11 @@ class CNNHost:
         probe workload, parameter bytes, and machine identity (wall-clock
         latencies do not transfer across hosts)."""
         h = hashlib.sha256()
+        # w_bytes/act_bytes ride in the digest so tables priced under the
+        # old single-scalar cost model are never silently reused.
         h.update(repr((self.net, self.batch, self.dtype_bytes,
-                       self.max_span)).encode())
+                       self.max_span, self.w_bytes,
+                       self.act_bytes)).encode())
         h.update(table_cache.pytree_digest(self.params).encode())
         h.update(table_cache.machine_token().encode())
         return h.hexdigest()
@@ -275,6 +299,11 @@ class CNNHost:
             if seg.j >= net.L:
                 act = "none"          # σ_L is the identity (paper §2)
             uparams = {"w": w, "b": b}
+            if seg.quant != "none":
+                # Narrow weights + symmetric per-output-channel scale; the
+                # scale is data and serializes like any param (artifact v3).
+                wq, wsc = kernels.quant.quantize_weight(w, seg.quant, axis=3)
+                uparams = {"w": wq, "b": b, "w_scale": wsc}
             add_from = None
             proj_stride = 1
             if seg.j in add_end:
@@ -293,7 +322,7 @@ class CNNHost:
                 stride=stride, depthwise=dw, act=act, gn_groups=gn_groups,
                 proj_stride=proj_stride, add_from=add_from,
                 concat_from=cat_end.get(seg.j), save_at=save_at,
-                params=uparams))
+                quant=seg.quant, params=uparams))
         gparams = {}
         if net.head == "classifier":
             gparams["head"] = dict(params["head"])

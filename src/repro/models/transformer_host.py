@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.core import table_cache
 from repro.core import merge as M
+from repro.kernels import quant as Q
 from repro.core.latency import CostBreakdown, matmul_cost, rank_ffn_cost
 from repro.core.plan import CompressionPlan, LayerDesc, Segment
 from repro.core.probe_engine import ProbeCallable
@@ -40,11 +41,19 @@ HEAD_KIND = "head"
 
 @dataclasses.dataclass
 class CostEnv:
-    """Workload/hardware context for the analytic latency table."""
+    """Workload/hardware context for the analytic latency table.
+
+    ``w_bytes``/``act_bytes`` split the merged rank maps' weight vs.
+    activation byte widths (None → ``dtype_bytes``, bit-identical to the
+    historical single scalar); per-segment quantization overrides both
+    via ``segment_cost(seg, quant=...)``.
+    """
     batch: int = 8
     seq: int = 2048
     chips: int = 1
     dtype_bytes: int = 2
+    w_bytes: int | None = None
+    act_bytes: int | None = None
 
 
 @dataclasses.dataclass
@@ -134,17 +143,30 @@ class TransformerHost:
                     + CostBreakdown(12.0 * tokens * d, 4 * tokens * d * by))
         raise ValueError(kind)
 
-    def segment_cost(self, seg: Segment) -> CostBreakdown:
+    def segment_cost(self, seg: Segment, quant: str = "none"
+                     ) -> CostBreakdown | None:
+        """Analytic segment cost; ``quant`` prices the merged rank maps
+        at narrow byte widths.  Returns ``None`` when a quantized cost is
+        requested for a segment with no merged low-rank part (the kept
+        boundary sublayer is never quantized) — the table builder's
+        ineligibility signal."""
         cfg, env = self.cfg, self.env
+        q = quant if quant != "none" else seg.quant
         tokens = env.batch * env.seq / max(env.chips, 1)
         boundary_kind = self.kinds[seg.j - 1]
         cost = self._block_cost(boundary_kind)
         interior_kept = [l for l in seg.kept if l != seg.j]
+        rank = 0
         if interior_kept or seg.j - seg.i > 1:
             rank = min(seg.k, cfg.d_model)
-            if rank > 0:
-                cost = cost + rank_ffn_cost(tokens, cfg.d_model, rank,
-                                            env.dtype_bytes)
+        if rank > 0:
+            wb = Q.weight_bytes(q) or env.w_bytes
+            ab = Q.act_bytes(q) or env.act_bytes
+            cost = cost + rank_ffn_cost(tokens, cfg.d_model, rank,
+                                        env.dtype_bytes, w_bytes=wb,
+                                        act_bytes=ab)
+        elif q != "none":
+            return None
         return cost
 
     def probe_signature(self, seg: Segment):
@@ -160,7 +182,7 @@ class TransformerHost:
             if (interior_kept or seg.j - seg.i > 1) else 0
         return ("tseg", self.kinds[seg.j - 1], rank, self.env.batch,
                 self.env.seq, self.env.chips, self.env.dtype_bytes,
-                self.cfg.d_model)
+                self.env.w_bytes, self.env.act_bytes, self.cfg.d_model)
 
     def segment_probe(self, seg: Segment, params=None) -> ProbeCallable:
         """Jitted merged-segment forward as (fn, args) — AOT-lowerable."""
@@ -217,7 +239,14 @@ class TransformerHost:
             if merged:
                 u, v = M.merge_linear_residual_chain(factors)
                 u, v = M.truncate_rank(u, v, self.cfg.d_model)
-                units.append(ir.LowRankUnit(params={"u": u, "v": v}))
+                qp = {"u": u, "v": v}
+                if seg.quant != "none":
+                    # Deployed form only: narrow u/v + per-output-channel
+                    # scales (the replaced/fine-tune path stays fp).
+                    uq, us = Q.quantize_weight(u, seg.quant, axis=1)
+                    vq, vs = Q.quantize_weight(v, seg.quant, axis=1)
+                    qp = {"u": uq, "v": vq, "u_scale": us, "v_scale": vs}
+                units.append(ir.LowRankUnit(quant=seg.quant, params=qp))
             else:
                 for u, v in factors:                   # unmerged rank maps
                     units.append(ir.LowRankUnit(params={"u": u, "v": v}))

@@ -16,17 +16,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-
-def quantize_int8(x):
-    """Symmetric per-tensor int8: returns (q, scale)."""
-    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
-    scale = jnp.maximum(amax, 1e-30) / 127.0
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
-    return q.astype(jnp.int8), scale
-
-
-def dequantize_int8(q, scale):
-    return q.astype(jnp.float32) * scale
+# THE symmetric rounding semantics — shared with the quantized merged
+# kernels so gradients and weights quantize identically.
+from repro.kernels.quant import dequantize_int8, quantize_int8  # noqa: F401
 
 
 def compressed_psum(tree, axis_name: str):

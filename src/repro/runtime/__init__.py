@@ -42,6 +42,24 @@ constraints.  No rules — or a one-device mesh — runs the identical code
 fully replicated; v1 artifacts load with empty annotations and behave
 the same way.
 
+**The precision contract.**  Format-v3 artifacts carry per-unit
+quantization *as data*: a unit's static record names its mode
+(``quant`` ∈ {'none', 'int8', 'w8a8', 'fp8'}), its weights are stored
+narrow (``int8`` / ``float8_e4m3fn``), and the symmetric
+per-output-channel scales ride as ordinary param arrays (``w_scale`` on
+conv units, ``u_scale``/``v_scale`` on low-rank units) with their own
+logical-axes annotations — so the fingerprint, sharding, and quarantine
+contracts cover them with zero new machinery.  The executor reads the
+mode per unit and routes through the same kernel entry points with
+``w_scale=…`` (dequant fused into the fp32 accumulator epilogue) and,
+for 'w8a8', ``act_quant=…``; fp units in the same graph are untouched,
+so mixed-precision graphs need no special casing anywhere downstream
+(serving, fine-tuning consumers, benchmarks all just work).  v1/v2
+artifacts have no ``quant`` statics and load with the dataclass default
+'none' — exactly the fp semantics they were saved with.  The planner
+side of the contract (how the DP chooses which units quantize) lives in
+:func:`repro.core.tables.quant_sibling_entries`.
+
 **Failure semantics.**  The runtime is the deployment surface, so its
 failure contract is explicit:
 

@@ -28,6 +28,15 @@ resolves those names through a :class:`ShardingRules` and ``device_put``s
 every array STRAIGHT to its ``NamedSharding`` — no replicated host-side
 copy is materialized on the devices first.  v1 artifacts (no
 annotations) still load, as fully replicated graphs.
+
+Format v3 adds per-unit precision: a quantized unit's static record
+carries ``quant`` ('int8' | 'w8a8' | 'fp8'), its weights are stored
+narrow, and its symmetric per-output-channel scales travel as ordinary
+param arrays (``w_scale`` / ``u_scale`` / ``v_scale``) with their own
+logical-axes annotations — no side-channel blobs, so the fingerprint,
+sharding, and crash contracts cover them unchanged.  v1/v2 artifacts
+(no ``quant`` field) still load: the unit dataclass default 'none' is
+exactly the fp semantics they were saved with.
 """
 from __future__ import annotations
 
@@ -43,8 +52,8 @@ import numpy as np
 
 from . import ir
 
-FORMAT_VERSION = 2
-SUPPORTED_FORMATS = (1, 2)
+FORMAT_VERSION = 3
+SUPPORTED_FORMATS = (1, 2, 3)
 
 
 class ArtifactError(RuntimeError):

@@ -95,10 +95,14 @@ def _execute_cnn(graph: ir.UnitGraph, x):
             hi = K - 1 - lo
             if K > 1:
                 x = jnp.pad(x, ((0, 0), (lo, hi), (lo, hi), (0, 0)))
+            ws = u.params.get("w_scale")
+            aq = u.quant if (ws is not None and u.quant == "w8a8") else "none"
             if u.depthwise:
-                x = kernels.depthwise_conv_op(x, w, b, stride=u.stride)
+                x = kernels.depthwise_conv_op(x, w, b, stride=u.stride,
+                                              w_scale=ws, act_quant=aq)
             else:
-                x = kernels.merged_conv_op(x, w, b, stride=u.stride)
+                x = kernels.merged_conv_op(x, w, b, stride=u.stride,
+                                           w_scale=ws, act_quant=aq)
             if u.add_from is not None:
                 base = saved[u.add_from]
                 if "proj" in u.params:
@@ -144,8 +148,11 @@ def _execute_cnn(graph: ir.UnitGraph, x):
 def _apply_unit(cfg, u, x, positions, mrope):
     """One prefill/probe unit: lowrank residual or kept sublayer."""
     if u.kind == "lowrank":
+        us, vs = u.params.get("u_scale"), u.params.get("v_scale")
+        aq = u.quant if (us is not None and u.quant == "w8a8") else "none"
         return logical_constraint(
-            kernels.merged_ffn_op(x, u.params["u"], u.params["v"]),
+            kernels.merged_ffn_op(x, u.params["u"], u.params["v"],
+                                  u_scale=us, v_scale=vs, act_quant=aq),
             ("batch", "seq", "act_embed"))
     if u.kind != "sublayer":
         raise ValueError(f"unit kind {u.kind!r} in transformer graph")

@@ -46,6 +46,12 @@ class ConvUnit:
     ``gn`` {gamma, beta} (group-norm moved to the segment end, paper
     Appendix A) and optional ``proj`` {w, b} (1×1 projection shortcut of
     a skip-add ending at this unit's boundary).
+
+    ``quant`` != 'none' marks a low-precision unit (artifact format v3):
+    ``w`` is stored narrow (int8 / fp8) and ``params`` carries the
+    symmetric per-output-channel ``w_scale`` (Cout,) — scales are DATA,
+    serialized alongside the weights like every other array.  'w8a8'
+    additionally quantizes the activation per-tensor at run time.
     """
 
     kind = "conv"
@@ -57,6 +63,7 @@ class ConvUnit:
     add_from: int | None = None     # skip-add source boundary id
     concat_from: int | None = None  # U-Net concat source boundary id
     save_at: int | None = None      # boundary id to save the output under
+    quant: str = "none"             # 'none' | 'int8' | 'w8a8' | 'fp8'
     axes: dict = dataclasses.field(default_factory=dict)
     params: dict = dataclasses.field(default_factory=dict)
 
@@ -105,10 +112,14 @@ class LowRankUnit:
     """Rank-``r`` residual map ``x + (x·U)·V`` — a merged FFN segment.
 
     ``params``: ``u`` (D,r), ``v`` (r,D).  Runs through the Pallas
-    ``merged_ffn`` kernel on TPU.
+    ``merged_ffn`` kernel on TPU.  ``quant`` != 'none' (artifact v3):
+    ``u``/``v`` stored narrow plus per-output-channel ``u_scale`` (r,)
+    and ``v_scale`` (D,); 'w8a8' also quantizes the activation feeding
+    the two dots (the residual always adds the exact fp input).
     """
 
     kind = "lowrank"
+    quant: str = "none"             # 'none' | 'int8' | 'w8a8' | 'fp8'
     axes: dict = dataclasses.field(default_factory=dict)
     params: dict = dataclasses.field(default_factory=dict)
 
@@ -280,6 +291,8 @@ _CONV_W_DW = [None, None, None, "conv_out"]        # (K,K,1,C) depthwise
 def _conv_axes(u) -> dict:
     ax = {"w": list(_CONV_W_DW if u.depthwise else _CONV_W),
           "b": ["conv_out"]}
+    if "w_scale" in u.params:
+        ax["w_scale"] = ["conv_out"]
     if "gn" in u.params:
         ax["gn/gamma"] = ["conv_out"]
         ax["gn/beta"] = ["conv_out"]
@@ -329,7 +342,12 @@ def default_unit_axes(unit, cfg=None) -> dict:
         return {k: ["conv_in", "conv_out"] for k in ("wq", "wk", "wv", "wo")
                 if k in unit.params}
     if unit.kind == "lowrank":
-        return {"u": ["embed", "rank"], "v": ["rank", "embed"]}
+        ax = {"u": ["embed", "rank"], "v": ["rank", "embed"]}
+        if "u_scale" in unit.params:
+            ax["u_scale"] = ["rank"]
+        if "v_scale" in unit.params:
+            ax["v_scale"] = ["embed"]
+        return ax
     if unit.kind == "sublayer":
         return _sublayer_axes(unit, cfg)
     return {}

@@ -1,0 +1,307 @@
+"""DP-planned per-unit quantization: planner → artifact → serve pipeline.
+
+The precision axis must be *free* when unused and *chosen by the DP* when
+it pays:
+
+* fp-only regression — with ``quantize`` off the widened machinery is a
+  strict no-op: tables, DP visit order, plans, and saved artifacts are
+  bit-identical to a run that has never heard of quantization;
+* under a tightened budget on weight-traffic-bound configs the DP picks
+  quantized siblings (int8 units on the CNN, w8a8 rank-FFN units on the
+  transformer) and the lowered units carry narrow weights + per-channel
+  scales;
+* artifact format v3 round-trips quantized graphs bit-exactly (including
+  a fresh-process reload), v2 artifacts (no ``quant`` statics) still
+  load, and the table cache round-trips widened tuple keys.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import zipfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import runtime
+from repro.configs import get_config
+from repro.core import compress
+from repro.core.tables import build_tables, with_quant_siblings
+from repro.models import cnn, cnn_host, zoo
+from repro.models import transformer as T
+from repro.models.transformer_host import CostEnv, TransformerHost
+from repro.runtime import artifact
+from repro.testing.subproc import subprocess_env
+
+_SUBPROC_ENV = subprocess_env()
+
+
+def _cnn_setup(width=48, batch=1):
+    """Weight-traffic-bound CNN: wide channels on a small feature map,
+    batch=1 — HBM weight bytes dominate, so int8 siblings beat fp."""
+    net = zoo.tiny_resnet(num_classes=4, in_hw=8, width=width,
+                          blocks=(2, 2))
+    params = cnn.init_params(net, jax.random.PRNGKey(0))
+    host = cnn_host.CNNHost(net, params, batch=batch)
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (batch, net.in_hw, net.in_hw, net.in_ch))
+    return net, params, host, x
+
+
+def _tf_setup():
+    """Weight-bound decode-shaped transformer env (batch=1, short seq)."""
+    cfg = dataclasses.replace(get_config("smollm-135m").reduced(),
+                              d_model=256, d_ff=1024, head_dim=64,
+                              num_heads=4, num_kv_heads=4)
+    params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+    host = TransformerHost(cfg, params, env=CostEnv(batch=1, seq=32))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (1, 32), 0,
+                                          cfg.vocab_size),
+             "positions": jnp.broadcast_to(jnp.arange(32)[None], (1, 32))}
+    return cfg, params, host, batch
+
+
+# ---------------------------------------------------------------------------
+# fp-only bit-identity
+# ---------------------------------------------------------------------------
+
+def test_fp_only_plans_bit_identical():
+    """quantize=None / 'none' leave the planner untouched — same plan
+    object graph, segment for segment, as never passing the knob."""
+    _, _, host, _ = _cnn_setup(width=8)
+    base = compress(host, budget_ratio=0.6, P=100)
+    off = compress(host, budget_ratio=0.6, P=100, quantize=None)
+    off2 = compress(host, budget_ratio=0.6, P=100, quantize="none")
+    assert base.plan == off.plan == off2.plan
+    assert all(s.quant == "none" for s in base.plan.segments)
+    assert base.compressed_latency == off.compressed_latency
+
+
+def test_fp_only_tables_unwidened():
+    _, _, host, _ = _cnn_setup(width=8)
+    tables = build_tables(host)
+    assert all(isinstance(k, int) for row in tables.entries.values()
+               for k in row)
+    same = with_quant_siblings(tables, host, None)
+    assert same is tables                               # literal no-op
+
+
+def test_quant_widening_adds_tuple_siblings_only():
+    """Widening never perturbs the fp rows: every original (key → entry)
+    survives bit-identical; new keys are (k, mode) tuples."""
+    _, _, host, _ = _cnn_setup(width=48)
+    tables = build_tables(host)
+    wide = with_quant_siblings(tables, host, "int8")
+    for span, row in tables.entries.items():
+        for k, entry in row.items():
+            assert wide.entries[span][k] == entry
+    tup = [k for row in wide.entries.values() for k in row
+           if isinstance(k, tuple)]
+    assert tup and all(k[1] == "int8" for k in tup)
+    for span, row in wide.entries.items():
+        for k in row:
+            if isinstance(k, tuple):
+                imp_q, lat_q, kept_q = row[k]
+                imp_f, lat_f, kept_f = row[k[0]]
+                assert lat_q < lat_f          # sibling only kept when faster
+                assert imp_q < imp_f          # strictly less important
+                assert kept_q == kept_f       # same merge structure
+
+
+def test_invalid_quantize_mode_rejected():
+    _, _, host, _ = _cnn_setup(width=8)
+    with pytest.raises(ValueError):
+        compress(host, budget_ratio=0.6, P=100, quantize="int4")
+    with pytest.raises(ValueError):
+        compress(host, budget_ratio=0.6, P=100, method="layeronly",
+                 quantize="int8")
+
+
+# ---------------------------------------------------------------------------
+# DP selects quantized units when weight traffic dominates
+# ---------------------------------------------------------------------------
+
+def test_dp_selects_int8_units_cnn():
+    _, params, host, x = _cnn_setup()
+    res = compress(host, budget_ratio=0.45, P=200, quantize="int8")
+    assert res is not None
+    qsegs = [s for s in res.plan.segments if s.quant != "none"]
+    assert qsegs and all(s.quant == "int8" for s in qsegs)
+    graph = host.lower_plan(res.plan, params)
+    qunits = [u for u in graph.units
+              if getattr(u, "quant", "none") == "int8"]
+    assert len(qunits) == len(qsegs)
+    for u in qunits:
+        w, ws = u.params["w"], u.params["w_scale"]
+        assert w.dtype == jnp.int8
+        assert ws.shape == (w.shape[3],)                # per-Cout scales
+    # the mixed-precision graph executes, close to the all-fp lowering
+    y = runtime.execute(graph, x)
+    fp_plan = dataclasses.replace(
+        res.plan, segments=tuple(dataclasses.replace(s, quant="none")
+                                 for s in res.plan.segments))
+    y_fp = runtime.execute(host.lower_plan(fp_plan, params), x)
+    scale = float(jnp.abs(y_fp).max()) + 1e-9
+    assert float(jnp.abs(y - y_fp).max()) / scale < 0.25
+
+
+def test_dp_selects_w8a8_units_transformer():
+    cfg, params, host, batch = _tf_setup()
+    res = compress(host, budget_ratio=0.45, P=200, quantize="w8a8")
+    assert res is not None
+    qsegs = [s for s in res.plan.segments if s.quant != "none"]
+    assert qsegs and all(s.quant == "w8a8" for s in qsegs)
+    graph = host.lower_plan(res.plan, params)
+    qunits = [u for u in graph.units
+              if getattr(u, "quant", "none") == "w8a8"]
+    assert qunits
+    for u in qunits:
+        assert u.params["u"].dtype == jnp.int8
+        assert u.params["v"].dtype == jnp.int8
+        assert u.params["u_scale"].shape == (u.params["u"].shape[1],)
+        assert u.params["v_scale"].shape == (u.params["v"].shape[1],)
+    y = runtime.execute(graph, batch)
+    assert np.all(np.isfinite(np.asarray(y)))
+
+
+def test_quantized_objective_dominates_fp_same_budget():
+    """Widening only ADDS candidates, so the DP objective (importance
+    under the budget) can only improve; the chosen plan still fits."""
+    _, _, host, _ = _cnn_setup()
+    fp = compress(host, budget_ratio=0.45, P=200)
+    q = compress(host, budget_ratio=0.45, P=200, quantize="int8")
+    assert q.plan.objective >= fp.plan.objective
+    # Algorithm 1 floors each segment latency to a T0/P bucket, so true
+    # latency may exceed T0 by at most one bucket per chosen segment.
+    slack = q.plan.budget / 200 * len(q.plan.segments)
+    assert q.compressed_latency <= q.plan.budget + slack
+
+
+# ---------------------------------------------------------------------------
+# Artifact v3 round trip + back compat
+# ---------------------------------------------------------------------------
+
+def _save_quant_artifact(tmp_path):
+    _, params, host, x = _cnn_setup()
+    res = compress(host, budget_ratio=0.45, P=200, quantize="int8")
+    path = os.path.join(tmp_path, "q.npz")
+    fp = res.save(path)
+    return res, host, x, path, fp
+
+
+def test_artifact_v3_roundtrip_quantized(tmp_path):
+    res, host, x, path, fp = _save_quant_artifact(str(tmp_path))
+    assert res.plan.segments and any(s.quant == "int8"
+                                     for s in res.plan.segments)
+    art = runtime.load(path)
+    assert art.fingerprint == fp
+    assert art.plan == res.plan                       # incl. quant fields
+    assert art.meta["quantized_units"] == sum(
+        1 for s in res.plan.segments if s.quant != "none")
+    with np.load(path, allow_pickle=False) as z:
+        spec = json.loads(z["__spec__"].item())
+    assert spec["format"] == 3
+    assert any(u.get("quant") == "int8" for u in spec["units"])
+    # weights stored narrow, scales annotated for sharding
+    for st, unit in zip(spec["units"], art.graph.units):
+        if st.get("quant") == "int8":
+            assert unit.params["w"].dtype == jnp.int8
+            assert st["axes"]["w_scale"] == ["conv_out"]
+    y_live = runtime.execute(host.lower_plan(res.plan), x)
+    np.testing.assert_array_equal(np.asarray(y_live),
+                                  np.asarray(art.apply(x)))
+
+
+def test_artifact_v3_fresh_process_reload(tmp_path):
+    """Quantized artifact certification: a FRESH interpreter reloads the
+    v3 file and reproduces this process's outputs bit-exactly."""
+    res, host, x, path, fp = _save_quant_artifact(str(tmp_path))
+    y_live = np.asarray(runtime.execute(host.lower_plan(res.plan), x))
+    xpath = os.path.join(str(tmp_path), "x.npy")
+    np.save(xpath, np.asarray(x))
+    code = (
+        "import sys, numpy as np\n"
+        "from repro import runtime\n"
+        "art = runtime.load(sys.argv[1])\n"
+        "q = [u for u in art.graph.units\n"
+        "     if getattr(u, 'quant', 'none') != 'none']\n"
+        "assert q, 'quantized units lost on reload'\n"
+        "y = np.asarray(art.apply(np.load(sys.argv[2])))\n"
+        "np.save(sys.argv[3], y)\n"
+        "print('FP=' + art.fingerprint)\n"
+    )
+    ypath = os.path.join(str(tmp_path), "y.npy")
+    r = subprocess.run([sys.executable, "-c", code, path, xpath, ypath],
+                       capture_output=True, text=True, env=_SUBPROC_ENV,
+                       cwd="/root/repo", timeout=300)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert f"FP={fp}" in r.stdout                     # artifact bytes exact
+    # outputs: equivalent, not bit-exact — the fresh process may pick a
+    # different XLA thread/fusion layout (same contract as the fp
+    # fresh-process test in test_runtime.py)
+    np.testing.assert_allclose(np.load(ypath), y_live, rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_artifact_v2_backcompat_loads(tmp_path):
+    """A v2 artifact (pre-quantization: no ``quant`` statics) must load
+    with every unit defaulting to fp semantics."""
+    net, params, host, x = _cnn_setup(width=8)
+    res = compress(host, budget_ratio=0.6, P=100)
+    path = os.path.join(str(tmp_path), "fp.npz")
+    res.save(path)
+    with np.load(path, allow_pickle=False) as z:
+        data = {k: z[k] for k in z.files}
+    spec = json.loads(data.pop("__spec__").item())
+    data.pop("__fingerprint__")
+    spec["format"] = 2
+    for u in spec["units"]:
+        u.pop("quant", None)
+    v2 = os.path.join(str(tmp_path), "v2.npz")
+    np.savez(v2, __spec__=np.array(json.dumps(spec)),
+             __fingerprint__=np.array(artifact._digest(spec, data)), **data)
+    art = runtime.load(v2)
+    assert all(getattr(u, "quant", "none") == "none"
+               for u in art.graph.units)
+    y_live = runtime.execute(host.lower_plan(res.plan), x)
+    np.testing.assert_array_equal(np.asarray(y_live),
+                                  np.asarray(art.apply(x)))
+
+
+def test_fp_artifact_fingerprint_unchanged_by_quant_knob(tmp_path):
+    """quantize='none' must not leak into the artifact bytes."""
+    _, _, host, _ = _cnn_setup(width=8)
+    a = compress(host, budget_ratio=0.6, P=100)
+    b = compress(host, budget_ratio=0.6, P=100, quantize="none")
+    fpa = a.save(os.path.join(str(tmp_path), "a.npz"))
+    fpb = b.save(os.path.join(str(tmp_path), "b.npz"))
+    assert fpa == fpb
+
+
+# ---------------------------------------------------------------------------
+# Table cache + widened keys
+# ---------------------------------------------------------------------------
+
+def test_table_cache_fp_rows_shared_with_quant_run(tmp_path):
+    """The cache stores fp-only rows: a quantize run derives siblings
+    from the SAME cached table a plain run published (no double probe),
+    and the cache file itself never contains tuple keys."""
+    _, _, host, _ = _cnn_setup(width=8)
+    cache = str(tmp_path)
+    t_fp = build_tables(host, cache_dir=cache)
+    t_q = build_tables(host, cache_dir=cache, quantize="int8")
+    assert t_q.entries != t_fp.entries                 # widened in memory
+    for span, row in t_fp.entries.items():
+        for k, e in row.items():
+            assert t_q.entries[span][k] == e
+    files = [f for f in os.listdir(cache) if f.endswith(".json")]
+    assert files
+    for f in files:
+        text = open(os.path.join(cache, f)).read()
+        assert "int8" not in text                       # fp-only on disk
+    # cold process over the same cache, quantized: identical widened table
+    t_q2 = build_tables(host, cache_dir=cache, quantize="int8")
+    assert t_q2.entries == t_q.entries
